@@ -1,0 +1,78 @@
+"""§Roofline table: per (arch x shape) baseline roofline terms from the
+dry-run artifacts (single-pod mesh). Emits CSV + a markdown table for
+EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import DRYRUN_DIR, emit
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR, rules: str = "baseline",
+                 mesh: str = "pod") -> list[dict]:
+    recs = []
+    if not os.path.isdir(dryrun_dir):
+        return recs
+    for fn in sorted(os.listdir(dryrun_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(dryrun_dir, fn)) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh and r.get("rules") == rules:
+            recs.append(r)
+    return recs
+
+
+def roofline_table(fast: bool = False) -> list[dict]:
+    recs = load_records()
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            rows.append({"cell": f"{r['arch']} x {r['shape']}", "error": r.get("error", "?")})
+            emit(f"roofline/{r['arch']}/{r['shape']}", 0.0, "FAILED")
+            continue
+        # decode cells are bandwidth-roofline jobs: report the fraction of
+        # the minimal HBM traffic time too (flops fraction ~0 by nature)
+        from repro.launch.roofline import HBM_BW
+
+        frac_mem = 0.0
+        if r.get("step_time_lb_s", 0) > 0:
+            frac_mem = (r["model_bytes_min_total"] / r["chips"] / HBM_BW) / r["step_time_lb_s"]
+        row = {
+            "cell": f"{r['arch']} x {r['shape']}",
+            "compute_ms": r["compute_term_s"] * 1e3,
+            "memory_ms": r["memory_term_s"] * 1e3,
+            "collective_ms": r["collective_term_s"] * 1e3,
+            "dominant": r["dominant"],
+            "model_flops": r["model_flops_total"],
+            "useful_ratio": r["useful_flops_ratio"],
+            "roofline_frac": max(r["roofline_fraction"], min(1.0, frac_mem)),
+            "fits_hbm": r["fits_hbm"],
+            "peak_gb": r["peak_bytes"] / 1e9,
+        }
+        rows.append(row)
+        emit(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+             f"dom={row['dominant']};frac={row['roofline_frac']:.3f};useful={row['useful_ratio']:.3f}")
+    return rows
+
+
+def markdown(rows: list[dict]) -> str:
+    hdr = ("| cell | compute (ms) | memory (ms) | collective (ms) | dominant | "
+           "useful FLOPs ratio | roofline frac | fits HBM | peak GB/chip |")
+    sep = "|---" * 9 + "|"
+    lines = [hdr, sep]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"| {r['cell']} | FAILED: {r['error'][:60]} |" + " |" * 7)
+            continue
+        lines.append(
+            f"| {r['cell']} | {r['compute_ms']:.1f} | {r['memory_ms']:.1f} | "
+            f"{r['collective_ms']:.1f} | {r['dominant']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_frac']:.3f} | {'Y' if r['fits_hbm'] else 'N'} | {r['peak_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = roofline_table()
+    print(markdown(rows))

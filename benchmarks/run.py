@@ -1,0 +1,62 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--fast`` shrinks RL training
+budgets (CI); the full run reproduces EXPERIMENTS.md numbers.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only fig8,roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="", help="comma-separated subset")
+    ap.add_argument("--out", default="experiments/bench")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
+    os.makedirs(args.out, exist_ok=True)
+
+    from benchmarks import figures
+    from benchmarks.roofline_table import markdown, roofline_table
+
+    results: dict = {}
+    t0 = time.time()
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    if want("fig3"):
+        results["fig3"] = {f"{m}@{s}": v for (m, s), v in figures.fig3_share_sweep(args.fast).items()}
+    if want("fig4"):
+        results["fig4"] = {f"{m}@{l}": v for (m, l), v in figures.fig4_bw_partitioning(args.fast).items()}
+    if want("fig5"):
+        results["fig5"] = figures.fig5_variants(args.fast)
+    scheds = queues = None
+    if want("fig8"):
+        results["fig8"], scheds, queues = figures.fig8_throughput(args.fast)
+    if want("fig11") or want("fig12") or want("fig8"):
+        results["fig11_12"] = figures.fig11_12_slowdown_fairness(scheds, queues, args.fast)
+    if want("fig9"):
+        results["fig9"] = figures.fig9_window(args.fast)
+    if want("fig10"):
+        results["fig10"] = figures.fig10_cmax(args.fast)
+    if want("roofline"):
+        rows = roofline_table(args.fast)
+        results["roofline"] = rows
+        with open(os.path.join(args.out, "roofline.md"), "w") as f:
+            f.write(markdown(rows))
+
+    with open(os.path.join(args.out, "results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"total,{(time.time()-t0)*1e6:.0f},done")
+
+
+if __name__ == "__main__":
+    main()

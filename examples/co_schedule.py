@@ -1,0 +1,89 @@
+"""The paper's full pipeline, end to end:
+
+  1. build the job zoo (profiles from dry-run artifacts when present),
+  2. offline-train the dueling double-DQN co-scheduler,
+  3. schedule queues online and compare against the baselines,
+  4. EXECUTE one co-scheduled group for real with the Level-2 fused-program
+     executor (tiny models, CPU) and show the measured vs predicted gain.
+
+    PYTHONPATH=src python examples/co_schedule.py [--episodes 1500]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    EnvConfig, POLICIES, RLScheduler, TrainConfig, make_zoo, paper_queues,
+    summarize, train_agent, validate_schedule,
+)
+from repro.core.agent import DQNConfig
+from repro.data import DataPipeline
+from repro.models.model import init_params, loss_fn
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from repro.runtime.multitenant import FusedCoRunner, Tenant
+
+
+def make_tiny_train_tenant(name: str, arch: str, share: float, seq=32, batch=4) -> Tenant:
+    cfg = get_smoke_config(arch)
+    pipe = DataPipeline(cfg.vocab_size, seq, batch, seed=hash(name) % 2**31)
+    params = init_params(cfg, jax.random.PRNGKey(hash(name) % 2**31))
+    opt = init_opt_state(params)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=5, decay_steps=1000)
+    batch0 = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+
+    def step(state):
+        params, opt = state
+        (_, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch0, cfg)
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        return (params, opt)
+
+    return Tenant(name, step, (params, opt), share)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=1500)
+    ap.add_argument("--window", type=int, default=8)
+    args = ap.parse_args()
+
+    # 1-2: offline profiling + RL training
+    zoo = make_zoo()
+    print(f"zoo: {len(zoo)} jobs")
+    t0 = time.time()
+    env_cfg = EnvConfig(window=args.window, c_max=4)
+    agent, hist = train_agent(zoo, env_cfg,
+                              TrainConfig(episodes=args.episodes,
+                                          eval_every=args.episodes // 4,
+                                          dqn=DQNConfig(eps_decay_steps=args.episodes * 6)),
+                              verbose=True)
+    print(f"offline training: {time.time()-t0:.0f}s")
+
+    # 3: online scheduling vs baselines
+    sched = RLScheduler(agent, env_cfg)
+    queues = paper_queues(zoo, window=args.window, per_kind=1)
+    print(f"{'queue':6s} {'time_sharing':>12s} {'mps_only':>9s} {'rl':>7s} {'oracle':>7s}")
+    for qname, queue in queues.items():
+        s_rl = sched.schedule(queue)
+        validate_schedule(queue, s_rl, env_cfg.c_max)
+        row = [summarize(POLICIES["time_sharing"](queue, 4))["throughput"],
+               summarize(POLICIES["mps_only"](queue, 4))["throughput"],
+               summarize(s_rl)["throughput"],
+               summarize(POLICIES["oracle"](queue, 4))["throughput"]]
+        print(f"{qname:6s} {row[0]:12.3f} {row[1]:9.3f} {row[2]:7.3f} {row[3]:7.3f}")
+
+    # 4: execute one co-scheduled pair with the fused Level-2 executor
+    print("\nexecuting a co-scheduled pair (fused program, shares 0.75/0.25):")
+    tenants = [make_tiny_train_tenant("llama-train", "llama3-8b", 0.75),
+               make_tiny_train_tenant("xlstm-train", "xlstm-125m", 0.25)]
+    runner = FusedCoRunner(tenants, {"llama-train": 24, "xlstm-train": 8})
+    finish = runner.run()
+    print({k: f"{v:.2f}s" for k, v in finish.items()})
+    print("co_schedule OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end training driver: real config system, data pipeline, AdamW,
+fault-tolerant checkpointing, auto-resume.
+
+Default runs a CPU-sized model; ``--model-scale 100m`` trains a ~100M-param
+decoder (the deliverable-scale run — give it a beefier machine or TPU):
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --model-scale 100m
+    PYTHONPATH=src python examples/train_lm.py --steps 60            # CPU demo
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, get_smoke_config
+from repro import checkpoint as ck
+from repro.data import DataPipeline
+from repro.models.model import count_params_analytic, init_params, loss_fn
+from repro.optim import OptConfig, adamw_update, init_opt_state
+
+
+def model_100m() -> ModelConfig:
+    return ModelConfig(
+        name="repro-100m", family="dense", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=4, d_head=64, d_ff=2048, vocab_size=32_000,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--model-scale", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="experiments/train_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = model_100m() if args.model_scale == "100m" else \
+        get_smoke_config("llama3-8b").replace(n_layers=4, d_model=128, d_ff=512,
+                                              n_heads=4, n_kv_heads=2, d_head=32,
+                                              vocab_size=2048)
+    n = count_params_analytic(cfg)
+    print(f"model {cfg.name}: {n/1e6:.1f}M params, seq={args.seq}, batch={args.batch}")
+
+    pipe = DataPipeline(cfg.vocab_size, args.seq, args.batch, seed=0, mode="markov")
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=20, decay_steps=max(100, args.steps))
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    start = 0
+    try:  # auto-resume from the last committed checkpoint
+        tree, extra, start = ck.restore(args.ckpt_dir)
+        params, opt = tree["params"], tree["opt"]
+        params = jax.tree.map(jnp.asarray, params)
+        opt = jax.tree.map(jnp.asarray, opt)
+        opt["count"] = jnp.asarray(opt["count"], jnp.int32)
+        print(f"resumed from step {start}")
+    except FileNotFoundError:
+        pass
+
+    @jax.jit
+    def step(params, opt, batch):
+        (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, cfg)
+        params, opt, om = adamw_update(params, grads, opt, opt_cfg)
+        metrics.update(om)
+        return params, opt, metrics
+
+    t0 = time.time()
+    tokens_done = 0
+    for s in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(s).items()}
+        params, opt, metrics = step(params, opt, batch)
+        tokens_done += args.seq * args.batch
+        if s % 10 == 0 or s == args.steps - 1:
+            dt = time.time() - t0
+            print(f"step {s:4d} loss={float(metrics['loss']):.3f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"lr={float(metrics['lr']):.2e} tok/s={tokens_done/max(dt,1e-9):,.0f}")
+        if (s + 1) % args.ckpt_every == 0:
+            ck.save(args.ckpt_dir, s + 1, {"params": params, "opt": opt})
+            print(f"  checkpoint @ {s+1}")
+    print("train_lm done")
+
+
+if __name__ == "__main__":
+    main()

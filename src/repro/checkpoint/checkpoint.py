@@ -1,0 +1,112 @@
+"""Fault-tolerant checkpointing: atomic, manifest-based, auto-resume.
+
+Layout:
+    <dir>/step_<N>/manifest.json     tree structure + metadata
+    <dir>/step_<N>/arrays.npz        flattened leaves keyed by path
+    <dir>/step_<N>.done              commit marker (atomic rename target)
+
+Restart protocol: `latest_step` only considers committed checkpoints (with a
+.done marker), so a node failure mid-save can never be resumed from a torn
+checkpoint — the previous committed step is used instead.  All pytrees here
+are nested dicts of arrays/scalars (the framework's convention), so the tree
+is reconstructible from path strings without pickling.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def visit(path, leaf):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def _unflatten(flat: dict[str, np.ndarray]) -> dict:
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split(_SEP)
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return root
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None, keep_last: int = 3) -> str:
+    """Atomically write checkpoint for `step`; prunes old committed steps."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    manifest = {
+        "step": int(step),
+        "extra": extra or {},
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)} for k, v in flat.items()},
+    }
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=f".tmp_step_{step}_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        final = os.path.join(ckpt_dir, f"step_{step}")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        # commit marker written last -> crash-safe
+        with open(final + ".done", "w") as f:
+            f.write(str(step))
+    finally:
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp, ignore_errors=True)
+    _prune(ckpt_dir, keep_last)
+    return os.path.join(ckpt_dir, f"step_{step}")
+
+
+def _prune(ckpt_dir: str, keep_last: int) -> None:
+    steps = committed_steps(ckpt_dir)
+    for s in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+        marker = os.path.join(ckpt_dir, f"step_{s}.done")
+        if os.path.exists(marker):
+            os.remove(marker)
+
+
+def committed_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and name.endswith(".done"):
+            steps.append(int(name[len("step_"):-len(".done")]))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int | None = None) -> tuple[dict, dict, int]:
+    """Returns (tree, extra, step). Raises FileNotFoundError if none committed."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat), manifest["extra"], int(manifest["step"])

@@ -1,0 +1,113 @@
+"""DQN agent: ε-greedy masked action selection + jit'd double-DQN updates."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.network import dqn_apply, init_dqn, masked_argmax
+from repro.core.replay import ReplayBuffer
+
+
+@dataclass(frozen=True)
+class DQNConfig:
+    gamma: float = 0.99
+    lr: float = 5e-4
+    batch_size: int = 128
+    buffer_size: int = 100_000
+    target_sync: int = 500           # updates between target-network syncs
+    eps_start: float = 1.0
+    eps_end: float = 0.01
+    eps_decay_steps: int = 15_000    # env steps for linear ε decay
+    huber_delta: float = 1.0
+    reward_scale: float = 0.01       # rewards are O(100); keep TD targets O(1)
+
+
+def _adam_init(params):
+    z = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _dqn_update(params, target_params, opt, batch, cfg: DQNConfig):
+    def loss_fn(p):
+        q = dqn_apply(p, batch["s"])                                   # (B, A)
+        q_sa = jnp.take_along_axis(q, batch["a"][:, None], axis=1)[:, 0]
+        # double DQN: online argmax (masked), target value
+        q2_online = dqn_apply(p, batch["s2"])
+        a2 = masked_argmax(q2_online, batch["mask2"])
+        q2_target = dqn_apply(target_params, batch["s2"])
+        v2 = jnp.take_along_axis(q2_target, a2[:, None], axis=1)[:, 0]
+        v2 = jnp.where(batch["mask2"].any(axis=1), v2, 0.0)           # terminal: no actions
+        y = batch["r"] * cfg.reward_scale + cfg.gamma * (1.0 - batch["done"]) * v2
+        y = jax.lax.stop_gradient(y)
+        err = q_sa - y
+        huber = jnp.where(jnp.abs(err) <= cfg.huber_delta,
+                          0.5 * err ** 2,
+                          cfg.huber_delta * (jnp.abs(err) - 0.5 * cfg.huber_delta))
+        return jnp.mean(huber)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    t = opt["t"] + 1
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    tf = t.astype(jnp.float32)
+    lr_t = cfg.lr * jnp.sqrt(1 - b2 ** tf) / (1 - b1 ** tf)
+    params = jax.tree.map(lambda p, m_, v_: p - lr_t * m_ / (jnp.sqrt(v_) + eps),
+                          params, m, v)
+    return params, {"m": m, "v": v, "t": t}, loss
+
+
+@jax.jit
+def _q_values(params, s):
+    return dqn_apply(params, s)
+
+
+class DQNAgent:
+    def __init__(self, state_dim: int, n_actions: int, cfg: DQNConfig | None = None,
+                 seed: int = 0):
+        self.cfg = cfg or DQNConfig()
+        key = jax.random.PRNGKey(seed)
+        self.params = init_dqn(key, state_dim, n_actions)
+        self.target_params = jax.tree.map(jnp.copy, self.params)
+        self.opt = _adam_init(self.params)
+        self.replay = ReplayBuffer(self.cfg.buffer_size, state_dim, n_actions, seed)
+        self.rng = np.random.default_rng(seed)
+        self.env_steps = 0
+        self.updates = 0
+
+    # ----------------------------------------------------------------- act
+    @property
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(1.0, self.env_steps / max(1, c.eps_decay_steps))
+        return c.eps_start + (c.eps_end - c.eps_start) * frac
+
+    def act(self, state: np.ndarray, mask: np.ndarray, greedy: bool = False) -> int:
+        self.env_steps += 1
+        if not greedy and self.rng.random() < self.epsilon:
+            return int(self.rng.choice(np.flatnonzero(mask)))
+        q = np.array(_q_values(self.params, state[None]))[0]
+        q[~mask] = -np.inf
+        return int(np.argmax(q))
+
+    # -------------------------------------------------------------- learn
+    def observe(self, s, a, r, s2, done, mask2) -> None:
+        self.replay.push(s, a, r, s2, done, mask2)
+
+    def update(self) -> float | None:
+        if len(self.replay) < self.cfg.batch_size:
+            return None
+        batch = self.replay.sample(self.cfg.batch_size)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        self.params, self.opt, loss = _dqn_update(
+            self.params, self.target_params, self.opt, batch, self.cfg)
+        self.updates += 1
+        if self.updates % self.cfg.target_sync == 0:
+            self.target_params = jax.tree.map(jnp.copy, self.params)
+        return float(loss)

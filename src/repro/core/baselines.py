@@ -1,0 +1,134 @@
+"""Compared scheduling policies (paper §V-A4) + the exhaustive oracle.
+
+All baselines are *exhaustive* over their policy class, as in the paper:
+optimal group selection via exact set-partition DP over the window, optimal
+partition + slot assignment per group by enumeration.
+
+    time_sharing        — singletons, full pod each (the 1.0 baseline)
+    mig_only  (C = 2)   — private-slice pairs only [refs 6, 34]
+    mps_only  (C<=Cmax) — full-pod fractional shares only
+    mig_mps_default     — one fixed hierarchical layout + equal (default) MPS
+    oracle              — full table (the upper bound for the RL agent)
+"""
+from __future__ import annotations
+
+import itertools
+from functools import lru_cache
+
+from repro.core.partition import Partition, enumerate_partitions, partitions_by_arity
+from repro.core.perfmodel import corun_time, solo_run_time
+from repro.core.problem import Schedule
+from repro.core.profiles import JobProfile
+
+
+def _best_for_group(group: list[JobProfile], partitions: list[Partition],
+                    max_perms: int = 8) -> tuple[float, Partition | None, tuple[int, ...]]:
+    """Min CoRunTime over partitions of matching arity x slot orderings."""
+    best_t, best_p, best_perm = float("inf"), None, tuple(range(len(group)))
+    for p in partitions:
+        if p.arity != len(group):
+            continue
+        for perm in itertools.islice(itertools.permutations(range(len(group))), max_perms):
+            t = corun_time([group[i] for i in perm], p)
+            if t < best_t:
+                best_t, best_p, best_perm = t, p, perm
+    return best_t, best_p, best_perm
+
+
+def exhaustive_schedule(queue: list[JobProfile], c_max: int,
+                        partitions: list[Partition],
+                        enforce_solo_constraint: bool = True) -> Schedule:
+    """Exact set-partition DP (O(3^W) submask enumeration) over group costs."""
+    W = len(queue)
+    solo_part = [p for p in enumerate_partitions(1) if p.arity == 1][0]
+
+    @lru_cache(maxsize=None)
+    def group_cost(mask: int) -> tuple[float, object]:
+        group = [queue[i] for i in range(W) if mask >> i & 1]
+        best_t, best_p, best_perm = _best_for_group(group, partitions)
+        if len(group) == 1 and best_p is None:
+            return solo_run_time(group), (solo_part, (0,))
+        if best_p is None:
+            return float("inf"), None
+        if enforce_solo_constraint and best_t > solo_run_time(group):
+            return float("inf"), None
+        return best_t, (best_p, best_perm)
+
+    # dp over subsets
+    INF = float("inf")
+    dp = [INF] * (1 << W)
+    choice: list[tuple[int, object] | None] = [None] * (1 << W)
+    dp[0] = 0.0
+    for mask in range(1, 1 << W):
+        low = mask & -mask
+        sub = mask
+        while sub:
+            if sub & low and bin(sub).count("1") <= c_max:
+                t, info = group_cost(sub)
+                if info is not None and dp[mask ^ sub] + t < dp[mask]:
+                    dp[mask] = dp[mask ^ sub] + t
+                    choice[mask] = (sub, info)
+            sub = (sub - 1) & mask
+    # fall back to singletons for any group the policy class can't cover
+    sched = Schedule()
+    mask = (1 << W) - 1
+    while mask:
+        if choice[mask] is None:  # pragma: no cover — solo always feasible
+            i = mask.bit_length() - 1
+            sched.add([queue[i]], solo_part)
+            mask ^= 1 << i
+            continue
+        sub, (p, perm) = choice[mask]
+        group = [queue[i] for i in range(W) if sub >> i & 1]
+        sched.add([group[i] for i in perm], p)
+        mask ^= sub
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# Named policies
+# ---------------------------------------------------------------------------
+
+def time_sharing(queue: list[JobProfile], c_max: int = 4) -> Schedule:
+    solo = [p for p in enumerate_partitions(1) if p.arity == 1]
+    sched = Schedule()
+    for j in queue:
+        sched.add([j], solo[0])
+    return sched
+
+
+def mig_only(queue: list[JobProfile], c_max: int = 4) -> Schedule:
+    parts = [p for p in enumerate_partitions(2) if p.style in ("mig",) and p.arity == 2]
+    return exhaustive_schedule(queue, 2, parts)
+
+
+def mps_only(queue: list[JobProfile], c_max: int = 4) -> Schedule:
+    parts = [p for p in enumerate_partitions(c_max) if p.style == "mps"]
+    return exhaustive_schedule(queue, c_max, parts)
+
+
+def mig_mps_default(queue: list[JobProfile], c_max: int = 4) -> Schedule:
+    """Fixed MIG layout (4+4 units) + default (equal) MPS shares; group
+    selection exhaustive (paper: 'MIG partitioning selected so that average
+    throughput across queues is maximized; MPS in default mode')."""
+    from repro.core.partition import Slice
+
+    parts = [
+        Partition((Slice(4, (1.0,)), Slice(4, (1.0,))), "default-C2"),
+        Partition((Slice(4, (1.0,)), Slice(4, (0.5, 0.5))), "default-C3"),
+        Partition((Slice(4, (0.5, 0.5)), Slice(4, (0.5, 0.5))), "default-C4"),
+    ]
+    return exhaustive_schedule(queue, c_max, parts)
+
+
+def oracle(queue: list[JobProfile], c_max: int = 4) -> Schedule:
+    return exhaustive_schedule(queue, c_max, enumerate_partitions(c_max))
+
+
+POLICIES = {
+    "time_sharing": time_sharing,
+    "mig_only": mig_only,
+    "mps_only": mps_only,
+    "mig_mps_default": mig_mps_default,
+    "oracle": oracle,
+}

@@ -1,0 +1,136 @@
+"""RL environment for co-scheduling + hierarchical partitioning (paper §IV-C).
+
+State: W slots x (f profile features + 5 status flags), flattened — exactly
+the paper's input layer ``W x (f+5)``.
+Actions: W *select-job-i into the current group* + N_p *close the group with
+partition p* (the paper's A = W + N_p decomposition; assignment to partition
+slots follows selection order, covering the C! orderings).
+Rewards (paper Table VI):
+    on close:  Σ_j r_i(j)  +  r_f = (SoloRunTime/CoRunTime - 1) x 100
+    r_i = (SmAllocRatio*ComputeRatio + MemoryAllocRatio*MemoryRatio) * DurationRatio^2
+Episode: schedule the whole window; terminal when all W jobs are grouped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.partition import N_UNITS, Partition, enumerate_partitions
+from repro.core.perfmodel import corun_time, solo_run_time
+from repro.core.problem import Schedule
+from repro.core.profiles import FEATURES, JobProfile
+
+N_FLAGS = 5  # available, in-group, scheduled, padding, group-progress
+
+
+@dataclass
+class EnvConfig:
+    window: int = 12                     # W
+    c_max: int = 4                       # Cmax
+    r_f_scale: float = 100.0             # paper: x100
+    r_i_weight: float = 0.2              # r_f carries the true objective
+    invalid_penalty: float = -10.0       # masked anyway; safety net
+
+
+class CoScheduleEnv:
+    """Gym-style (reset/step) but dependency-free."""
+
+    def __init__(self, cfg: EnvConfig | None = None):
+        self.cfg = cfg or EnvConfig()
+        self.partitions: list[Partition] = enumerate_partitions(self.cfg.c_max)
+        self.n_features = len(FEATURES)
+        self.state_dim = self.cfg.window * (self.n_features + N_FLAGS)
+        self.n_actions = self.cfg.window + len(self.partitions)
+        self._queue: list[JobProfile] = []
+
+    # ------------------------------------------------------------------ API
+    def reset(self, queue: list[JobProfile]) -> tuple[np.ndarray, np.ndarray]:
+        assert len(queue) <= self.cfg.window
+        self._queue = list(queue)
+        self._scheduled = [False] * len(queue)
+        self._in_group: list[int] = []           # selection-ordered indices
+        self.schedule = Schedule()
+        return self._state(), self.action_mask()
+
+    def step(self, action: int):
+        W = self.cfg.window
+        reward = 0.0
+        if not self._valid(action):
+            return self._state(), self.cfg.invalid_penalty, self.done, self.action_mask(), {}
+        if action < W:
+            self._in_group.append(action)
+        else:
+            partition = self.partitions[action - W]
+            group = [self._queue[i] for i in self._in_group]
+            reward = self._close_reward(group, partition)
+            self.schedule.add(group, partition)
+            for i in self._in_group:
+                self._scheduled[i] = True
+            self._in_group = []
+        return self._state(), reward, self.done, self.action_mask(), {}
+
+    @property
+    def done(self) -> bool:
+        return all(self._scheduled) and not self._in_group
+
+    # ------------------------------------------------------------- internals
+    def _valid(self, action: int) -> bool:
+        W = self.cfg.window
+        if action < W:
+            return (action < len(self._queue)
+                    and not self._scheduled[action]
+                    and action not in self._in_group
+                    and len(self._in_group) < self.cfg.c_max)
+        p = self.partitions[action - W]
+        return len(self._in_group) >= 1 and p.arity == len(self._in_group)
+
+    def action_mask(self) -> np.ndarray:
+        return np.array([self._valid(a) for a in range(self.n_actions)], dtype=bool)
+
+    def _state(self) -> np.ndarray:
+        W = self.cfg.window
+        out = np.zeros((W, self.n_features + N_FLAGS), np.float32)
+        progress = len(self._in_group) / max(1, self.cfg.c_max)
+        for i in range(W):
+            if i >= len(self._queue):
+                out[i, self.n_features + 3] = 1.0       # padding
+                continue
+            out[i, : self.n_features] = self._queue[i].features()
+            out[i, self.n_features + 0] = float(not self._scheduled[i] and i not in self._in_group)
+            out[i, self.n_features + 1] = float(i in self._in_group)
+            out[i, self.n_features + 2] = float(self._scheduled[i])
+            out[i, self.n_features + 4] = progress
+        return out.reshape(-1)
+
+    # ------------------------------------------------------------- rewards
+    def _close_reward(self, group: list[JobProfile], partition: Partition) -> float:
+        means = self._window_means()
+        ri = sum(
+            self._r_i(job, beta, s.units, means)
+            for job, (_, s, beta) in zip(group, partition.slots)
+        )
+        ct = corun_time(group, partition)
+        st = solo_run_time(group)
+        rf = (st / ct - 1.0) * self.cfg.r_f_scale if ct > 0 else 0.0
+        return self.cfg.r_i_weight * ri + rf
+
+    def _window_means(self) -> dict:
+        jobs = self._queue
+        return {
+            "compute": float(np.mean([j.compute_pct for j in jobs])) or 1e-9,
+            "memory": float(np.mean([j.memory_pct for j in jobs])) or 1e-9,
+            "duration": float(np.mean([j.solo_time() for j in jobs])) or 1e-9,
+        }
+
+    def _r_i(self, job: JobProfile, beta: float, units: int, means: dict) -> float:
+        """Paper Table VI intermediate reward, TPU-mapped:
+        SmAllocRatio = chips fraction x β; MemoryAllocRatio = slice bandwidth
+        fraction (co-residents all access the slice's bandwidth, like the
+        GI's αm)."""
+        sm_alloc = (units / N_UNITS) * beta
+        mem_alloc = units / N_UNITS
+        compute_ratio = job.compute_pct / max(means["compute"], 1e-9)
+        memory_ratio = job.memory_pct / max(means["memory"], 1e-9)
+        duration_ratio = job.solo_time() / max(means["duration"], 1e-9)
+        return (sm_alloc * compute_ratio + mem_alloc * memory_ratio) * duration_ratio ** 2

@@ -1,0 +1,43 @@
+"""Dueling double deep Q-network in pure JAX (paper §IV-D / Table VI).
+
+Architecture (paper Table VI): input W x (f+5); 3 fully-connected hidden
+layers 512/256/128, ReLU; dueling heads V (1) and A (n_actions);
+Q = V + A - mean(A)  [Wang et al. 2016]. Double-DQN targets use the online
+network's argmax with the target network's value [van Hasselt et al. 2016].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+HIDDEN = (512, 256, 128)
+
+
+def init_dqn(key, in_dim: int, n_actions: int, hidden=HIDDEN) -> dict:
+    params = {}
+    dims = (in_dim, *hidden)
+    keys = jax.random.split(key, len(hidden) + 2)
+    for i in range(len(hidden)):
+        params[f"w{i}"] = jax.random.normal(keys[i], (dims[i], dims[i + 1])) * (2.0 / dims[i]) ** 0.5
+        params[f"b{i}"] = jnp.zeros((dims[i + 1],))
+    params["wV"] = jax.random.normal(keys[-2], (hidden[-1], 1)) * (1.0 / hidden[-1]) ** 0.5
+    params["bV"] = jnp.zeros((1,))
+    params["wA"] = jax.random.normal(keys[-1], (hidden[-1], n_actions)) * (1.0 / hidden[-1]) ** 0.5
+    params["bA"] = jnp.zeros((n_actions,))
+    return params
+
+
+def dqn_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., in_dim) -> Q (..., n_actions)."""
+    h = x
+    i = 0
+    while f"w{i}" in params:
+        h = jax.nn.relu(h @ params[f"w{i}"] + params[f"b{i}"])
+        i += 1
+    v = h @ params["wV"] + params["bV"]                    # (..., 1)
+    a = h @ params["wA"] + params["bA"]                    # (..., n_actions)
+    return v + a - jnp.mean(a, axis=-1, keepdims=True)
+
+
+def masked_argmax(q: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmax(jnp.where(mask, q, -jnp.inf), axis=-1)

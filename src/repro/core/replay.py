@@ -1,0 +1,35 @@
+"""Uniform experience replay buffer (numpy circular store)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+class ReplayBuffer:
+    def __init__(self, capacity: int, state_dim: int, n_actions: int, seed: int = 0):
+        self.capacity = capacity
+        self.rng = np.random.default_rng(seed)
+        self.s = np.zeros((capacity, state_dim), np.float32)
+        self.a = np.zeros((capacity,), np.int32)
+        self.r = np.zeros((capacity,), np.float32)
+        self.s2 = np.zeros((capacity, state_dim), np.float32)
+        self.done = np.zeros((capacity,), np.float32)
+        self.mask2 = np.zeros((capacity, n_actions), bool)
+        self.ptr = 0
+        self.full = False
+
+    def push(self, s, a, r, s2, done, mask2) -> None:
+        i = self.ptr
+        self.s[i], self.a[i], self.r[i] = s, a, r
+        self.s2[i], self.done[i], self.mask2[i] = s2, float(done), mask2
+        self.ptr = (self.ptr + 1) % self.capacity
+        self.full = self.full or self.ptr == 0
+
+    def __len__(self) -> int:
+        return self.capacity if self.full else self.ptr
+
+    def sample(self, batch: int) -> dict:
+        idx = self.rng.integers(0, len(self), size=batch)
+        return {
+            "s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
+            "s2": self.s2[idx], "done": self.done[idx], "mask2": self.mask2[idx],
+        }

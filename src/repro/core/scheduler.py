@@ -1,0 +1,78 @@
+"""Online phase (paper §IV-B): trained agent -> (L_JS, L_R) for a queue.
+
+The agent runs greedily (ε = 0). The §IV-A constraint
+``CoRunTime <= SoloRunTime`` is then *enforced by construction*: any group
+whose predicted co-run loses to time sharing is split back into solo runs
+(the paper's constraint-1 guard).  Jobs without a profile in the repository
+are excluded from co-scheduling and executed solo while being profiled
+(paper's online protocol).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.agent import DQNAgent
+from repro.core.env import CoScheduleEnv, EnvConfig
+from repro.core.partition import enumerate_partitions
+from repro.core.perfmodel import corun_time, solo_run_time
+from repro.core.problem import Schedule
+from repro.core.profiles import JobProfile, ProfileRepository
+
+
+@dataclass
+class SchedulerStats:
+    fallback_groups: int = 0
+    unprofiled_jobs: int = 0
+
+
+class RLScheduler:
+    def __init__(self, agent: DQNAgent, env_cfg: EnvConfig | None = None,
+                 repository: ProfileRepository | None = None):
+        self.agent = agent
+        self.env_cfg = env_cfg or EnvConfig()
+        self.repository = repository or ProfileRepository()
+        self.stats = SchedulerStats()
+
+    def schedule(self, queue: list[JobProfile]) -> Schedule:
+        env = CoScheduleEnv(self.env_cfg)
+        state, mask = env.reset(queue)
+        guard = 0
+        while not env.done:
+            action = self.agent.act(state, mask, greedy=True)
+            state, _, _, mask, _ = env.step(action)
+            guard += 1
+            assert guard < 10 * self.env_cfg.window, "scheduler failed to terminate"
+        return self._enforce_constraints(env.schedule)
+
+    def schedule_submissions(self, submissions: list[tuple[str, JobProfile | None]]) -> Schedule:
+        """Online protocol: (binary_path, maybe-fresh-profile) submissions.
+        Unprofiled jobs run solo (full pod) and enter the repository."""
+        solo = [p for p in enumerate_partitions(1) if p.arity == 1][0]
+        profiled: list[JobProfile] = []
+        sched = Schedule()
+        for path, fresh in submissions:
+            prof = self.repository.lookup(path)
+            if prof is None:
+                self.stats.unprofiled_jobs += 1
+                if fresh is not None:       # measured during this solo run
+                    self.repository.insert(path, fresh)
+                    sched.add([fresh], solo)
+                continue
+            profiled.append(prof)
+        if profiled:
+            inner = self.schedule(profiled)
+            for g, p in zip(inner.groups, inner.partitions):
+                sched.add(g, p)
+        return sched
+
+    def _enforce_constraints(self, sched: Schedule) -> Schedule:
+        solo = [p for p in enumerate_partitions(1) if p.arity == 1][0]
+        out = Schedule()
+        for g, p in zip(sched.groups, sched.partitions):
+            if len(g) > 1 and corun_time(g, p) > solo_run_time(g):
+                self.stats.fallback_groups += 1
+                for j in g:
+                    out.add([j], solo)
+            else:
+                out.add(g, p)
+        return out

@@ -1,0 +1,80 @@
+"""Offline RL training (paper §IV-B): random queues over the zoo, ε-greedy
+exploration, dueling double-DQN updates; held-out jobs excluded (paper's
+unseen-application generalization test)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.agent import DQNAgent, DQNConfig
+from repro.core.env import CoScheduleEnv, EnvConfig
+from repro.core.metrics import relative_throughput
+from repro.core.profiles import JobProfile
+from repro.core.scheduler import RLScheduler
+from repro.core.workloads import QUEUE_KINDS, make_queue
+
+
+@dataclass
+class TrainConfig:
+    episodes: int = 3000
+    updates_per_step: int = 1
+    n_train_queues: int = 20            # paper: 20 random queues for training
+    seed: int = 0
+    eval_every: int = 100
+    dqn: DQNConfig = field(default_factory=DQNConfig)
+
+
+def heldout_split(jobs: list[JobProfile], frac: float = 0.33, seed: int = 7):
+    """Paper: mark ~1/3 of programs as unseen (*) — excluded from training."""
+    rng = np.random.default_rng(seed)
+    by_cls: dict[str, list[JobProfile]] = {}
+    for j in jobs:
+        by_cls.setdefault(j.job_class, []).append(j)
+    held: set[str] = set()
+    for cls, pool in by_cls.items():
+        k = max(1, int(len(pool) * frac)) if len(pool) > 1 else 0
+        idx = rng.permutation(len(pool))[:k]
+        held.update(pool[i].name for i in idx)
+    return held
+
+
+def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
+                cfg: TrainConfig | None = None, heldout: set[str] | None = None,
+                verbose: bool = False) -> tuple[DQNAgent, list[dict]]:
+    cfg = cfg or TrainConfig()
+    env_cfg = env_cfg or EnvConfig()
+    env = CoScheduleEnv(env_cfg)
+    agent = DQNAgent(env.state_dim, env.n_actions, cfg.dqn, seed=cfg.seed)
+    rng = np.random.default_rng(cfg.seed)
+    heldout = heldout if heldout is not None else heldout_split(jobs)
+
+    # 20 fixed training queues, all classes represented (paper §V-A2)
+    train_queues = [
+        make_queue(jobs, QUEUE_KINDS[i % len(QUEUE_KINDS)], env_cfg.window, rng,
+                   exclude=heldout)
+        for i in range(cfg.n_train_queues)
+    ]
+
+    history: list[dict] = []
+    for ep in range(cfg.episodes):
+        queue = train_queues[int(rng.integers(0, len(train_queues)))]
+        state, mask = env.reset(queue)
+        ep_reward = 0.0
+        while not env.done:
+            action = agent.act(state, mask)
+            s2, r, done, mask2, _ = env.step(action)
+            agent.observe(state, action, r, s2, done, mask2)
+            state, mask = s2, mask2
+            ep_reward += r
+            for _ in range(cfg.updates_per_step):
+                agent.update()
+        if (ep + 1) % cfg.eval_every == 0 or ep == cfg.episodes - 1:
+            sched = RLScheduler(agent, env_cfg).schedule(train_queues[0])
+            rec = {"episode": ep + 1, "eps": agent.epsilon, "ep_reward": ep_reward,
+                   "eval_throughput": relative_throughput(sched)}
+            history.append(rec)
+            if verbose:
+                print(f"ep {ep+1:5d} eps={agent.epsilon:.3f} "
+                      f"reward={ep_reward:8.1f} eval_tp={rec['eval_throughput']:.3f}")
+    return agent, history

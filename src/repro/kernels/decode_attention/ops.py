@@ -1,0 +1,60 @@
+"""jit-ready wrapper for flash-decode; GQA grouping + padding handled here."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_kernel
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_k", "interpret"))
+def decode_attention(
+    q: jax.Array,          # (B, Hq, D)
+    k_cache: jax.Array,    # (B, Smax, Hkv, D)
+    v_cache: jax.Array,
+    lengths: jax.Array,    # (B,) int32 valid prefix lengths
+    *,
+    impl: str = "auto",
+    block_k: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "kernel" if _on_tpu() else "ref"
+    if impl == "ref":
+        return decode_attention_ref(q, k_cache, v_cache, lengths)
+
+    B, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    g_pad = max(8, g)  # sublane minimum
+    scale = 1.0 / (D ** 0.5)
+
+    # (B, Hq, D) -> (B, Hkv, g, D) -> pad group rows -> (B*Hkv, g_pad, D)
+    qg = q.reshape(B, Hkv, g, D)
+    if g_pad != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    qf = qg.reshape(B * Hkv, g_pad, D)
+
+    # pad cache seq to block multiple
+    pad_s = (-Smax) % block_k if Smax >= block_k else block_k - Smax
+    kf = jnp.pad(k_cache, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    vf = jnp.pad(v_cache, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    kf = kf.transpose(0, 2, 1, 3).reshape(B * Hkv, Smax + pad_s, D)
+    vf = vf.transpose(0, 2, 1, 3).reshape(B * Hkv, Smax + pad_s, D)
+
+    lens = jnp.repeat(lengths.astype(jnp.int32), Hkv)
+
+    out = decode_attention_kernel(
+        qf, kf, vf, lens,
+        scale=scale, block_k=min(block_k, Smax + pad_s),
+        interpret=not _on_tpu() if interpret is None else interpret,
+    )
+    out = out.reshape(B, Hkv, g_pad, D)[:, :, :g, :]
+    return out.reshape(B, Hq, D)

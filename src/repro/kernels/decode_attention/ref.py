@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token KV-cache decode attention (GQA, ragged lengths)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths, *, scale: float | None = None):
+    """q: (B, Hq, D); k/v_cache: (B, Smax, Hkv, D); lengths: (B,) valid prefix.
+
+    Grouped-query einsum — the cache is read ONCE (like the Pallas kernel),
+    not materialized g-x via repeat. Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(Smax)[None, None, None, :] < lengths[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

@@ -1,0 +1,145 @@
+"""Pallas TPU flash-attention kernel (blocked online softmax, GQA, causal).
+
+TPU mapping
+-----------
+Grid ``(B * Hq, num_q_blocks, num_kv_blocks)`` — the trailing grid dim is
+innermost and executes *sequentially* on a TPU core, so fp32 VMEM scratch
+(running max / denominator / accumulator) persists across the kv sweep for
+one (head, q-block). Block shapes keep the MXU fed: q/k tiles are
+``(block_q, d_head)`` / ``(block_k, d_head)`` with ``d_head`` a multiple of
+128 on the lane axis; the score tile ``(block_q, block_k)`` is fp32 in VMEM.
+Causal blocks strictly above the diagonal are skipped with ``pl.when``
+(on TPU the skipped iteration costs only grid bookkeeping).
+
+VMEM budget per step (defaults block_q = block_k = 256, D = 128):
+q 256x128x4 + k/v 2x256x128x4 + scores 256x256x4 + acc 256x128x4 ~ 0.8 MB,
+comfortably inside the ~16 MB/core VMEM envelope, leaving room for
+double-buffered HBM->VMEM pipelining of the k/v streams.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, causal: bool, block_q: int, block_k: int,
+    seq_q: int, seq_kv: int, q_offset: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    last_k = pl.num_programs(2) - 1
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal: skip blocks entirely above the diagonal (q global pos < k pos)
+    if causal:
+        run = (qi * block_q + block_q - 1 + q_offset) >= ki * block_k
+    else:
+        run = True
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                  # (bq, bk)
+
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) + q_offset
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_kv                               # kv padding
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)                   # (bk, D)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == last_k)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)                    # fully-masked rows
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,        # (BH, Sq_pad, D) -- batch*heads flattened
+    k: jax.Array,        # (BHkv, Skv_pad, D)
+    v: jax.Array,
+    *,
+    group: int,          # Hq // Hkv
+    heads_q: int,
+    heads_kv: int,
+    scale: float,
+    causal: bool,
+    seq_q: int,
+    seq_kv: int,
+    block_q: int = 256,
+    block_k: int = 256,
+    q_offset: int = 0,   # global position of q[0] (right-aligned causal prefill)
+    interpret: bool = True,
+) -> jax.Array:
+    bh, sq_pad, d = q.shape
+    _, skv_pad, _ = k.shape
+    block_q = min(block_q, sq_pad)
+    block_k = min(block_k, skv_pad)
+    grid = (bh, sq_pad // block_q, skv_pad // block_k)
+
+    def q_map(b, qi, ki):
+        return (b, qi, 0)
+
+    def kv_map(b, qi, ki):
+        # map flattened (batch, q-head) index -> (batch, kv-head) index
+        batch = b // heads_q
+        h = b % heads_q
+        return (batch * heads_kv + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, block_q=block_q, block_k=block_k,
+        seq_q=seq_q, seq_kv=seq_kv, q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            # fp32 VMEM scratch: running max, denominator, output accumulator
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,81 @@
+"""jit-ready wrapper around the flash-attention Pallas kernel.
+
+``impl``:
+  - "kernel": Pallas TPU kernel (compiled on TPU; interpret=True elsewhere)
+  - "ref": pure-jnp oracle (what the CPU dry-run lowers; same math/FLOPs)
+  - "auto": kernel on TPU backends, ref otherwise
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_chunked, flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "impl", "block_q", "block_k", "interpret", "unroll")
+)
+def flash_attention(
+    q: jax.Array,            # (B, Sq, Hq, D)
+    k: jax.Array,            # (B, Skv, Hkv, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    impl: str = "auto",
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+    unroll: bool = False,
+) -> jax.Array:
+    if impl == "auto":
+        # TPU: the Pallas kernel. CPU (tests + dry-run lowering): the chunked
+        # jnp form — same math/FLOPs as the kernel with a flash-style working
+        # set, so memory_analysis/cost_analysis reflect the TPU execution.
+        impl = "kernel" if _on_tpu() else "chunked"
+    if impl == "ref":
+        return flash_attention_ref(q, k, v, causal=causal)
+    if impl == "chunked":
+        return flash_attention_chunked(q, k, v, causal=causal, block_k=block_k, unroll=unroll)
+
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, max(8, Sq))
+    block_k = min(block_k, max(8, Skv))
+
+    qp = _pad_to(q, 1, block_q)
+    kp = _pad_to(k, 1, block_k)
+    vp = _pad_to(v, 1, block_k)
+    qf = qp.transpose(0, 2, 1, 3).reshape(B * Hq, qp.shape[1], D)
+    kf = kp.transpose(0, 2, 1, 3).reshape(B * Hkv, kp.shape[1], D)
+    vf = vp.transpose(0, 2, 1, 3).reshape(B * Hkv, vp.shape[1], D)
+
+    out = flash_attention_kernel(
+        qf, kf, vf,
+        group=g, heads_q=Hq, heads_kv=Hkv, scale=scale, causal=causal,
+        seq_q=Sq, seq_kv=Skv,
+        block_q=block_q, block_k=block_k,
+        q_offset=Skv - Sq,  # right-aligned causal (prefill continuation)
+        interpret=not _on_tpu() if interpret is None else interpret,
+    )
+    out = out.reshape(B, Hq, qp.shape[1], D).transpose(0, 2, 1, 3)
+    return out[:, :Sq]

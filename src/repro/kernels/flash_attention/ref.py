@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for blocked flash attention (GQA, optional causal).
+
+Two forms:
+  * ``flash_attention_ref``      — dense (B,H,Sq,Skv) scores; ground truth.
+  * ``flash_attention_chunked``  — online-softmax over kv blocks with a
+    *static* python loop.  Same math, O(Sq * block) score memory; this is
+    what the CPU dry-run lowers so memory_analysis reflects a flash-style
+    working set, and the static loop keeps every block's FLOPs visible to
+    XLA cost analysis (a lax.scan body would be counted once).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D); Hq % Hkv == 0 -> (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32))
+    logits = logits * scale
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)  # right-aligned queries
+        kpos = jnp.arange(Skv)[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _chunk_body(q32, kb, vb, m, l, acc, qpos, kpos, causal, g):
+    """One kv-block online-softmax update (fp32 score tile).
+
+    Grouped-query einsums: the kv block is read once, never repeated g-x
+    (matching the Pallas kernel's HBM traffic)."""
+    B, Sq, Hq, D = q32.shape
+    Hkv = kb.shape[2]
+    qg = q32.reshape(B, Sq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bqkhg", qg, kb.astype(jnp.float32))
+    s = s.reshape(B, Sq, kb.shape[1], Hq)                  # (B,Sq,bk,Hq)
+    mask = kpos[None, :] >= 0                              # kv padding (kpos=-1)
+    if causal:
+        mask = jnp.logical_and(mask, qpos >= kpos[None, :])
+    s = jnp.where(mask[None, :, :, None], s, -jnp.inf)
+    m_new = jnp.maximum(m, jnp.max(s, axis=2))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+    p = jnp.exp(s - m_safe[:, :, None, :])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    l = alpha * l + jnp.sum(p, axis=2)
+    pg = p.reshape(B, Sq, kb.shape[1], Hkv, g)
+    pv = jnp.einsum("bqkhg,bkhd->bqhgd", pg, vb.astype(jnp.float32))
+    acc = acc * alpha[..., None] + pv.reshape(B, Sq, Hq, D)
+    return m_new, l, acc
+
+
+def flash_attention_chunked(q, k, v, *, causal: bool = True,
+                            scale: float | None = None, block_k: int = 512,
+                            unroll: bool = False):
+    """Online-softmax over kv blocks; matches flash_attention_ref.
+
+    Two modes:
+      * unroll=False (default): lax.scan over blocks with a remat'd body —
+        the backward recomputes each block (flash-style O(block) memory).
+      * unroll=True: static python loop with causal block skipping — every
+        FLOP visible to XLA cost analysis (dry-run cost extraction).
+    """
+    import jax
+
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    block_k = min(block_k, Skv)
+    q32 = q.astype(jnp.float32) * scale
+    q_off = Skv - Sq                                      # right-aligned queries
+    qpos = jnp.arange(Sq)[:, None] + q_off
+
+    m0 = jnp.full((B, Sq, Hq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hq), jnp.float32)
+    acc0 = jnp.zeros((B, Sq, Hq, D), jnp.float32)
+    n_blocks = -(-Skv // block_k)
+
+    if unroll:
+        m, l, acc = m0, l0, acc0
+        for bi in range(n_blocks):
+            lo = bi * block_k
+            hi = min(Skv, lo + block_k)
+            if causal and lo > Sq - 1 + q_off:
+                continue                                   # block above the diagonal
+            kpos = jnp.arange(lo, hi)
+            m, l, acc = _chunk_body(q32, k[:, lo:hi], v[:, lo:hi], m, l, acc,
+                                    qpos, kpos, causal, g)
+    else:
+        pad = n_blocks * block_k - Skv
+        kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else k
+        vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else v
+        kb = kp.reshape(B, n_blocks, block_k, Hkv, D).swapaxes(0, 1)
+        vb = vp.reshape(B, n_blocks, block_k, Hkv, D).swapaxes(0, 1)
+        kpos_all = jnp.arange(n_blocks * block_k)
+        kpos_all = jnp.where(kpos_all < Skv, kpos_all, -1).reshape(n_blocks, block_k)
+
+        @jax.checkpoint
+        def body(carry, xs):
+            m, l, acc = carry
+            kb_i, vb_i, kpos = xs
+            m, l, acc = _chunk_body(q32, kb_i, vb_i, m, l, acc, qpos, kpos, causal, g)
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), (kb, vb, kpos_all))
+
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

@@ -1,0 +1,50 @@
+"""jit-ready fused RMSNorm wrapper (padding + reshape to row-major slab)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_kernel
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl", "block_rows", "interpret"))
+def rmsnorm(
+    x: jax.Array,           # (..., d)
+    scale: jax.Array,       # (d,)
+    *,
+    eps: float = 1e-5,
+    impl: str = "auto",
+    block_rows: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if impl == "auto":
+        impl = "kernel" if _on_tpu() else "ref"
+    if impl == "ref":
+        return rmsnorm_ref(x, scale, eps)
+
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+
+    d_pad = (-d) % 128
+    r_block = min(block_rows, max(8, rows))
+    r_pad = (-rows) % r_block
+    if d_pad or r_pad:
+        xf = jnp.pad(xf, ((0, r_pad), (0, d_pad)))
+    sp = jnp.pad(scale, (0, d_pad)) if d_pad else scale
+
+    out = rmsnorm_kernel(
+        xf, sp, eps=eps, d_valid=d, block_rows=r_block,
+        interpret=not _on_tpu() if interpret is None else interpret,
+    )
+    return out[:rows, :d].reshape(orig_shape)

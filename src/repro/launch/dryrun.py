@@ -1,0 +1,317 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax-touching import: jax locks the
+device count at first backend init, and the dry-run needs 512 placeholder
+host devices to build the production meshes (16x16 single-pod, 2x16x16
+multi-pod).  Smoke tests and benchmarks must NOT import this module.
+
+Cost-extraction protocol (3 compiles per cell)
+----------------------------------------------
+XLA's HloCostAnalysis visits a while-loop body ONCE, so the layer-scanned
+module under-reports FLOPs/bytes/collectives by ~the stack depth.  We
+therefore compile:
+  A. the full scanned module  -> memory_analysis (trip-count independent),
+     compile-time proof, collective *schedule*;
+  B. an unrolled 2-scan-unit variant and
+  C. an unrolled 1-scan-unit variant -> exact per-unit costs by differencing:
+     total = C + (B - C) * (n_units - 1).
+Unrolled variants also python-loop the inner chunk scans (mamba/mLSTM), so
+every FLOP is visible.  The sLSTM per-token scan stays a lax.scan (a 32k-step
+python loop is not lowerable); its cost is latency- not FLOP-bound and is
+handled analytically in the §Roofline notes.
+
+Per cell this prints/records:
+  * compiled.memory_analysis()   -- proves the sharded program fits HBM
+  * compiled.cost_analysis()     -- per-chip FLOPs / bytes for §Roofline
+  * collective bytes parsed from the optimized HLO (corrected per-unit)
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh pod
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_cells, get_config, get_shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    HBM_BYTES,
+    PEAK_FLOPS,
+    fusion_adjusted_bytes,
+    model_bytes_min,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+from repro.runtime.steps import (
+    abstract_state,
+    batch_specs,
+    cache_shardings,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.optim import OptConfig
+from repro.sharding import FSDP_SP_RULES, SEQ_PARALLEL_RULES
+
+RULESETS = {"baseline": None, "sp": SEQ_PARALLEL_RULES, "fsdp_sp": FSDP_SP_RULES}
+
+
+# ---------------------------------------------------------------------------
+# Scan-unit helpers (cost extraction)
+# ---------------------------------------------------------------------------
+
+def scan_units(cfg) -> int:
+    """Length of the layer-stack scan (the trip count cost analysis misses)."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "ssm":
+        return cfg.n_layers // 2
+    return cfg.n_layers  # dense/moe/vlm; enc-dec scales enc+dec together
+
+
+def with_scan_units(cfg, u: int):
+    """Unrolled cost-variant config with `u` scan units."""
+    kw: dict = {"unroll_layers": True}
+    if cfg.family == "hybrid":
+        kw["n_layers"] = u * cfg.attn_every
+    elif cfg.family == "ssm":
+        kw["n_layers"] = u * 2
+    else:
+        kw["n_layers"] = u
+        if cfg.enc_dec:
+            kw["n_enc_layers"] = u
+    # unrolled variants python-loop the inner chunk scans too; bound the
+    # number of unrolled chunks (compile time) with a larger chunk length —
+    # FLOPs/bytes per chunk are length-linear, so costs are unchanged.
+    if cfg.mamba is not None:
+        kw["mamba"] = dataclasses.replace(cfg.mamba, chunk=4096)
+    if cfg.xlstm is not None:
+        # mLSTM intra-chunk work is quadratic in chunk length: 512 keeps the
+        # unrolled module small at a bounded (~2x at 256->512) overstatement
+        kw["xlstm"] = dataclasses.replace(cfg.xlstm, chunk=512)
+    return cfg.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, shape, mesh, rules=None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell:
+    weak-type-correct, shardable, no device allocation."""
+    if shape.kind == "train":
+        batch, _ = batch_specs(cfg, shape, mesh, rules)
+        params, opt = abstract_state(cfg)
+        return {"params": params, "opt_state": opt, "batch": batch}
+    if shape.kind == "prefill":
+        params, _ = abstract_state(cfg, with_opt=False)
+        if cfg.enc_dec:
+            Se = min(cfg.enc_len, shape.seq_len)
+            return {
+                "params": params,
+                "frames": jax.ShapeDtypeStruct(
+                    (shape.global_batch, Se, cfg.d_model), jnp.dtype(cfg.dtype)),
+                "enc_lens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            }
+        return {
+            "params": params,
+            "tokens": jax.ShapeDtypeStruct((shape.global_batch, shape.seq_len), jnp.int32),
+        }
+    params, _ = abstract_state(cfg, with_opt=False)
+    cache, _ = cache_shardings(cfg, mesh, shape.global_batch, shape.seq_len)
+    vec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    return {"params": params, "cache": cache, "token": vec, "pos": vec}
+
+
+def lower_cell(cfg, shape, mesh, rules=None):
+    specs = input_specs(cfg, shape, mesh, rules)
+    if shape.kind == "train":
+        fn = make_train_step(cfg, OptConfig(), mesh, rules)
+        return fn.lower(specs["params"], specs["opt_state"], specs["batch"])
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, mesh, shape, rules)
+        if cfg.enc_dec:
+            return fn.lower(specs["params"], specs["frames"], specs["enc_lens"])
+        return fn.lower(specs["params"], specs["tokens"])
+    fn = make_decode_step(cfg, mesh, shape.global_batch, shape.seq_len, rules)
+    return fn.lower(specs["params"], specs["cache"], specs["token"], specs["pos"])
+
+
+def _compile_costs(cfg, shape, mesh, rules):
+    """(flops, bytes, collectives, compiled) for one lowering."""
+    lowered = lower_cell(cfg, shape, mesh, rules)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    out = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "bytes_fused": fusion_adjusted_bytes(hlo),
+        "coll_w": coll.bytes_weighted,
+        "coll_raw": coll.bytes_raw,
+        "coll_count": coll.count,
+        "coll_by_op": coll.by_op,
+    }
+    return out, compiled
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_id: str, mesh_kind: str = "pod", rules_name: str = "baseline",
+             verbose: bool = True, cfg_override=None, cost_extract: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rules = RULESETS[rules_name]
+    cfg = cfg_override or get_config(arch)
+    shape = get_shape(shape_id)
+    rec = {"arch": arch, "shape": shape_id, "mesh": mesh_kind, "rules": rules_name,
+           "chips": mesh.size, "kind": shape.kind, "ok": False}
+    t0 = time.time()
+    try:
+        # --- A: full scanned module (memory + compile proof) ----------------
+        lowered = lower_cell(cfg, shape, mesh, rules)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        mem = compiled.memory_analysis()
+        rec.update(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+            output_bytes=getattr(mem, "output_size_in_bytes", 0),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+        )
+        rec["peak_bytes"] = rec["argument_bytes"] + rec["temp_bytes"]
+        rec["fits_hbm"] = bool(rec["peak_bytes"] < HBM_BYTES)
+        rec["hbm_limit"] = HBM_BYTES
+        del compiled, lowered
+        gc.collect()
+
+        if not cost_extract:
+            # multi-pod proof run: compile success + memory only (the
+            # roofline table is single-pod per EXPERIMENTS.md §Roofline)
+            rec["ok"] = True
+            if verbose:
+                print(f"== {arch} x {shape_id} x {mesh_kind} [{rules_name}] ==", flush=True)
+                print(f"  memory_analysis: args={rec['argument_bytes']/1e9:.2f}GB "
+                      f"temp={rec['temp_bytes']/1e9:.2f}GB fits16GiB={rec['fits_hbm']} "
+                      f"(compile {rec['compile_s']}s)", flush=True)
+            return rec
+
+        # --- B/C: unrolled cost variants -------------------------------------
+        L = scan_units(cfg)
+        c1, comp1 = _compile_costs(with_scan_units(cfg, 1), shape, mesh, rules)
+        del comp1
+        gc.collect()
+        if L > 1:
+            c2, comp2 = _compile_costs(with_scan_units(cfg, 2), shape, mesh, rules)
+            del comp2
+            gc.collect()
+        else:
+            c2 = c1
+        def lin(key):
+            return c1[key] + (c2[key] - c1[key]) * (L - 1)
+
+        flops = lin("flops")
+        byts = lin("bytes_fused")
+        coll_w = lin("coll_w")
+        rec.update(
+            ok=True,
+            scan_units=L,
+            flops_per_chip=flops,
+            bytes_per_chip=byts,
+            bytes_per_chip_raw_cpu=lin("bytes"),
+            coll_bytes_weighted=coll_w,
+            coll_bytes_raw=lin("coll_raw"),
+            coll_count_unit=c2["coll_count"] - c1["coll_count"],
+            coll_by_op_u1=c1["coll_by_op"],
+            coll_by_op_u2=c2["coll_by_op"],
+        )
+        rec.update(roofline_terms(flops, byts, coll_w))
+        mf = model_flops(cfg, shape)
+        rec["model_flops_total"] = mf
+        rec["model_flops_per_chip"] = mf / mesh.size
+        rec["useful_flops_ratio"] = rec["model_flops_per_chip"] / flops if flops else 0.0
+        rec["model_bytes_min_total"] = model_bytes_min(cfg, shape)
+        rec["roofline_fraction"] = (
+            (rec["model_flops_per_chip"] / PEAK_FLOPS) / rec["step_time_lb_s"]
+            if rec["step_time_lb_s"] > 0 else 0.0
+        )
+
+        if verbose:
+            print(f"== {arch} x {shape_id} x {mesh_kind} [{rules_name}] ==", flush=True)
+            print(f"  memory_analysis: args={rec['argument_bytes']/1e9:.2f}GB "
+                  f"temp={rec['temp_bytes']/1e9:.2f}GB out={rec['output_bytes']/1e9:.2f}GB "
+                  f"fits16GiB={rec['fits_hbm']}")
+            print(f"  cost_analysis (corrected x{L}): flops/chip={flops:.3e} "
+                  f"bytes/chip={byts:.3e} (raw-cpu {rec['bytes_per_chip_raw_cpu']:.3e})")
+            print(f"  collectives: weighted={coll_w/1e9:.3f}GB raw={rec['coll_bytes_raw']/1e9:.3f}GB")
+            print(f"  roofline: compute={rec['compute_term_s']*1e3:.3f}ms "
+                  f"memory={rec['memory_term_s']*1e3:.3f}ms "
+                  f"collective={rec['collective_term_s']*1e3:.3f}ms "
+                  f"dominant={rec['dominant']} useful_ratio={rec['useful_flops_ratio']:.3f} "
+                  f"roofline_frac={rec['roofline_fraction']:.3f}", flush=True)
+    except Exception as e:  # noqa: BLE001 — sweep must survive cell failures
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"== {arch} x {shape_id} x {mesh_kind} FAILED: {rec['error']}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--rules", default="baseline", choices=list(RULESETS))
+    ap.add_argument("--all", action="store_true", help="sweep all runnable cells")
+    ap.add_argument("--resume", action="store_true", help="skip cells with ok records")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+
+    cells = []
+    if args.all:
+        for c in all_cells():
+            if c.runnable:
+                cells.append((c.arch, c.shape))
+            else:
+                print(f"SKIP {c.arch} x {c.shape}: {c.skip}")
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    n_fail = 0
+    for arch, shape_id in cells:
+        for mesh_kind in meshes:
+            tag = f"{arch}_{shape_id}_{mesh_kind}_{args.rules}".replace(".", "_").replace("/", "_")
+            out_path = os.path.join(args.out, tag + ".json")
+            if args.resume and os.path.exists(out_path):
+                with open(out_path) as f:
+                    if json.load(f).get("ok"):
+                        continue
+            rec = run_cell(arch, shape_id, mesh_kind, args.rules,
+                           cost_extract=(mesh_kind == "pod"))
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=1)
+            n_fail += 0 if rec["ok"] else 1
+    print(f"dry-run complete: {len(cells) * len(meshes) - n_fail} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Mesh construction: production pod / multi-pod meshes + scheduler slices.
+
+Functions (not module constants) so importing never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256-chip pod; multi_pod stacks 2 pods on a leading "pod" axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2) -> Mesh:
+    """Small host-device mesh for CPU tests (requires enough host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def slice_mesh(mesh: Mesh, lo_row: int, hi_row: int) -> Mesh:
+    """Rectangular sub-slice of a ("data","model") pod mesh along the data axis.
+
+    This is the Level-1 *physical* partition (DESIGN.md §2): the returned
+    sub-mesh owns its chips (compute + HBM) and intra-slice ICI exclusively.
+    Cutting the torus breaks the wraparound link on the data axis — the perf
+    model charges `torus_factor = 1/2` on that axis for split slices.
+    """
+    devices = np.asarray(mesh.devices)
+    assert devices.ndim == 2, "slice_mesh expects a single-pod (data, model) mesh"
+    assert 0 <= lo_row < hi_row <= devices.shape[0]
+    return Mesh(devices[lo_row:hi_row, :], ("data", "model"))
+
+
+def slice_meshes(mesh: Mesh, widths: list[int]) -> list[Mesh]:
+    """Partition the pod's data axis into contiguous slices of `widths` rows."""
+    assert sum(widths) <= np.asarray(mesh.devices).shape[0]
+    out, lo = [], 0
+    for w in widths:
+        out.append(slice_mesh(mesh, lo, lo + w))
+        lo += w
+    return out

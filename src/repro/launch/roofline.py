@@ -1,0 +1,258 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = weighted_collective_bytes_per_chip / ICI_bw
+
+``cost_analysis()`` FLOPs/bytes are for the SPMD-partitioned (= per-chip)
+module.  Collective bytes are parsed from the optimized HLO text: each
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+contributes its *result-shape* bytes, weighted by the ring-traffic factor of
+the op (all-reduce moves ~2x its payload per chip; the others ~1x).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_LINK_BW = 50e9           # bytes/s per link
+ICI_LINKS_PER_AXIS = 2       # bidirectional ring on one mesh axis
+ICI_BW = ICI_LINK_BW * ICI_LINKS_PER_AXIS
+HBM_BYTES = 16 * 1024**3     # 16 GiB HBM per chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# result shapes like `bf16[8,128,512]{2,1,0}` or tuple `(f32[4], bf16[8,16])`
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\]{},\d]+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# Opcodes whose operands/results cross HBM on TPU (everything else is assumed
+# fused into these by the TPU backend; XLA:CPU's raw "bytes accessed" counts
+# every unfused elementwise op and overstates HBM traffic by orders of
+# magnitude — both figures are recorded).
+_MAJOR_OPS = {
+    "dot", "convolution", "gather", "scatter", "sort", "reduce",
+    "reduce-window", "dynamic-slice", "dynamic-update-slice", "concatenate",
+    "fusion", "custom-call", "all-reduce", "all-gather", "reduce-scatter",
+    "all-to-all", "collective-permute", "copy",
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},])+)\s+([\w-]+)")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+
+
+def fusion_adjusted_bytes(hlo_text: str) -> float:
+    """Estimate per-chip HBM traffic assuming TPU-style fusion: sum operand +
+    result bytes over major (unfusable) ops only."""
+    shapes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if m:
+            shapes[m.group(1)] = _shape_bytes(m.group(2))
+    total = 0.0
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        base = op.split(".")[0]
+        if base.endswith("-start") or base.endswith("-done"):
+            base = base.rsplit("-", 1)[0]
+        if base not in _MAJOR_OPS:
+            continue
+        res_bytes = _shape_bytes(m.group(2))
+        arg_str = line[m.end():]
+        arg_bytes = sum(shapes.get(nm, 0) for nm in _OPERAND_RE.findall(arg_str))
+        total += res_bytes + arg_bytes
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_weighted: float = 0.0
+    bytes_raw: float = 0.0
+    count: int = 0
+    by_op: dict = field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum collective result bytes from optimized (or stable-) HLO text."""
+    stats = CollectiveStats()
+    seen_done: set[str] = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        # async pairs appear as -start/-done with identical shapes; count once
+        tag = f"{op}:{m.start()}"
+        if "-done(" in m.group(0):
+            continue  # the -start carries the payload shape
+        b = _shape_bytes(shape_str)
+        w = _COLLECTIVE_WEIGHT[op]
+        stats.bytes_raw += b
+        stats.bytes_weighted += b * w
+        stats.count += 1
+        agg = stats.by_op.setdefault(op, {"bytes": 0.0, "count": 0})
+        agg["bytes"] += b
+        agg["count"] += 1
+        _ = tag, seen_done
+    return stats
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_weighted: float) -> dict:
+    ct = flops_per_chip / PEAK_FLOPS
+    mt = bytes_per_chip / HBM_BW
+    xt = coll_bytes_weighted / ICI_BW
+    dominant = max(("compute", ct), ("memory", mt), ("collective", xt), key=lambda kv: kv[1])
+    total = max(ct, mt, xt)
+    return {
+        "compute_term_s": ct,
+        "memory_term_s": mt,
+        "collective_term_s": xt,
+        "dominant": dominant[0],
+        "step_time_lb_s": total,  # overlap roofline: max of the three
+    }
+
+
+# ---------------------------------------------------------------------------
+# Analytic MODEL_FLOPS (useful work) per cell — 6ND convention
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for train (3x fwd), 2*N_active per token for inference,
+    plus the attention quadratic term; embeddings excluded from N."""
+    n_active = cfg.n_active_params()
+    emb = cfg.vocab_size * cfg.d_model
+    n_body = n_active - emb - (0 if cfg.tie_embeddings else emb)
+    logits_per_tok = 2 * cfg.vocab_size * cfg.d_model
+
+    # attention layers
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+    elif cfg.family == "ssm":
+        n_attn = 0
+    elif cfg.enc_dec:
+        n_attn = cfg.n_enc_layers + 2 * cfg.n_layers
+    else:
+        n_attn = cfg.n_layers
+
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        tokens = B * S
+        # causal fwd attn flops per layer: 2 * B * S^2 * Hq * Dh  (qk + pv, /2 causal)
+        attn_fwd = 2.0 * B * S * S * cfg.n_heads * cfg.d_head * n_attn
+        mult = 3.0 if shape.kind == "train" else 1.0
+        body = 2.0 * n_body * tokens * mult
+        logits = logits_per_tok * tokens * (mult if shape.kind == "train" else 1.0)
+        return body + logits + attn_fwd * mult
+    # decode: one token per sequence against an S-long cache
+    tokens = B
+    attn = 4.0 * B * S * cfg.n_kv_heads * cfg.d_head * n_attn  # qk + pv over cache
+    return 2.0 * n_active * tokens + logits_per_tok * tokens + attn
+
+
+def _n_attn_layers(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    if cfg.family == "ssm":
+        return 0
+    if cfg.enc_dec:
+        return cfg.n_layers
+    return cfg.n_layers
+
+
+def model_bytes_min(cfg, shape) -> float:
+    """Realistic minimum HBM traffic per step (fused-TPU assumption).
+
+    train:   params bf16 fwd+bwd reads + grad write + optimizer state r/w
+             (~30 B/param) + activation streams: ~10 (B,S,M)-sized tensors
+             per layer per pass x 3 passes (fwd, remat re-fwd, bwd).
+    prefill: params once + 10-tensor activation stream x 1 pass.
+    decode:  active params once + KV/state cache read + MoE expert reads.
+    """
+    n_active = cfg.n_active_params()
+    tokens = shape.global_batch * shape.seq_len
+    layers = max(1, cfg.n_layers + (cfg.n_enc_layers if cfg.enc_dec else 0))
+    act_stream = 10.0 * 2.0 * cfg.d_model * layers  # bytes per token per pass
+
+    if shape.kind == "train":
+        pbytes = 30.0 * n_active
+        return pbytes + 3.0 * act_stream * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active + act_stream * tokens
+    # decode
+    B, S = shape.global_batch, shape.seq_len
+    pbytes = 2.0 * n_active
+    kv = 2.0 * B * S * cfg.n_kv_heads * cfg.d_head * _n_attn_layers(cfg) * 2
+    moe = 0.0
+    if cfg.moe is not None:
+        m = cfg.moe
+        touched = min(m.n_routed, B * m.top_k)
+        moe = (cfg.n_layers // m.every) * touched * 3.0 * cfg.d_model * m.d_expert * 2
+        pbytes = 2.0 * (n_active - cfg.n_active_params() + n_active)  # keep params term
+    if cfg.family in ("hybrid", "ssm"):
+        # recurrent state r/w per step
+        if cfg.mamba is not None:
+            d_in = cfg.mamba.expand * cfg.d_model
+            n_mamba = cfg.n_layers - _n_attn_layers(cfg)
+            kv += 2.0 * B * d_in * cfg.mamba.d_state * 4 * n_mamba
+        if cfg.xlstm is not None:
+            dh = int(cfg.xlstm.expand_m * cfg.d_model) // cfg.n_heads
+            kv += 2.0 * B * cfg.n_heads * dh * dh * 4 * (cfg.n_layers // 2)
+    return pbytes + kv + moe
+
+
+def model_coll_bytes_chip(cfg, shape, chips: int = 256, tp: int = 16) -> float:
+    """Analytic per-chip weighted collective bytes per step under the baseline
+    TP(model axis) x FSDP(data axis) rules — used when no dry-run record backs
+    a profile. Matches the measured structure: per-layer activation
+    all-reduces (x2 ring weight) + FSDP param all-gather/grad reduce-scatter."""
+    dp = max(1, chips // tp)
+    tokens = shape.global_batch * shape.seq_len
+    layers = max(1, cfg.n_layers + (cfg.n_enc_layers if cfg.enc_dec else 0))
+    if shape.kind == "train":
+        act = tokens // dp * cfg.d_model * 2            # one (B/dp, S, M) bf16
+        ar = 4.0 * layers * act * 2.0                   # 2 fwd + 2 bwd ARs, ring x2
+        fsdp = 3.0 * 2.0 * cfg.n_active_params() / tp   # AG fwd+bwd + RS grads (bf16)
+        return ar + fsdp
+    if shape.kind == "prefill":
+        act = tokens // dp * cfg.d_model * 2
+        return 2.0 * layers * act * 2.0
+    # decode: tiny activations, per-layer AR of (B, M)
+    act = shape.global_batch * cfg.d_model * 2
+    return 2.0 * layers * act * 2.0

@@ -1,0 +1,2 @@
+# Re-exports live in repro.models.model; import submodules directly to avoid
+# heavy transitive imports in tools that only need one block type.

@@ -1,0 +1,127 @@
+"""GQA attention: train/prefill (flash) and decode (KV-cache) paths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.models.layers import apply_rope, dense_init, pdtype, qk_norm, zeros_init
+from repro.sharding import constrain
+
+
+def init_attn(key, cfg, cross: bool = False) -> dict:
+    """cross=True: k/v projections read the encoder stream."""
+    dt = pdtype(cfg)
+    M, Q, KV = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (M, Q), dt),
+        "wk": dense_init(ks[1], (M, KV), dt),
+        "wv": dense_init(ks[2], (M, KV), dt),
+        "wo": dense_init(ks[3], (Q, M), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = zeros_init(None, (Q,), dt)
+        p["bk"] = zeros_init(None, (KV,), dt)
+        p["bv"] = zeros_init(None, (KV,), dt)
+    return p
+
+
+def _project_q(p, x, cfg):
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    return q.reshape(*x.shape[:-1], cfg.n_heads, cfg.d_head)
+
+
+def _project_kv(p, x, cfg):
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    shape = (*x.shape[:-1], cfg.n_kv_heads, cfg.d_head)
+    return k.reshape(shape), v.reshape(shape)
+
+
+def attn_apply(
+    p: dict,
+    x: jax.Array,                  # (B, S, M)
+    cfg,
+    positions: jax.Array,          # (B, S) or (S,)
+    *,
+    causal: bool = True,
+    kv_src: jax.Array | None = None,   # cross-attention source (B, Skv, M)
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    B, S, _ = x.shape
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, kv_src if kv_src is not None else x, cfg)
+    if kv_src is None and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.family == "vlm":  # Chameleon QK-norm
+        q, k = qk_norm(q), qk_norm(k)
+    # GQA with TP > n_kv_heads: kv stays head-replicated (projections are
+    # replicated too) — attention then needs no collective at all.
+    kv_axis = None if cfg.n_kv_heads < cfg.n_heads else "act_kv_heads"
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("act_batch", "act_seq", kv_axis, None))
+    v = constrain(v, ("act_batch", "act_seq", kv_axis, None))
+    out = flash_attention(q, k, v, causal=causal, impl=cfg.attn_impl,
+                          unroll=cfg.unroll_layers)
+    out = out.reshape(B, S, cfg.q_dim)
+    out = constrain(out, ("act_batch", "act_seq", "act_heads"))
+    return out @ p["wo"]
+
+
+def init_kv_cache(cfg, batch: int, max_len: int) -> dict:
+    dt = pdtype(cfg)
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def attn_decode(
+    p: dict,
+    x_t: jax.Array,                # (B, M) current-token activations
+    cache: dict,                   # {"k","v"}: (B, Smax, Hkv, D)
+    pos: jax.Array,                # (B,) int32 write positions (= lengths so far)
+    cfg,
+    *,
+    cross_kv: dict | None = None,  # precomputed {"k","v","len"} for cross-attn
+) -> tuple[jax.Array, dict]:
+    B, _ = x_t.shape
+    q = _project_q(p, x_t[:, None, :], cfg)[:, 0]          # (B, Hq, D)
+    if cross_kv is not None:
+        if cfg.family == "vlm":
+            q = qk_norm(q)
+        out = decode_attention(
+            q, cross_kv["k"], cross_kv["v"], cross_kv["len"], impl=cfg.attn_impl
+        )
+        return out.reshape(B, cfg.q_dim) @ p["wo"], cache
+
+    k_t, v_t = _project_kv(p, x_t[:, None, :], cfg)
+    k_t, v_t = k_t[:, 0], v_t[:, 0]                        # (B, Hkv, D)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+        k_t = apply_rope(k_t[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+    if cfg.family == "vlm":
+        q, k_t = qk_norm(q), qk_norm(k_t)
+
+    b_idx = jnp.arange(B)
+    new_cache = {
+        "k": cache["k"].at[b_idx, pos].set(k_t.astype(cache["k"].dtype)),
+        "v": cache["v"].at[b_idx, pos].set(v_t.astype(cache["v"].dtype)),
+    }
+    out = decode_attention(
+        q, new_cache["k"], new_cache["v"], pos + 1, impl=cfg.attn_impl
+    )
+    out = constrain(out, ("act_batch", "act_heads", None))
+    return out.reshape(B, cfg.q_dim) @ p["wo"], new_cache
+
+
+def precompute_cross_kv(p: dict, enc_out: jax.Array, enc_lens: jax.Array, cfg) -> dict:
+    """Encoder-side K/V for cross-attention, computed once per session."""
+    k, v = _project_kv(p, enc_out, cfg)
+    return {"k": k, "v": v, "len": enc_lens}

@@ -1,0 +1,116 @@
+"""Encoder-decoder backbone (seamless-m4t): stub frontend provides precomputed
+frame embeddings; encoder is bidirectional, decoder has self + cross attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attn_apply,
+    attn_decode,
+    init_attn,
+    init_kv_cache,
+    precompute_cross_kv,
+)
+from repro.models.layers import ones_init, rmsnorm
+from repro.models.mlp import gelu_mlp_apply, init_gelu_mlp
+from repro.models.transformer import ZERO_AUX, _maybe_remat, scan_or_loop
+from repro.sharding import constrain
+
+
+def init_enc_layer(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": ones_init(None, (cfg.d_model,), jnp.float32),
+        "attn": init_attn(k1, cfg),
+        "ln2": ones_init(None, (cfg.d_model,), jnp.float32),
+        "mlp": init_gelu_mlp(k2, cfg),
+    }
+
+
+def enc_layer_apply(p, x, cfg, positions):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn_apply(p["attn"], h, cfg, positions, causal=False)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + gelu_mlp_apply(p["mlp"], h)
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def init_dec_layer(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": ones_init(None, (cfg.d_model,), jnp.float32),
+        "attn": init_attn(k1, cfg),
+        "ln_x": ones_init(None, (cfg.d_model,), jnp.float32),
+        "xattn": init_attn(k2, cfg, cross=True),
+        "ln2": ones_init(None, (cfg.d_model,), jnp.float32),
+        "mlp": init_gelu_mlp(k3, cfg),
+    }
+
+
+def dec_layer_apply(p, x, enc_out, cfg, positions):
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn_apply(p["attn"], h, cfg, positions, causal=True)
+    h = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+    x = x + attn_apply(p["xattn"], h, cfg, positions, causal=False, kv_src=enc_out)
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    x = x + gelu_mlp_apply(p["mlp"], h)
+    return constrain(x, ("act_batch", "act_seq", "act_embed"))
+
+
+def init_encdec_stacks(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: init_enc_layer(k, cfg))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: init_dec_layer(k, cfg))(dec_keys),
+    }
+
+
+def encoder_apply(stacked, frames, cfg, positions):
+    def body(x, layer_p):
+        return enc_layer_apply(layer_p, x, cfg, positions), None
+
+    fn = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, _ = scan_or_loop(fn, frames, stacked, cfg)
+    return x
+
+
+def decoder_apply(stacked, x, enc_out, cfg, positions):
+    def body(x, layer_p):
+        return dec_layer_apply(layer_p, x, enc_out, cfg, positions), None
+
+    fn = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, _ = scan_or_loop(fn, x, stacked, cfg)
+    return x, dict(ZERO_AUX)
+
+
+def init_encdec_cache(params, cfg, batch: int, max_len: int, enc_out=None, enc_lens=None) -> dict:
+    """Self-attn KV cache + cross-attn KV (precomputed from encoder output)."""
+    self_one = init_kv_cache(cfg, batch, max_len)
+    self_cache = jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), self_one)
+    if enc_out is None:  # abstract/zeros path (dry-run spec building)
+        enc_out = jnp.zeros((batch, cfg.enc_len, cfg.d_model), self_one["k"].dtype)
+        enc_lens = jnp.full((batch,), cfg.enc_len, jnp.int32)
+    cross = jax.vmap(
+        lambda lp: precompute_cross_kv(lp["xattn"], enc_out, enc_lens, cfg)
+    )(params["dec_layers"])
+    return {"self": self_cache, "cross": cross}
+
+
+def decoder_decode(stacked, x_t, cache, pos, cfg):
+    def body(x_t, inputs):
+        layer_p, self_cache, cross_kv = inputs
+        h = rmsnorm(x_t, layer_p["ln1"], cfg.norm_eps)
+        a, new_self = attn_decode(layer_p["attn"], h, self_cache, pos, cfg)
+        x_t = x_t + a
+        h = rmsnorm(x_t, layer_p["ln_x"], cfg.norm_eps)
+        a, _ = attn_decode(layer_p["xattn"], h, self_cache, pos, cfg, cross_kv=cross_kv)
+        x_t = x_t + a
+        h = rmsnorm(x_t, layer_p["ln2"], cfg.norm_eps)
+        x_t = x_t + gelu_mlp_apply(layer_p["mlp"], h[:, None, :])[:, 0]
+        return x_t, new_self
+
+    x_t, new_self = scan_or_loop(body, x_t, (stacked, cache["self"], cache["cross"]), cfg)
+    return x_t, {"self": new_self, "cross": cache["cross"]}

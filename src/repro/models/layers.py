@@ -1,0 +1,111 @@
+"""Shared layer primitives: init, norms, rotary embeddings, numerics policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pdtype(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (explicit keys; params are plain dict pytrees)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jax.Array:
+    """Truncated-normal fan-in init (LeCun-ish, stddev 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis] if shape else 1
+    std = 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm: f32 only inside the variance *reduction* (which fuses on TPU
+    and matches the Pallas kernel); the normalizing multiply stays in the
+    input dtype.  A full-tensor f32 upcast here poisons the whole residual
+    stream to f32 under GSPMD (f32 activation all-reduces, 2x HBM)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def qk_norm(x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS normalization of q/k (Chameleon-style stability)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> jax.Array:
+    half = d_head // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over seq. x: (B,S,C); w: (K,C)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # unrolled taps (K is tiny, e.g. 4): avoids conv lowering differences
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array | None):
+    """One decode step of causal depthwise conv.
+
+    x_t: (B, C); conv_state: (B, K-1, C) past inputs. Returns (y_t, new_state).
+    """
+    k = w.shape[0]
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        y = y + b
+    return y, window[:, 1:, :] if k > 1 else conv_state
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap

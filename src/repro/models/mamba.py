@@ -1,0 +1,132 @@
+"""Mamba-1 selective SSM block (Jamba's sequence mixer).
+
+TPU adaptation note (DESIGN.md §2): the CUDA selective-scan kernel fuses the
+recurrence in SRAM; the TPU-native equivalent is a *chunked* scan — a
+`lax.scan` over sequence chunks (carry = (B, d_inner, N) state) with a
+parallel `associative_scan` inside each chunk, so the (B, chunk, d_inner, N)
+intermediate is bounded by the chunk length instead of the full sequence.
+Decode is the O(1)/token recurrent step.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, conv1d_step, dense_init, pdtype
+from repro.sharding import constrain
+
+
+def _dt_rank(cfg) -> int:
+    return cfg.mamba.dt_rank or math.ceil(cfg.d_model / 16)
+
+
+def d_inner(cfg) -> int:
+    return cfg.mamba.expand * cfg.d_model
+
+
+def init_mamba(key, cfg) -> dict:
+    mc = cfg.mamba
+    dt = pdtype(cfg)
+    M, D, N, R = cfg.d_model, d_inner(cfg), mc.d_state, _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    # dt bias: softplus(b_dt) ~ Uniform[1e-3, 0.1]  (mamba init)
+    u = jax.random.uniform(ks[4], (D,), jnp.float32, 1e-3, 0.1)
+    b_dt = u + jnp.log(-jnp.expm1(-u))  # inverse softplus
+    return {
+        "w_in": dense_init(ks[0], (M, 2 * D), dt),
+        "conv_w": dense_init(ks[1], (mc.d_conv, D), dt),
+        "conv_b": jnp.zeros((D,), dt),
+        "w_x": dense_init(ks[2], (D, R + 2 * N), dt),
+        "w_dt": dense_init(ks[3], (R, D), jnp.float32) * (R ** -0.5),
+        "b_dt": b_dt,
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (D, N))),
+        "D": jnp.ones((D,), jnp.float32),
+        "w_out": dense_init(ks[5], (D, M), dt),
+    }
+
+
+def _ssm_inputs(p: dict, x1: jax.Array, cfg):
+    """x1: (B, S, D) post-conv activations -> (dt, Bs, Cs)."""
+    N, R = cfg.mamba.d_state, _dt_rank(cfg)
+    xdb = x1 @ p["w_x"]                                    # (B, S, R+2N)
+    dt_r, Bs, Cs = jnp.split(xdb.astype(jnp.float32), [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["w_dt"] + p["b_dt"])     # (B, S, D)
+    return dt, Bs, Cs
+
+
+def mamba_apply(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Training/prefill forward. x: (B, S, M) -> (B, S, M)."""
+    mc = cfg.mamba
+    B, S, M = x.shape
+    N = mc.d_state
+    chunk = min(mc.chunk, S)
+
+    xz = x @ p["w_in"]
+    x1, z = jnp.split(xz, 2, axis=-1)                      # (B, S, D)
+    x1 = constrain(x1, ("act_batch", "act_seq", "act_mlp"))
+    x1 = jax.nn.silu(causal_conv1d(x1, p["conv_w"], p["conv_b"]))
+
+    dt, Bs, Cs = _ssm_inputs(p, x1, cfg)
+    A = -jnp.exp(p["A_log"])                               # (D, N)
+
+    pad = (-S) % chunk
+    def pad_s(a):
+        return jnp.pad(a, ((0, 0), (0, pad), (0, 0))) if pad else a
+    dt_p, Bs_p, Cs_p, x1_p = pad_s(dt), pad_s(Bs), pad_s(Cs), pad_s(x1.astype(jnp.float32))
+    n_chunks = (S + pad) // chunk
+
+    def reshape_c(a):
+        return a.reshape(B, n_chunks, chunk, a.shape[-1]).swapaxes(0, 1)
+
+    dt_c, Bs_c, Cs_c, x1_c = map(reshape_c, (dt_p, Bs_p, Cs_p, x1_p))
+
+    def chunk_step(h, inputs):
+        dtk, Bk, Ck, xk = inputs                           # (B, chunk, ...)
+        da = jnp.exp(dtk[..., None] * A)                   # (B, c, D, N)
+        inp = (dtk * xk)[..., None] * Bk[:, :, None, :]    # (B, c, D, N)
+
+        def combine(a, b):
+            a_d, a_i = a
+            b_d, b_i = b
+            return a_d * b_d, b_d * a_i + b_i
+
+        decay_cum, h_intra = jax.lax.associative_scan(combine, (da, inp), axis=1)
+        h_all = h_intra + decay_cum * h[:, None]           # (B, c, D, N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, Ck)
+        return h_all[:, -1], y
+
+    from repro.models.transformer import scan_or_loop
+
+    h0 = jnp.zeros((B, d_inner(cfg), N), jnp.float32)
+    _, ys = scan_or_loop(chunk_step, h0, (dt_c, Bs_c, Cs_c, x1_c), cfg)
+    y = ys.swapaxes(0, 1).reshape(B, n_chunks * chunk, -1)[:, :S]
+    y = y + p["D"] * x1.astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out
+
+
+def init_mamba_state(cfg, batch: int) -> dict:
+    D, N, K = d_inner(cfg), cfg.mamba.d_state, cfg.mamba.d_conv
+    return {
+        "h": jnp.zeros((batch, D, N), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, D), pdtype(cfg)),
+    }
+
+
+def mamba_decode(p: dict, x_t: jax.Array, state: dict, cfg) -> tuple[jax.Array, dict]:
+    """One-token recurrent step. x_t: (B, M)."""
+    xz = x_t @ p["w_in"]
+    x1, z = jnp.split(xz, 2, axis=-1)                      # (B, D)
+    x1, conv_state = conv1d_step(x1, state["conv"], p["conv_w"], p["conv_b"])
+    x1 = jax.nn.silu(x1)
+
+    dt, Bs, Cs = _ssm_inputs(p, x1[:, None, :], cfg)
+    dt, Bs, Cs = dt[:, 0], Bs[:, 0], Cs[:, 0]              # (B, D), (B, N), (B, N)
+    A = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * A)                        # (B, D, N)
+    h = da * state["h"] + (dt * x1.astype(jnp.float32))[..., None] * Bs[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cs) + p["D"] * x1.astype(jnp.float32)
+    out = (y.astype(x_t.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,42 @@
+"""Dense MLP blocks: SwiGLU (LM family) and GELU (enc-dec)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, pdtype
+from repro.sharding import constrain
+
+
+def init_swiglu(key, cfg, d_ff: int | None = None) -> dict:
+    dt = pdtype(cfg)
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(ks[0], (cfg.d_model, F), dt),
+        "wu": dense_init(ks[1], (cfg.d_model, F), dt),
+        "wd": dense_init(ks[2], (F, cfg.d_model), dt),
+    }
+
+
+def swiglu_apply(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["wg"])
+    u = x @ p["wu"]
+    h = constrain(g * u, ("act_batch", "act_seq", "act_mlp"))
+    return h @ p["wd"]
+
+
+def init_gelu_mlp(key, cfg, d_ff: int | None = None) -> dict:
+    dt = pdtype(cfg)
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "wu": dense_init(ks[0], (cfg.d_model, F), dt),
+        "wd": dense_init(ks[1], (F, cfg.d_model), dt),
+    }
+
+
+def gelu_mlp_apply(p: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ p["wu"], approximate=True)
+    h = constrain(h, ("act_batch", "act_seq", "act_mlp"))
+    return h @ p["wd"]

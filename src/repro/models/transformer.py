@@ -1,0 +1,295 @@
+"""Decoder-only stacks: dense / MoE / hybrid (Jamba) / xLSTM assemblies.
+
+All stacks scan over *homogeneous* layer groups (params stacked via vmap'd
+init) so the HLO is O(1) in depth — critical for 512-virtual-device dry-run
+compile times — with optional per-block remat (`cfg.remat == "block"`).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import attn_apply, attn_decode, init_attn, init_kv_cache
+from repro.models.layers import ones_init, pdtype, rmsnorm
+from repro.models.mamba import init_mamba, init_mamba_state, mamba_apply, mamba_decode
+from repro.models.mlp import init_swiglu, swiglu_apply
+from repro.models.moe import init_moe, moe_apply, moe_decode
+from repro.models.xlstm import (
+    init_mlstm,
+    init_mlstm_state,
+    init_slstm,
+    init_slstm_state,
+    mlstm_apply,
+    mlstm_decode,
+    slstm_apply,
+    slstm_decode,
+)
+from repro.sharding import constrain
+
+ZERO_AUX = {"moe_aux": jnp.float32(0), "moe_z": jnp.float32(0), "moe_drop_frac": jnp.float32(0)}
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat == "block" else fn
+
+
+def scan_or_loop(body, carry, xs, cfg):
+    """lax.scan, or a static python loop when cfg.unroll_layers (dry-run cost
+    extraction: scan bodies are counted once by XLA cost analysis)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(n):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, out = body(carry, x_i)
+        outs.append(out)
+    if outs and outs[0] is not None:
+        stacked = jax.tree.map(lambda *o: jnp.stack(o), *outs)
+    else:
+        stacked = None
+    return carry, stacked
+
+
+def _add_aux(a: dict, b: dict) -> dict:
+    return {k: a[k] + b[k] for k in a}
+
+
+# ===========================================================================
+# Dense / MoE decoder layers (homogeneous scan)
+# ===========================================================================
+
+def init_decoder_layer(key, cfg) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "ln1": ones_init(None, (cfg.d_model,), jnp.float32),
+        "attn": init_attn(ks[0], cfg),
+        "ln2": ones_init(None, (cfg.d_model,), jnp.float32),
+    }
+    if cfg.moe is not None and cfg.moe.every == 1:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = init_swiglu(ks[2], cfg)
+    return p
+
+
+def decoder_layer_apply(p, x, cfg, positions):
+    aux = dict(ZERO_AUX)
+    h = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    x = x + attn_apply(p["attn"], h, cfg, positions)
+    x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    h = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe_apply(p["moe"], h, cfg)
+    else:
+        y = swiglu_apply(p["mlp"], h)
+    x = x + y
+    return constrain(x, ("act_batch", "act_seq", "act_embed")), aux
+
+
+def decoder_layer_decode(p, x_t, cache, pos, cfg):
+    h = rmsnorm(x_t, p["ln1"], cfg.norm_eps)
+    a, cache = attn_decode(p["attn"], h, cache, pos, cfg)
+    x_t = x_t + a
+    h = rmsnorm(x_t, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y = moe_decode(p["moe"], h, cfg)
+    else:
+        y = swiglu_apply(p["mlp"], h[:, None, :])[:, 0]
+    return x_t + y, cache
+
+
+def init_dense_stack(key, cfg) -> dict:
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(lambda k: init_decoder_layer(k, cfg))(keys)
+
+
+def dense_stack_apply(stacked, x, cfg, positions):
+    def body(carry, layer_p):
+        x, aux = carry
+        x, a = decoder_layer_apply(layer_p, x, cfg, positions)
+        return (x, _add_aux(aux, a)), None
+
+    (x, aux), _ = scan_or_loop(_maybe_remat(body, cfg), (x, dict(ZERO_AUX)), stacked, cfg)
+    return x, aux
+
+
+def dense_stack_decode(stacked, x_t, cache, pos, cfg):
+    def body(x_t, inputs):
+        layer_p, layer_cache = inputs
+        x_t, new_cache = decoder_layer_decode(layer_p, x_t, layer_cache, pos, cfg)
+        return x_t, new_cache
+
+    x_t, new_cache = scan_or_loop(body, x_t, (stacked, cache), cfg)
+    return x_t, new_cache
+
+
+def init_dense_cache(cfg, batch: int, max_len: int) -> dict:
+    one = init_kv_cache(cfg, batch, max_len)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one)
+
+
+# ===========================================================================
+# Jamba hybrid super-blocks (attn_every layers per block, 1 attention inside)
+# ===========================================================================
+
+def _jamba_layout(cfg):
+    per = cfg.attn_every                      # sub-layers per super-block
+    attn_pos = per // 2                       # attention at the middle slot
+    n_blocks = cfg.n_layers // per
+    moe_every = cfg.moe.every if cfg.moe else 0
+    return per, attn_pos, n_blocks, moe_every
+
+
+def init_jamba_block(key, cfg) -> dict:
+    per, attn_pos, _, moe_every = _jamba_layout(cfg)
+    ks = jax.random.split(key, 2 * per)
+    sub = []
+    for i in range(per):
+        kp = ks[2 * i], ks[2 * i + 1]
+        lp = {"ln1": ones_init(None, (cfg.d_model,), jnp.float32),
+              "ln2": ones_init(None, (cfg.d_model,), jnp.float32)}
+        if i == attn_pos:
+            lp["attn"] = init_attn(kp[0], cfg)
+        else:
+            lp["mamba"] = init_mamba(kp[0], cfg)
+        if moe_every and i % moe_every == 1:
+            lp["moe"] = init_moe(kp[1], cfg)
+        else:
+            lp["mlp"] = init_swiglu(kp[1], cfg)
+        sub.append(lp)
+    return {f"sub{i}": sp for i, sp in enumerate(sub)}
+
+
+def jamba_block_apply(p, x, cfg, positions):
+    per, attn_pos, _, _ = _jamba_layout(cfg)
+    aux = dict(ZERO_AUX)
+    for i in range(per):
+        lp = p[f"sub{i}"]
+        h = rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        if "attn" in lp:
+            x = x + attn_apply(lp["attn"], h, cfg, positions)
+        else:
+            x = x + mamba_apply(lp["mamba"], h, cfg)
+        h = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            y, a = moe_apply(lp["moe"], h, cfg)
+            aux = _add_aux(aux, a)
+        else:
+            y = swiglu_apply(lp["mlp"], h)
+        x = x + y
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+    return x, aux
+
+
+def init_jamba_stack(key, cfg) -> dict:
+    _, _, n_blocks, _ = _jamba_layout(cfg)
+    keys = jax.random.split(key, n_blocks)
+    return jax.vmap(lambda k: init_jamba_block(k, cfg))(keys)
+
+
+def jamba_stack_apply(stacked, x, cfg, positions):
+    def body(carry, block_p):
+        x, aux = carry
+        x, a = jamba_block_apply(block_p, x, cfg, positions)
+        return (x, _add_aux(aux, a)), None
+
+    (x, aux), _ = scan_or_loop(_maybe_remat(body, cfg), (x, dict(ZERO_AUX)), stacked, cfg)
+    return x, aux
+
+
+def init_jamba_cache(cfg, batch: int, max_len: int) -> dict:
+    per, attn_pos, n_blocks, _ = _jamba_layout(cfg)
+    attn = init_kv_cache(cfg, batch, max_len)
+    mamba_states = init_mamba_state(cfg, batch)
+    return {
+        "attn": jax.tree.map(lambda a: jnp.broadcast_to(a, (n_blocks, *a.shape)), attn),
+        "mamba": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_blocks, per - 1, *a.shape)), mamba_states
+        ),
+    }
+
+
+def jamba_block_decode(p, x_t, block_cache, pos, cfg):
+    per, attn_pos, _, _ = _jamba_layout(cfg)
+    new_attn = block_cache["attn"]
+    new_mamba = []
+    mi = 0
+    for i in range(per):
+        lp = p[f"sub{i}"]
+        h = rmsnorm(x_t, lp["ln1"], cfg.norm_eps)
+        if "attn" in lp:
+            a, new_attn = attn_decode(lp["attn"], h, block_cache["attn"], pos, cfg)
+            x_t = x_t + a
+        else:
+            st = jax.tree.map(lambda s: s[mi], block_cache["mamba"])
+            a, st = mamba_decode(lp["mamba"], h, st, cfg)
+            new_mamba.append(st)
+            x_t = x_t + a
+            mi += 1
+        h = rmsnorm(x_t, lp["ln2"], cfg.norm_eps)
+        if "moe" in lp:
+            y = moe_decode(lp["moe"], h, cfg)
+        else:
+            y = swiglu_apply(lp["mlp"], h[:, None, :])[:, 0]
+        x_t = x_t + y
+    stacked_mamba = jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba)
+    return x_t, {"attn": new_attn, "mamba": stacked_mamba}
+
+
+def jamba_stack_decode(stacked, x_t, cache, pos, cfg):
+    def body(x_t, inputs):
+        block_p, block_cache = inputs
+        return jamba_block_decode(block_p, x_t, block_cache, pos, cfg)
+
+    return scan_or_loop(body, x_t, (stacked, cache), cfg)
+
+
+# ===========================================================================
+# xLSTM pair stack (pattern "ms": one mLSTM + one sLSTM per scanned pair)
+# ===========================================================================
+
+def _xlstm_pairs(cfg) -> int:
+    assert cfg.xlstm.pattern == "ms"
+    return cfg.n_layers // 2
+
+
+def init_xlstm_pair(key, cfg) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"mlstm": init_mlstm(k1, cfg), "slstm": init_slstm(k2, cfg)}
+
+
+def init_xlstm_stack(key, cfg) -> dict:
+    keys = jax.random.split(key, _xlstm_pairs(cfg))
+    return jax.vmap(lambda k: init_xlstm_pair(k, cfg))(keys)
+
+
+def xlstm_stack_apply(stacked, x, cfg, positions=None):
+    def body(carry, pair_p):
+        x, aux = carry
+        x = mlstm_apply(pair_p["mlstm"], x, cfg)
+        x = slstm_apply(pair_p["slstm"], x, cfg)
+        return (x, aux), None
+
+    (x, aux), _ = scan_or_loop(_maybe_remat(body, cfg), (x, dict(ZERO_AUX)), stacked, cfg)
+    return x, aux
+
+
+def init_xlstm_cache(cfg, batch: int, max_len: int = 0) -> dict:
+    n = _xlstm_pairs(cfg)
+    m = init_mlstm_state(cfg, batch)
+    s = init_slstm_state(cfg, batch)
+    return {
+        "mlstm": jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)), m),
+        "slstm": jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)), s),
+    }
+
+
+def xlstm_stack_decode(stacked, x_t, cache, pos, cfg):
+    def body(x_t, inputs):
+        pair_p, pair_cache = inputs
+        x_t, m_st = mlstm_decode(pair_p["mlstm"], x_t, pair_cache["mlstm"], cfg)
+        x_t, s_st = slstm_decode(pair_p["slstm"], x_t, pair_cache["slstm"], cfg)
+        return x_t, {"mlstm": m_st, "slstm": s_st}
+
+    return scan_or_loop(body, x_t, (stacked, cache), cfg)

@@ -1,0 +1,312 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, strictly sequential).
+
+The mLSTM training path uses a *chunked* parallel form (the TPU analogue of
+the fused CUDA recurrence): a lax.scan over sequence chunks carrying the
+stabilized (C, n, m) state, with an intra-chunk quadratic gate matrix — the
+same trick as chunked gated linear attention. A step-by-step sequential
+reference (`mlstm_sequential`) backs the property tests.
+
+Math (stabilized, per head; b = intra-chunk cumsum of log-f, g = cummax of
+(log-i − b)):
+    m_t   = b_t + M_t,  M_t = max(m_0, g_t)
+    num_t = Σ_{s≤t} exp(li_s − b_s − M_t) (q_t·k_s) v_s + exp(m_0 − M_t) q_t C_0
+    den_t = Σ_{s≤t} exp(li_s − b_s − M_t) (q_t·k_s)     + exp(m_0 − M_t) q_t n_0
+    h_t   = o_t ⊙ num_t / max(|den_t|, exp(−m_t))
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import causal_conv1d, conv1d_step, dense_init, pdtype, rmsnorm
+from repro.sharding import constrain
+
+NEG = -1e30
+
+
+def m_inner(cfg) -> int:
+    return int(cfg.xlstm.expand_m * cfg.d_model)
+
+
+def s_ff(cfg) -> int:
+    return int(round(cfg.xlstm.proj_factor_s * cfg.d_model))
+
+
+# ===========================================================================
+# mLSTM block
+# ===========================================================================
+
+def init_mlstm(key, cfg) -> dict:
+    dt = pdtype(cfg)
+    M, D, H = cfg.d_model, m_inner(cfg), cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((M,), jnp.float32),
+        "w_up": dense_init(ks[0], (M, 2 * D), dt),
+        "conv_w": dense_init(ks[1], (cfg.xlstm.d_conv, D), dt),
+        "conv_b": jnp.zeros((D,), dt),
+        "wq": dense_init(ks[2], (D, D), dt),
+        "wk": dense_init(ks[3], (D, D), dt),
+        "wv": dense_init(ks[4], (D, D), dt),
+        "w_gates": dense_init(ks[5], (D, 2 * H), jnp.float32),  # i, f pre-activations
+        "b_gates": jnp.concatenate([jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]),
+        "onorm": jnp.ones((D,), jnp.float32),                   # post-memory groupnorm scale
+        "w_down": dense_init(ks[6], (D, M), dt),
+    }
+
+
+def _mlstm_qkv_gates(p, x, cfg):
+    """x: (B, S, M) -> q,k,v (B,S,H,dh), gates li/lf (B,S,H), z (B,S,D)."""
+    H = cfg.n_heads
+    D = m_inner(cfg)
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)                      # (B,S,D)
+    c = jax.nn.silu(causal_conv1d(xm, p["conv_w"], p["conv_b"]))
+    q = (c @ p["wq"]).reshape(*c.shape[:-1], H, D // H)
+    k = (c @ p["wk"]).reshape(*c.shape[:-1], H, D // H) * (D // H) ** -0.5
+    v = (xm @ p["wv"]).reshape(*xm.shape[:-1], H, D // H)
+    gates = c.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    li, lf_pre = jnp.split(gates, 2, axis=-1)              # (B,S,H)
+    lf = jax.nn.log_sigmoid(lf_pre)
+    return q, k, v, li, lf, z
+
+
+def _mlstm_finish(p, h, z, x, cfg):
+    B, S = x.shape[:2]
+    h = h.reshape(B, S, -1)
+    h = rmsnorm(h, p["onorm"], cfg.norm_eps)               # per the xLSTM block's GN
+    return x + (h.astype(x.dtype) * jax.nn.silu(z)) @ p["w_down"]
+
+
+def mlstm_apply(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Chunk-parallel mLSTM forward. x: (B, S, M)."""
+    B, S, M = x.shape
+    H = cfg.n_heads
+    dh = m_inner(cfg) // H
+    chunk = min(cfg.xlstm.chunk, S)
+    q, k, v, li, lf, z = _mlstm_qkv_gates(p, x, cfg)
+
+    pad = (-S) % chunk
+    def pad_s(a):
+        widths = [(0, 0)] * a.ndim
+        widths[1] = (0, pad)
+        return jnp.pad(a, widths) if pad else a
+    qp, kp, vp = map(pad_s, (q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)))
+    lip = pad_s(li)
+    lfp = pad_s(lf)
+    if pad:  # padded steps: i = -inf (no contribution), f = 0 (identity decay)
+        mask = (jnp.arange(S + pad) < S)[None, :, None]
+        lip = jnp.where(mask, lip, NEG)
+        lfp = jnp.where(mask, lfp, 0.0)
+    n_chunks = (S + pad) // chunk
+
+    def rs(a):  # (B, S, H, ...) -> (n_chunks, B, chunk, H, ...)
+        return a.reshape(B, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lic, lfc = map(rs, (qp, kp, vp, lip, lfp))
+
+    def chunk_step(carry, inputs):
+        C0, n0, m0 = carry                                 # (B,H,dh,dh), (B,H,dh), (B,H)
+        qk_, kk_, vk_, lik, lfk = inputs                   # (B,c,H,...)
+        b = jnp.cumsum(lfk, axis=1)                        # (B,c,H)
+        a = lik - b                                        # (B,c,H)
+        g = jax.lax.cummax(a, axis=1)
+        Mt = jnp.maximum(m0[:, None], g)                   # (B,c,H)
+        m_t = b + Mt
+
+        # intra-chunk gate matrix: D[t,s] = exp(a_s - M_t) for s<=t
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        Dmat = jnp.exp(jnp.where(tri[None, :, :, None], a[:, None] - Mt[:, :, None], NEG))
+        # scores
+        s = jnp.einsum("bthd,bshd->btsh", qk_, kk_)        # (B,c,c,H)
+        w = s * Dmat
+        num_intra = jnp.einsum("btsh,bshd->bthd", w, vk_)
+        den_intra = jnp.sum(w, axis=2)                     # (B,c,H) -- Σ_s w[t,s]
+        carry_w = jnp.exp(m0[:, None] - Mt)                # (B,c,H)
+        qC = jnp.einsum("bthd,bhde->bthe", qk_, C0)
+        qn = jnp.einsum("bthd,bhd->bth", qk_, n0)
+        num = num_intra + carry_w[..., None] * qC
+        den = den_intra + carry_w * qn
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+        # carry to next chunk (reference stabilizer m_new = m at chunk end)
+        M_end = jnp.maximum(m0, g[:, -1])                  # (B,H)
+        kv = jnp.einsum("bshd,bshe,bsh->bhde", kk_, vk_, jnp.exp(a - M_end[:, None]))
+        ksum = jnp.einsum("bshd,bsh->bhd", kk_, jnp.exp(a - M_end[:, None]))
+        decay0 = jnp.exp(m0 - M_end)                       # (B,H)
+        C_new = decay0[..., None, None] * C0 + kv
+        n_new = decay0[..., None] * n0 + ksum
+        m_new = b[:, -1] + M_end
+        return (C_new, n_new, m_new), h
+
+    from repro.models.transformer import scan_or_loop
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), NEG, jnp.float32)
+    _, hs = scan_or_loop(chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc), cfg)
+    h = hs.swapaxes(0, 1).reshape(B, n_chunks * chunk, H, dh)[:, :S]
+    return _mlstm_finish(p, h, z, x, cfg)
+
+
+def mlstm_sequential(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Step-by-step oracle for the chunked form (tests)."""
+    B, S, M = x.shape
+    H = cfg.n_heads
+    dh = m_inner(cfg) // H
+    q, k, v, li, lf, z = _mlstm_qkv_gates(p, x, cfg)
+    q, k, v = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+
+    def step(carry, inputs):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = inputs                      # (B,H,dh), (B,H)
+        m_new = jnp.maximum(lft + m, lit)
+        fp = jnp.exp(lft + m - m_new)
+        ip = jnp.exp(lit - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (kt[..., :, None] * vt[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.einsum("bhd,bhd->bh", qt, n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), NEG, jnp.float32)
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          li.swapaxes(0, 1), lf.swapaxes(0, 1))
+    _, hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1)                                  # (B,S,H,dh)
+    return _mlstm_finish(p, h, z, x, cfg)
+
+
+def init_mlstm_state(cfg, batch: int) -> dict:
+    H, dh = cfg.n_heads, m_inner(cfg) // cfg.n_heads
+    K = cfg.xlstm.d_conv
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), NEG, jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, m_inner(cfg)), pdtype(cfg)),
+    }
+
+
+def mlstm_decode(p: dict, x_t: jax.Array, state: dict, cfg) -> tuple[jax.Array, dict]:
+    B, M = x_t.shape
+    H = cfg.n_heads
+    dh = m_inner(cfg) // H
+    xn = rmsnorm(x_t, p["norm"], cfg.norm_eps)
+    up = xn @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    c, conv_state = conv1d_step(xm, state["conv"], p["conv_w"], p["conv_b"])
+    c = jax.nn.silu(c)
+    q = (c @ p["wq"]).reshape(B, H, dh).astype(jnp.float32)
+    k = ((c @ p["wk"]).reshape(B, H, dh) * dh ** -0.5).astype(jnp.float32)
+    v = (xm @ p["wv"]).reshape(B, H, dh).astype(jnp.float32)
+    gates = c.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    li, lf_pre = jnp.split(gates, 2, axis=-1)
+    lf = jax.nn.log_sigmoid(lf_pre)
+
+    m_new = jnp.maximum(lf + state["m"], li)
+    fp = jnp.exp(lf + state["m"] - m_new)
+    ip = jnp.exp(li - m_new)
+    C = fp[..., None, None] * state["C"] + ip[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = fp[..., None] * state["n"] + ip[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = rmsnorm(h.reshape(B, -1), p["onorm"], cfg.norm_eps)
+    out = x_t + (h.astype(x_t.dtype) * jax.nn.silu(z)) @ p["w_down"]
+    return out, {"C": C, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ===========================================================================
+# sLSTM block
+# ===========================================================================
+
+def init_slstm(key, cfg) -> dict:
+    dt = pdtype(cfg)
+    M, H = cfg.d_model, cfg.n_heads
+    dh = M // H
+    F = s_ff(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": jnp.ones((M,), jnp.float32),
+        "slstm_w": dense_init(ks[0], (M, 4 * M), jnp.float32),
+        "slstm_r": dense_init(ks[1], (H, 4, dh, dh), jnp.float32, in_axis=2) * 0.5,
+        "slstm_b": jnp.concatenate(
+            [jnp.zeros((2 * M,)), jnp.linspace(3.0, 6.0, M), jnp.zeros((M,))]
+        ),
+        "ffn_norm": jnp.ones((M,), jnp.float32),
+        "w_up": dense_init(ks[2], (M, 2 * F), dt),
+        "w_down": dense_init(ks[3], (F, M), dt),
+    }
+
+
+def slstm_apply(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Sequential sLSTM + gated FFN. x: (B, S, M)."""
+    B, S, M = x.shape
+    H = cfg.n_heads
+    dh = M // H
+    xn = rmsnorm(x, p["norm"], cfg.norm_eps)
+    wx = xn.astype(jnp.float32) @ p["slstm_w"] + p["slstm_b"]  # (B,S,4M)
+
+    def step(carry, wx_t):
+        h, c, n, m = carry                                 # h: (B,H,dh)
+        rec = jnp.einsum("bhd,hgde->bhge", h, p["slstm_r"])  # (B,H,4,dh)
+        pre = wx_t.reshape(B, H, 4, dh) + rec
+        zt = jnp.tanh(pre[:, :, 0])
+        it = pre[:, :, 1]
+        ft = pre[:, :, 2]
+        ot = jax.nn.sigmoid(pre[:, :, 3])
+        m_new = jnp.maximum(ft + m, it)
+        ip = jnp.exp(it - m_new)
+        fp = jnp.exp(ft + m - m_new)
+        c_new = fp * c + ip * zt
+        n_new = fp * n + ip
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (h_new, c_new, n_new, m_new), h_new
+
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H, dh), NEG, jnp.float32)
+    (_, _, _, _), hs = jax.lax.scan(step, (zeros, zeros, zeros, m0), wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(B, S, M).astype(x.dtype)
+    x = x + h
+    # gated FFN (post-up-projection, factor 4/3)
+    xn2 = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+    gu = xn2 @ p["w_up"]
+    g, u = jnp.split(gu, 2, axis=-1)
+    return x + (jax.nn.gelu(g, approximate=True) * u) @ p["w_down"]
+
+
+def init_slstm_state(cfg, batch: int) -> dict:
+    H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    zeros = jnp.zeros((batch, H, dh), jnp.float32)
+    return {"h": zeros, "c": zeros, "n": zeros, "m": jnp.full((batch, H, dh), NEG, jnp.float32)}
+
+
+def slstm_decode(p: dict, x_t: jax.Array, state: dict, cfg) -> tuple[jax.Array, dict]:
+    B, M = x_t.shape
+    H, dh = cfg.n_heads, M // cfg.n_heads
+    xn = rmsnorm(x_t, p["norm"], cfg.norm_eps)
+    wx_t = xn.astype(jnp.float32) @ p["slstm_w"] + p["slstm_b"]
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    rec = jnp.einsum("bhd,hgde->bhge", h, p["slstm_r"])
+    pre = wx_t.reshape(B, H, 4, dh) + rec
+    zt = jnp.tanh(pre[:, :, 0])
+    it, ft = pre[:, :, 1], pre[:, :, 2]
+    ot = jax.nn.sigmoid(pre[:, :, 3])
+    m_new = jnp.maximum(ft + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c_new = fp * c + ip * zt
+    n_new = fp * n + ip
+    h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+    x = x_t + h_new.reshape(B, M).astype(x_t.dtype)
+    xn2 = rmsnorm(x, p["ffn_norm"], cfg.norm_eps)
+    gu = xn2 @ p["w_up"]
+    g, u = jnp.split(gu, 2, axis=-1)
+    out = x + (jax.nn.gelu(g, approximate=True) * u) @ p["w_down"]
+    return out, {"h": h_new, "c": c_new, "n": n_new, "m": m_new}

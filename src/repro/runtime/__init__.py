@@ -1,0 +1,17 @@
+from repro.runtime.steps import (
+    abstract_state,
+    batch_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    train_input_specs,
+)
+
+__all__ = [
+    "abstract_state",
+    "batch_specs",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+    "train_input_specs",
+]

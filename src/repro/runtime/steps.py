@@ -1,0 +1,202 @@
+"""pjit step factories: train_step / prefill_step / decode_step.
+
+Each factory returns (jitted_fn, shardings) where shardings carry the full
+NamedSharding trees for inputs/outputs — the same trees drive the multi-pod
+dry-run (``.lower`` on ShapeDtypeStructs) and real execution.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.models.model import decode_step, init_cache, init_params, loss_fn, prefill
+from repro.optim import OptConfig, adamw_update, init_opt_state
+from repro.sharding import (
+    DEFAULT_RULES,
+    SEQ_PARALLEL_RULES,
+    build_cache_specs,
+    build_param_specs,
+    logical_spec,
+    specs_to_shardings,
+    use_mesh_rules,
+)
+
+
+MODEL_AXIS_SIZE = 16  # model-axis width of both production meshes
+
+
+def _rules_for(cfg, rules=None):
+    if rules is not None:
+        return rules
+    return SEQ_PARALLEL_RULES if cfg.seq_parallel else DEFAULT_RULES
+
+
+def _ep_ok(cfg) -> bool:
+    return cfg.moe is None or cfg.moe.n_routed % MODEL_AXIS_SIZE == 0
+
+
+# ---------------------------------------------------------------------------
+# Abstract state + sharding trees
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg, with_opt: bool = True):
+    """eval_shape'd (params, opt_state) — no allocation."""
+    params = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    if not with_opt:
+        return params, None
+    opt = jax.eval_shape(init_opt_state, params)
+    return params, opt
+
+
+def state_shardings(cfg, mesh: Mesh, rules=None, with_opt: bool = True):
+    rules = _rules_for(cfg, rules)
+    params, opt = abstract_state(cfg, with_opt)
+    pspecs = build_param_specs(params, replicate_kv=cfg.n_kv_heads < cfg.n_heads,
+                               ep_experts=_ep_ok(cfg))
+    psh = specs_to_shardings(pspecs, mesh, rules, abstract_tree=params)
+    if not with_opt:
+        return params, psh, None, None
+    osh = {
+        "master": psh,
+        "m": psh,
+        "v": psh,
+        "count": NamedSharding(mesh, logical_spec((), mesh, rules)),
+    }
+    return params, psh, opt, osh
+
+
+def batch_specs(cfg, shape, mesh: Mesh, rules=None):
+    """(abstract batch, shardings) for a training/prefill batch."""
+    rules = _rules_for(cfg, rules)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    sh = {
+        "tokens": NamedSharding(mesh, logical_spec(("act_batch", None), mesh, rules)),
+        "labels": NamedSharding(mesh, logical_spec(("act_batch", None), mesh, rules)),
+    }
+    if cfg.enc_dec:
+        Se = min(cfg.enc_len, S)
+        batch["frames"] = jax.ShapeDtypeStruct((B, Se, cfg.d_model), jnp.dtype(cfg.dtype))
+        sh["frames"] = NamedSharding(mesh, logical_spec(("act_batch", None, None), mesh, rules))
+    return batch, sh
+
+
+def train_input_specs(cfg, shape, mesh: Mesh, rules=None):
+    """All abstract inputs + shardings for train_step (dry-run entry)."""
+    params, psh, opt, osh = state_shardings(cfg, mesh, rules)
+    batch, bsh = batch_specs(cfg, shape, mesh, rules)
+    return {"params": params, "opt_state": opt, "batch": batch}, \
+           {"params": psh, "opt_state": osh, "batch": bsh}
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, opt_cfg: OptConfig, mesh: Mesh, rules=None, donate: bool = True):
+    rules = _rules_for(cfg, rules)
+    _, psh, _, osh = state_shardings(cfg, mesh, rules)
+    _, bsh = batch_specs_like(cfg, mesh, rules)
+
+    def step_fn(params, opt_state, batch):
+        with use_mesh_rules(mesh, rules):
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch, cfg)
+            new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg)
+            metrics.update(om)
+        return new_params, new_opt, metrics
+
+    jit_kw = dict(
+        in_shardings=(psh, osh, bsh),
+        out_shardings=(psh, osh, None),
+    )
+    if donate:
+        jit_kw["donate_argnums"] = (0, 1)
+    return jax.jit(step_fn, **jit_kw)
+
+
+def batch_specs_like(cfg, mesh: Mesh, rules=None):
+    """Shardings for a batch of unknown shape (shape-polymorphic jit reuse)."""
+    rules = _rules_for(cfg, rules)
+    sh = {
+        "tokens": NamedSharding(mesh, logical_spec(("act_batch", None), mesh, rules)),
+        "labels": NamedSharding(mesh, logical_spec(("act_batch", None), mesh, rules)),
+    }
+    if cfg.enc_dec:
+        sh["frames"] = NamedSharding(mesh, logical_spec(("act_batch", None, None), mesh, rules))
+    return None, sh
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def cache_shardings(cfg, mesh: Mesh, batch: int, max_len: int, rules=None):
+    rules = _rules_for(cfg, rules)
+    params, _ = abstract_state(cfg, with_opt=False)
+    cache = jax.eval_shape(lambda p: init_cache(p, cfg, batch, max_len), params)
+    cspecs = build_cache_specs(cache, replicate_kv=cfg.n_kv_heads < cfg.n_heads)
+    return cache, specs_to_shardings(cspecs, mesh, rules, abstract_tree=cache)
+
+
+def make_decode_step(cfg, mesh: Mesh, batch: int, max_len: int, rules=None, donate: bool = True):
+    rules = _rules_for(cfg, rules)
+    _, psh, _, _ = state_shardings(cfg, mesh, rules, with_opt=False)
+    _, csh = cache_shardings(cfg, mesh, batch, max_len, rules)
+    from repro.sharding import specs_to_shardings as _sts
+    import jax.numpy as _jnp
+
+    vec_abs = jax.ShapeDtypeStruct((batch,), _jnp.int32)
+    vec = _sts(("act_batch",), mesh, rules, abstract_tree=vec_abs)
+    logits_abs = jax.ShapeDtypeStruct((batch, cfg.vocab_size), _jnp.float32)
+    logits_sh = _sts(("act_batch", "act_vocab"), mesh, rules, abstract_tree=logits_abs)
+
+    def step_fn(params, cache, token, pos):
+        with use_mesh_rules(mesh, rules):
+            return decode_step(params, cache, token, pos, cfg)
+
+    jit_kw = dict(
+        in_shardings=(psh, csh, vec, vec),
+        out_shardings=(logits_sh, csh),
+    )
+    if donate:
+        jit_kw["donate_argnums"] = (1,)
+    return jax.jit(step_fn, **jit_kw)
+
+
+def make_prefill_step(cfg, mesh: Mesh, shape, rules=None):
+    rules = _rules_for(cfg, rules)
+    _, psh, _, _ = state_shardings(cfg, mesh, rules, with_opt=False)
+    B, S = shape.global_batch, shape.seq_len
+
+    if cfg.enc_dec:
+        # enc-dec prefill == encoder pass + cross-KV build
+        from repro.models.encdec import init_encdec_cache
+        from repro.models.model import _embed  # noqa: F401
+
+        def step_fn(params, frames, enc_lens):
+            with use_mesh_rules(mesh, rules):
+                from repro.models.encdec import encoder_apply
+                from repro.models.layers import rmsnorm
+
+                pos = jnp.arange(frames.shape[1])[None, :]
+                enc_out = encoder_apply(params["enc_layers"], frames.astype(jnp.dtype(cfg.dtype)), cfg, pos)
+                enc_out = rmsnorm(enc_out, params["enc_norm"], cfg.norm_eps)
+                cache = init_encdec_cache(params, cfg, frames.shape[0], S, enc_out, enc_lens)
+            return cache
+
+        frames_sh = NamedSharding(mesh, logical_spec(("act_batch", None, None), mesh, rules))
+        vec = NamedSharding(mesh, logical_spec(("act_batch",), mesh, rules))
+        return jax.jit(step_fn, in_shardings=(psh, frames_sh, vec), out_shardings=None)
+
+    def step_fn(params, tokens):
+        with use_mesh_rules(mesh, rules):
+            return prefill(params, tokens, cfg, max_len=S)
+
+    tok_sh = NamedSharding(mesh, logical_spec(("act_batch", None), mesh, rules))
+    return jax.jit(step_fn, in_shardings=(psh, tok_sh), out_shardings=None)

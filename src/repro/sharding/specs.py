@@ -1,0 +1,330 @@
+"""Logical-axis sharding rules (MaxText-style) -> jax.sharding PartitionSpecs.
+
+Model code never names mesh axes directly; it annotates tensors with *logical*
+axes ("act_batch", "tp", "fsdp", ...).  A rules table maps logical axes onto
+mesh axes, and mesh axes that do not exist on the active mesh are dropped —
+the same model code therefore runs on the single-pod ("data", "model") mesh,
+the multi-pod ("pod", "data", "model") mesh, scheduler sub-slice meshes, and
+the 1-device CPU test mesh.
+
+Hillclimbing perf = swapping the rules table, not editing the model.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import re
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRules = Mapping[str, Any]  # logical axis -> mesh axis | tuple | None
+
+# ---------------------------------------------------------------------------
+# Rule tables
+# ---------------------------------------------------------------------------
+
+# Paper-faithful / baseline rules: TP on "model", FSDP (param+opt sharding) on
+# "data", batch DP over ("pod", "data").
+DEFAULT_RULES: AxisRules = {
+    # parameter axes
+    "fsdp": "data",            # ZeRO/FSDP dim of every weight
+    "fsdp_e": "data",          # FSDP dim of expert weights (never overlaps ep)
+    "tp": "model",             # tensor-parallel dim of every weight
+    "ep": "model",             # expert-parallel dim (routed experts)
+    "vocab_tp": "model",
+    # activation axes
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "act_expert": "model",
+    "act_state": None,
+    "act_seq_cache": None,       # decode KV-cache sequence dim
+}
+
+# Megatron-SP-style variant: activations sequence-sharded on "model" between
+# blocks (all-gather in, reduce-scatter out). Enabled via ModelConfig.seq_parallel.
+# act_vocab must come off "model" (logits chunks are seq-sharded there).
+SEQ_PARALLEL_RULES: AxisRules = dict(DEFAULT_RULES, act_seq="model", act_vocab=None)
+
+# FSDP+SP variant (hillclimb): no tensor parallelism — weights fully sharded
+# over BOTH mesh axes (pure ZeRO-3), activations batch-sharded over "data"
+# and sequence-sharded over "model". Replaces the per-layer O(B*S*M)
+# activation all-reduces of TP with per-layer O(params) all-gathers.
+FSDP_SP_RULES: AxisRules = {
+    **DEFAULT_RULES,
+    "tp": None,
+    "fsdp": ("data", "model"),
+    "fsdp_e": "data",            # expert dim keeps "model" for ep
+    "act_heads": None,
+    "act_kv_heads": None,
+    "act_mlp": None,
+    "act_expert": "model",
+    "act_seq": "model",
+    "act_seq_cache": "model",    # decode caches sequence-sharded too
+    "act_vocab": None,           # logits seq-sharded instead (seq is on "model")
+}
+
+# ---------------------------------------------------------------------------
+# Active mesh/rules context
+# ---------------------------------------------------------------------------
+
+_ctx: contextvars.ContextVar[tuple[Mesh | None, AxisRules]] = contextvars.ContextVar(
+    "repro_mesh_rules", default=(None, DEFAULT_RULES)
+)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh | None, rules: AxisRules = DEFAULT_RULES):
+    token = _ctx.set((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _ctx.reset(token)
+
+
+def active_mesh() -> Mesh | None:
+    return _ctx.get()[0]
+
+
+def current_rules() -> AxisRules:
+    return _ctx.get()[1]
+
+
+# ---------------------------------------------------------------------------
+# Spec construction
+# ---------------------------------------------------------------------------
+
+def _resolve(axis: Any, mesh: Mesh, rules: AxisRules):
+    """Map one logical axis to mesh axes present on `mesh` (or None)."""
+    if axis is None:
+        return None
+    mapped = rules.get(axis, None) if isinstance(axis, str) else axis
+    if mapped is None:
+        return None
+    if isinstance(mapped, str):
+        return mapped if mapped in mesh.axis_names else None
+    # tuple of mesh axes: keep the ones this mesh has
+    kept = tuple(a for a in mapped if a in mesh.axis_names)
+    return kept if kept else None
+
+
+def logical_spec(axes: Sequence[Any], mesh: Mesh | None = None, rules: AxisRules | None = None) -> P:
+    mesh = mesh or active_mesh()
+    rules = rules or current_rules()
+    if mesh is None:
+        return P()
+    return P(*(_resolve(a, mesh, rules) for a in axes))
+
+
+def named_sharding(axes: Sequence[Any], mesh: Mesh | None = None, rules: AxisRules | None = None) -> NamedSharding:
+    mesh = mesh or active_mesh()
+    assert mesh is not None, "named_sharding requires an active mesh"
+    return NamedSharding(mesh, logical_spec(axes, mesh, rules))
+
+
+def constrain(x: jax.Array, axes: Sequence[Any]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without an active mesh."""
+    mesh = active_mesh()
+    if mesh is None or mesh.size == 1:
+        return x
+    return jax.lax.with_sharding_constraint(x, named_sharding(axes))
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec tree (path-pattern rules)
+# ---------------------------------------------------------------------------
+
+# Pattern -> logical axes for the *trailing* dims of the parameter.  Scanned
+# stacks (leading layer dim) get None prepended automatically.  First match
+# wins; order matters.
+#
+# GQA note: when n_kv_heads < n_heads (TP degree exceeds kv heads), the K/V
+# projections are *replicated* on the model axis (Megatron GQA strategy):
+# redundant tiny kv-proj compute instead of a replicate+repartition collective
+# per layer (measured ~20 GB/chip/layer on the pod dry-run otherwise).
+_PARAM_RULES_KV_REPLICATED: list[tuple[str, tuple[Any, ...]]] = [
+    (r"(wk|wv)$", ("fsdp", None)),
+    (r"(bk|bv)$", (None,)),
+]
+
+# TP-of-experts fallback when n_routed is not divisible by the model axis
+# (e.g. qwen2-moe's 60 experts on a 16-wide axis): shard the expert FFN dim
+# instead of the expert dim.
+_PARAM_RULES_EXPERT_TP: list[tuple[str, tuple[Any, ...]]] = [
+    (r"experts_(wg|wu)$", (None, "fsdp", "tp")),
+    (r"experts_wd$", (None, "tp", "fsdp")),
+]
+
+_PARAM_RULES: list[tuple[str, tuple[Any, ...]]] = [
+    # MoE routed experts: (E, d_in, d_out)
+    (r"experts_(wg|wu)$", ("ep", "fsdp_e", None)),
+    (r"experts_wd$", ("ep", None, "fsdp_e")),
+    (r"router$", ("fsdp", None)),
+    # embedding / unembedding: vocab-sharded ONLY. Sharding the d_model dim
+    # over "data" puts the logits-matmul contraction dim on the batch axis —
+    # GSPMD then full-rematerializes (measured: replicated-batch f32 gathers).
+    (r"(^|/)emb$", ("vocab_tp", None)),
+    (r"lm_head$", (None, "vocab_tp")),
+    # attention / general projections: in -> out(tp)
+    (r"(wq|wk|wv|wqkv|wg|wu|w_in|w_up|w_i|w_gates)$", ("fsdp", "tp")),
+    (r"(wo|wd|w_out|w_down)$", ("tp", "fsdp")),
+    (r"(bq|bk|bv|bqkv|b_in|b_up)$", ("tp",)),
+    # mamba internals (d_inner is the tp-sharded dim)
+    (r"conv_w$", (None, "tp")),
+    (r"conv_b$", ("tp",)),
+    (r"w_x$", ("tp", None)),
+    (r"w_dt$", (None, "tp")),
+    (r"b_dt$", ("tp",)),
+    (r"A_log$", ("tp", None)),
+    (r"(^|/)D$", ("tp",)),
+    # sLSTM recurrent weights are tiny -> replicate
+    (r"slstm_", ()),
+    # norms, small biases, gates: replicate
+    (r".*", ()),
+]
+
+
+def _spec_for_path(path: str, ndim: int, scanned: bool, replicate_kv: bool = False,
+                   ep_experts: bool = True) -> tuple[Any, ...]:
+    rules = list(_PARAM_RULES)
+    if replicate_kv:
+        rules = _PARAM_RULES_KV_REPLICATED + rules
+    if not ep_experts:
+        rules = _PARAM_RULES_EXPERT_TP + rules
+    for pat, axes in rules:
+        if re.search(pat, path):
+            base = list(axes)
+            break
+    else:  # pragma: no cover
+        base = []
+    want = ndim - (1 if scanned else 0)
+    # pad/trim to the parameter's trailing rank
+    if len(base) > want:
+        base = base[-want:] if want > 0 else []
+    while len(base) < want:
+        base.insert(0, None)
+    if scanned:
+        base.insert(0, None)  # stacked layer dim: never sharded
+    return tuple(base)
+
+
+_SCAN_KEYS = ("layers", "blocks", "enc_layers", "dec_layers", "pairs")
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def build_param_specs(params: Any, replicate_kv: bool = False,
+                      ep_experts: bool = True) -> Any:
+    """PartitionSpec pytree (logical axes resolved later) matching `params`.
+
+    Returns a pytree of *logical axis tuples*; resolve with `logical_spec`
+    against a concrete mesh/rules.  ``replicate_kv``: GQA kv-projection
+    replication; ``ep_experts=False``: TP-of-experts fallback for expert
+    counts not divisible by the model axis.
+    """
+
+    def leaf_spec(path, leaf):
+        s = _path_str(path)
+        scanned = any(f"{k}/" in s or s.startswith(f"{k}/") for k in _SCAN_KEYS)
+        return _spec_for_path(s, leaf.ndim if hasattr(leaf, "ndim") else 0, scanned,
+                              replicate_kv, ep_experts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def specs_to_shardings(logical_tree: Any, mesh: Mesh, rules: AxisRules | None = None,
+                       abstract_tree: Any = None) -> Any:
+    """Resolve a logical-axes pytree into NamedShardings for a mesh.
+
+    With ``abstract_tree`` (matching ShapeDtypeStructs), any dimension whose
+    size is not divisible by its resolved mesh-axes product is dropped to
+    replicated — the production-safe fallback for odd head/gate/expert counts
+    and batch-1 decode cells."""
+    rules = rules or DEFAULT_RULES
+    axis_size = dict(zip(mesh.axis_names, np.asarray(mesh.devices).shape))
+
+    def spec_size(entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, str):
+            return axis_size.get(entry, 1)
+        n = 1
+        for a in entry:
+            n *= axis_size.get(a, 1)
+        return n
+
+    def resolve(axes, leaf=None):
+        spec = logical_spec(axes, mesh, rules)
+        if leaf is not None and hasattr(leaf, "shape"):
+            fixed = []
+            for i, entry in enumerate(spec):
+                if i < len(leaf.shape) and leaf.shape[i] % spec_size(entry) != 0:
+                    fixed.append(None)
+                else:
+                    fixed.append(entry)
+            spec = P(*fixed)
+        return NamedSharding(mesh, spec)
+
+    is_leaf = lambda x: isinstance(x, tuple)
+    if abstract_tree is None:
+        return jax.tree.map(resolve, logical_tree, is_leaf=is_leaf)
+    return jax.tree.map(resolve, logical_tree, abstract_tree, is_leaf=is_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Inference-cache spec tree (path-pattern rules, trailing-dim aligned)
+# ---------------------------------------------------------------------------
+
+_CACHE_RULES: list[tuple[str, tuple[Any, ...]]] = [
+    (r"cross/len$", ("act_batch",)),
+    (r"(^|/)(k|v)$", ("act_batch", "act_seq_cache", "act_kv_heads", None)),
+    (r"mamba/h$", ("act_batch", "tp", None)),
+    (r"mamba/conv$", ("act_batch", None, "tp")),
+    (r"mlstm/C$", ("act_batch", "act_heads", None, None)),
+    (r"mlstm/n$", ("act_batch", "act_heads", None)),
+    (r"mlstm/m$", ("act_batch", "act_heads")),
+    (r"mlstm/conv$", ("act_batch", None, "tp")),
+    (r"slstm/", ("act_batch", None, None)),
+    (r".*", ("act_batch",)),
+]
+
+
+def build_cache_specs(cache: Any, replicate_kv: bool = False) -> Any:
+    """Logical-axes pytree for an inference cache (leading stack dims -> None).
+
+    ``replicate_kv``: GQA caches keep heads replicated (batch-sharded only),
+    matching the replicated kv projections."""
+
+    def leaf_spec(path, leaf):
+        s = _path_str(path)
+        for pat, axes in _CACHE_RULES:
+            if re.search(pat, s):
+                base = list(axes)
+                if replicate_kv and re.search(r"(^|/)(k|v)$", s):
+                    base = ["act_batch", "act_seq_cache", None, None]
+                break
+        ndim = leaf.ndim if hasattr(leaf, "ndim") else 0
+        if len(base) > ndim:
+            base = base[-ndim:] if ndim else []
+        while len(base) < ndim:
+            base.insert(0, None)
+        return tuple(base)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)

@@ -1,0 +1,15 @@
+"""Test session setup: lock jax to the default 1-device CPU backend early so
+any later import that touches XLA_FLAGS (e.g. repro.launch.dryrun helpers)
+cannot change the device count, and keep hypothesis CI-friendly."""
+import jax
+from hypothesis import HealthCheck, settings
+
+jax.devices()  # initialize backend now (1 CPU device)
+
+settings.register_profile(
+    "ci",
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")

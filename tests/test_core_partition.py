@@ -1,0 +1,58 @@
+"""Partition-space invariants (the Table VII analogue)."""
+import pytest
+
+from repro.core.partition import (
+    CHIPS_PER_UNIT,
+    N_UNITS,
+    Partition,
+    Slice,
+    enumerate_partitions,
+    partitions_by_arity,
+)
+
+
+def test_table_covers_all_arities():
+    by = partitions_by_arity(4)
+    assert set(by) == {1, 2, 3, 4}
+    assert all(len(v) >= 1 for v in by.values())
+
+
+def test_partitions_respect_cmax():
+    for c_max in (1, 2, 3, 4):
+        assert all(p.arity <= c_max for p in enumerate_partitions(c_max))
+
+
+def test_slice_invariants():
+    for p in enumerate_partitions(4):
+        assert p.total_units <= N_UNITS, p.label
+        for s in p.slices:
+            assert s.units in (1, 2, 4, 8)
+            assert sum(s.shares) <= 1.0 + 1e-9, p.label
+            assert s.chips == s.units * CHIPS_PER_UNIT
+        assert len(p.slots) == p.arity
+
+
+def test_torus_factor_only_full_pod():
+    full = Slice(8, (1.0,))
+    half = Slice(4, (1.0,))
+    assert full.torus_factor == 1.0
+    assert half.torus_factor == 0.5
+
+
+def test_styles_partition_the_table():
+    styles = {p.style for p in enumerate_partitions(4)}
+    assert styles == {"solo", "mps", "mig", "hier"}
+
+
+def test_action_space_size_matches_paper_scale():
+    """W + N_p should land near the paper's A = 29 output head."""
+    n_p = len(enumerate_partitions(4))
+    assert 15 <= n_p <= 25, n_p          # paper: 17
+    assert 25 <= 12 + n_p <= 37          # paper: 29
+
+
+def test_invalid_slices_rejected():
+    with pytest.raises(AssertionError):
+        Slice(3, (1.0,))                  # non-power-of-two width
+    with pytest.raises(AssertionError):
+        Slice(4, (0.7, 0.6))              # shares exceed 1

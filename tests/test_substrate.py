@@ -1,0 +1,209 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, elastic, multitenant."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore, save
+from repro.data import DataPipeline
+from repro.optim import OptConfig, adamw_update, global_norm, init_opt_state, lr_at
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_optimizes_quadratic():
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = init_opt_state(params)
+    cfg = OptConfig(lr=0.1, warmup_steps=1, decay_steps=1000, weight_decay=0.0)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_engages():
+    params = {"w": jnp.zeros(4)}
+    state = init_opt_state(params)
+    cfg = OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=1)
+    _, _, m = adamw_update(params, {"w": jnp.full(4, 100.0)}, state, cfg)
+    assert float(m["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, decay_steps=100, min_lr_frac=0.1)
+    lrs = [float(lr_at(cfg, jnp.int32(s))) for s in (1, 10, 50, 100, 1000)]
+    assert lrs[0] < lrs[1]                       # warmup
+    assert lrs[1] >= lrs[2] >= lrs[3]            # decay
+    np.testing.assert_allclose(lrs[4], 1e-4, rtol=1e-2)  # floor
+
+
+def test_bias_not_decayed():
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    state = init_opt_state(params)
+    cfg = OptConfig(lr=0.1, weight_decay=0.5, warmup_steps=1)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = adamw_update(params, zeros, state, cfg)
+    assert float(p2["w"][0, 0]) < 1.0            # decayed
+    np.testing.assert_allclose(np.asarray(p2["b"]), 1.0)  # not decayed
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+@given(step=st.integers(0, 1000), seed=st.integers(0, 100))
+@settings(max_examples=10)
+def test_pipeline_deterministic(step, seed):
+    p = DataPipeline(100, 16, 8, seed=seed)
+    b1, b2 = p.batch(step), p.batch(step)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+
+
+def test_pipeline_shards_compose_to_global():
+    p = DataPipeline(1000, 8, 10, seed=3)
+    full = p.batch(5)
+    parts = [p.batch(5, *p.shard_bounds(i, 3)) for i in range(3)]
+    np.testing.assert_array_equal(np.concatenate([x["tokens"] for x in parts]), full["tokens"])
+
+
+def test_pipeline_labels_shifted():
+    p = DataPipeline(97, 12, 4, seed=1)
+    b = p.batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_markov_structure_is_learnable():
+    """Markov mode: next token is a deterministic function of current."""
+    p = DataPipeline(50, 32, 4, seed=2, mode="markov")
+    b = p.batch(7)
+    toks, labs = b["tokens"], b["labels"]
+    # for any repeated token within a row, the successor must repeat too
+    for r in range(4):
+        seen = {}
+        for t in range(32):
+            cur = int(toks[r, t])
+            if cur in seen:
+                assert seen[cur] == int(labs[r, t])
+            seen[cur] = int(labs[r, t])
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": np.arange(6).reshape(2, 3), "b": {"c": np.float32(1.5)}}
+    save(str(tmp_path), 3, tree, extra={"data_step": 7})
+    got, extra, step = restore(str(tmp_path))
+    assert step == 3 and extra["data_step"] == 7
+    np.testing.assert_array_equal(got["a"], tree["a"])
+    np.testing.assert_allclose(got["b"]["c"], 1.5)
+
+
+def test_checkpoint_ignores_uncommitted(tmp_path):
+    save(str(tmp_path), 1, {"x": np.ones(2)})
+    # fake a torn checkpoint: directory without .done marker
+    os.makedirs(tmp_path / "step_9")
+    assert latest_step(str(tmp_path)) == 1
+
+
+def test_checkpoint_prunes_old(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        save(str(tmp_path), s, {"x": np.full(2, s)}, keep_last=2)
+    from repro.checkpoint.checkpoint import committed_steps
+
+    assert committed_steps(str(tmp_path)) == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# elastic runtime
+# ---------------------------------------------------------------------------
+
+def test_surviving_mesh_rectangular_power_of_two():
+    from repro.runtime.elastic import surviving_mesh
+
+    devs = np.array(jax.devices() * 8).reshape(8, 1)  # fake 8x1 mesh rows
+    from jax.sharding import Mesh
+
+    mesh = Mesh(devs, ("data", "model"))
+    m2 = surviving_mesh(mesh, failed_rows=[3])
+    assert np.asarray(m2.devices).shape == (4, 1)  # 7 survivors -> 4 (pow2)
+
+
+def test_rebalance_bounds_cover_batch():
+    from repro.runtime.elastic import rebalance_bounds
+
+    for n_rows in (3, 4, 7):
+        spans = [rebalance_bounds(26, n_rows, r) for r in range(n_rows)]
+        assert spans[0][0] == 0 and spans[-1][1] == 26
+        for (a, b), (c, d) in zip(spans, spans[1:]):
+            assert b == c
+
+
+def test_elastic_trainer_recovers_from_failure(tmp_path):
+    from jax.sharding import Mesh
+
+    from repro.runtime.elastic import ElasticTrainer, FailureEvent
+
+    devs = np.array(jax.devices() * 4).reshape(4, 1)
+    mesh = Mesh(devs, ("data", "model"))
+
+    def make_step(mesh):
+        @jax.jit
+        def step(state, batch):
+            return {"w": state["w"] + batch.mean(), "n": state["n"] + 1}
+        return step
+
+    def init_state(mesh):
+        return {"w": jnp.zeros(()), "n": jnp.zeros((), jnp.int32)}
+
+    def batch_fn(step, mesh):
+        return jnp.ones((4,))
+
+    tr = ElasticTrainer(make_step, init_state, str(tmp_path), ckpt_every=5)
+    state, final_mesh = tr.run(mesh, 20, batch_fn,
+                               failures=[FailureEvent(step=12, failed_rows=[1])])
+    assert int(state["n"]) == 20
+    assert np.asarray(final_mesh.devices).shape[0] == 2  # 3 survivors -> 2
+    assert any(e.startswith("shrunk") for e in tr.log)
+    assert any(e.startswith("ckpt") for e in tr.log)
+
+
+# ---------------------------------------------------------------------------
+# multitenant executor
+# ---------------------------------------------------------------------------
+
+def test_quantum_executor_completes_all():
+    from repro.runtime.multitenant import QuantumExecutor, Tenant
+
+    def mk(name, share):
+        @jax.jit
+        def step(s):
+            return s + 1
+        return Tenant(name, step, jnp.zeros(()), share)
+
+    tenants = [mk("a", 0.75), mk("b", 0.25)]
+    ex = QuantumExecutor(tenants, {"a": 30, "b": 10})
+    finish = ex.run()
+    assert set(finish) == {"a", "b"}
+    assert tenants[0].steps_done >= 30 and tenants[1].steps_done >= 10
+
+
+def test_fused_corunner_shares_map_to_quanta():
+    from repro.runtime.multitenant import FusedCoRunner, Tenant
+
+    def mk(name, share):
+        @jax.jit
+        def step(s):
+            return s + 1
+        return Tenant(name, step, jnp.zeros(()), share)
+
+    runner = FusedCoRunner([mk("big", 0.75), mk("small", 0.25)], {"big": 24, "small": 8})
+    assert runner.quanta[0] > runner.quanta[1]
+    finish = runner.run()
+    assert set(finish) == {"big", "small"}
