@@ -1,0 +1,121 @@
+"""Training-engine throughput: seed-equivalent scalar loop vs scanned engine.
+
+Measures episodes/sec of ``train_agent_scalar`` (the seed per-step Python
+loop, 1 DQN update per transition) against the vectorized ``train_agent``
+(B envs fused into one jitted ``lax.scan``) at their default configurations,
+and writes ``BENCH_train.json`` so future PRs have a perf trajectory to
+regress against.  Both engines are warmed first so jit compilation is not
+billed to either side.
+
+    PYTHONPATH=src python -m benchmarks.train_throughput [--fast] \
+        [--out BENCH_train.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import emit
+from repro.core import (
+    EnvConfig, TrainConfig, make_zoo, train_agent, train_agent_scalar,
+)
+
+
+def _best_of(n: int, run) -> tuple[int, float]:
+    """Best-of-n episodes/sec — damps noisy-neighbor interference on the box."""
+    results = [run() for _ in range(n)]
+    return max(results, key=lambda r: r[0] / r[1])
+
+
+def _bench_scalar(zoo, env_cfg, episodes: int) -> dict:
+    # warm the jitted act/update paths outside the timed region
+    train_agent_scalar(zoo, env_cfg, TrainConfig(episodes=3, eval_every=10**9))
+    cfg = TrainConfig(episodes=episodes, eval_every=10**9)
+
+    def run():
+        t0 = time.perf_counter()
+        _, hist = train_agent_scalar(zoo, env_cfg, cfg)
+        return hist[-1]["episode"], time.perf_counter() - t0
+
+    eps, dt = _best_of(2, run)
+    return {"episodes": eps, "seconds": dt, "eps_per_sec": eps / dt,
+            "updates_per_transition": 1.0}
+
+
+def _bench_vectorized(zoo, env_cfg, episodes: int, update_every: int | None = None) -> dict:
+    kw = {} if update_every is None else {"update_every": update_every}
+    cfg = TrainConfig(episodes=episodes, eval_every=10**9, **kw)
+    # warm with the *same* config: the scan's segment length is a static
+    # dimension derived from (episodes, eval_every, batch_envs), so a
+    # smaller warm run would leave the measured run recompiling
+    train_agent(zoo, env_cfg, cfg)
+
+    def run():
+        t0 = time.perf_counter()
+        _, hist = train_agent(zoo, env_cfg, cfg)
+        return hist[-1]["episode"], time.perf_counter() - t0
+
+    eps, dt = _best_of(2, run)
+    return {"episodes": eps, "seconds": dt, "eps_per_sec": eps / dt,
+            "batch_envs": cfg.batch_envs, "update_every": cfg.update_every,
+            "updates_per_transition": 1.0 / cfg.update_every}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="shrink measured episodes")
+    ap.add_argument("--window", type=int, default=12)
+    ap.add_argument("--scalar-episodes", type=int, default=None)
+    ap.add_argument("--vec-episodes", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_train.json")
+    args, _ = ap.parse_known_args()
+    scalar_eps = args.scalar_episodes or (15 if args.fast else 40)
+    vec_eps = args.vec_episodes or (200 if args.fast else 600)
+
+    zoo = make_zoo(dryrun_dir=None)
+    env_cfg = EnvConfig(window=args.window, c_max=4)
+
+    print("name,us_per_call,derived")
+    scalar = _bench_scalar(zoo, env_cfg, scalar_eps)
+    emit("train_scalar", scalar["seconds"] * 1e6 / scalar["episodes"],
+         f"{scalar['eps_per_sec']:.2f}eps/s")
+    vec = _bench_vectorized(zoo, env_cfg, vec_eps)
+    emit("train_vectorized", vec["seconds"] * 1e6 / vec["episodes"],
+         f"{vec['eps_per_sec']:.2f}eps/s")
+    speedup = vec["eps_per_sec"] / scalar["eps_per_sec"]
+    emit("train_speedup", 0.0, f"{speedup:.1f}x")
+    # engine-only comparison: same 1-update-per-transition work as the seed
+    # loop, isolating the scan/vmap/on-device-replay gain from the cadence
+    matched = _bench_vectorized(zoo, env_cfg, max(20, vec_eps // 10),
+                                update_every=1)
+    emit("train_vectorized_matched", matched["seconds"] * 1e6 / matched["episodes"],
+         f"{matched['eps_per_sec']:.2f}eps/s")
+    matched_speedup = matched["eps_per_sec"] / scalar["eps_per_sec"]
+    emit("train_speedup_matched_updates", 0.0, f"{matched_speedup:.1f}x")
+
+    result = {
+        "window": args.window,
+        "cpus": os.cpu_count(),
+        "scalar": scalar,
+        "vectorized": vec,
+        "vectorized_matched_updates": matched,
+        "scalar_eps_per_sec": scalar["eps_per_sec"],
+        "vectorized_eps_per_sec": vec["eps_per_sec"],
+        "speedup": speedup,
+        "speedup_matched_updates": matched_speedup,
+        "note": ("scalar = seed loop (1 update/transition); vectorized = "
+                 "scanned engine at default TrainConfig (1 update per "
+                 "update_every transitions, target sync cadence preserved "
+                 "in transitions); 'speedup' compares default configs — "
+                 "see speedup_matched_updates for the engine-only gain at "
+                 "equal update work"),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"wrote {args.out}: {speedup:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -48,9 +48,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=1500)
     ap.add_argument("--window", type=int, default=8)
+    ap.add_argument("--batch-envs", type=int, default=16,
+                    help="parallel envs in the scanned training engine")
     args = ap.parse_args()
 
-    # 1-2: offline profiling + RL training
+    # 1-2: offline profiling + RL training (vectorized jit-scanned engine)
     zoo = make_zoo()
     print(f"zoo: {len(zoo)} jobs")
     t0 = time.time()
@@ -58,6 +60,7 @@ def main():
     agent, hist = train_agent(zoo, env_cfg,
                               TrainConfig(episodes=args.episodes,
                                           eval_every=args.episodes // 4,
+                                          batch_envs=args.batch_envs,
                                           dqn=DQNConfig(eps_decay_steps=args.episodes * 6)),
                               verbose=True)
     print(f"offline training: {time.time()-t0:.0f}s")

@@ -1,23 +1,28 @@
 """The paper's primary contribution: RL-based co-optimization of hierarchical
 resource partitioning (Level-1 mesh slicing + Level-2 fractional sharing) and
 co-scheduling group selection. See DESIGN.md §2 for the GPU->TPU mapping."""
-from repro.core.agent import DQNAgent, DQNConfig
+from repro.core.agent import DQNAgent, DQNConfig, act_batch, epsilon_at
 from repro.core.baselines import POLICIES, oracle, time_sharing
-from repro.core.env import CoScheduleEnv, EnvConfig
+from repro.core.env import CoScheduleEnv, EnvConfig, EnvState, VecCoScheduleEnv
 from repro.core.metrics import summarize
 from repro.core.partition import Partition, Slice, enumerate_partitions
 from repro.core.perfmodel import corun, corun_time, solo_run_time
 from repro.core.problem import Schedule, validate_schedule
 from repro.core.profiles import JobProfile, ProfileRepository, analytic_profile
+from repro.core.replay import ReplayState, replay_init, replay_push, replay_sample
 from repro.core.scheduler import RLScheduler
-from repro.core.train import TrainConfig, heldout_split, train_agent
+from repro.core.train import (
+    TrainConfig, heldout_split, train_agent, train_agent_scalar,
+)
 from repro.core.workloads import make_queue, make_zoo, paper_queues
 
 __all__ = [
-    "CoScheduleEnv", "DQNAgent", "DQNConfig", "EnvConfig", "JobProfile",
-    "POLICIES", "Partition", "ProfileRepository", "RLScheduler", "Schedule",
-    "Slice", "TrainConfig", "analytic_profile", "corun", "corun_time",
-    "enumerate_partitions", "heldout_split", "make_queue", "make_zoo",
-    "oracle", "paper_queues", "solo_run_time", "summarize", "time_sharing",
-    "train_agent", "validate_schedule",
+    "CoScheduleEnv", "DQNAgent", "DQNConfig", "EnvConfig", "EnvState",
+    "JobProfile", "POLICIES", "Partition", "ProfileRepository",
+    "RLScheduler", "ReplayState", "Schedule", "Slice", "TrainConfig",
+    "VecCoScheduleEnv", "act_batch", "analytic_profile", "corun",
+    "corun_time", "enumerate_partitions", "epsilon_at", "heldout_split",
+    "make_queue", "make_zoo", "oracle", "paper_queues", "replay_init",
+    "replay_push", "replay_sample", "solo_run_time", "summarize",
+    "time_sharing", "train_agent", "train_agent_scalar", "validate_schedule",
 ]

@@ -1,4 +1,15 @@
-"""DQN agent: ε-greedy masked action selection + jit'd double-DQN updates."""
+"""DQN agent: masked ε-greedy action selection + jit'd double-DQN updates.
+
+Two call surfaces share the same parameters and update rule:
+
+  * ``DQNAgent`` — the stateful single-env agent used by ``RLScheduler`` and
+    the scalar training loop.  Greedy (evaluation) calls do **not** advance
+    ``env_steps``, so evaluation frequency cannot perturb the ε schedule.
+  * ``act_batch`` / ``epsilon_at`` — pure functions over (params, key,
+    obs, mask) used by the vectorized engine: vmapped ε-greedy selection
+    with ``jax.random`` keys and the linear ε schedule computed in-graph,
+    so the whole rollout lives inside one ``lax.scan``.
+"""
 from __future__ import annotations
 
 import functools
@@ -68,6 +79,33 @@ def _q_values(params, s):
     return dqn_apply(params, s)
 
 
+def epsilon_at(cfg: DQNConfig, env_steps):
+    """Linear ε schedule as a pure function of the env-step count.
+
+    Accepts a plain int (scalar agent hot path — no jnp dispatch) or a
+    traced array (inside the scanned engine)."""
+    if isinstance(env_steps, (int, float)):
+        frac = min(1.0, env_steps / max(1, cfg.eps_decay_steps))
+    else:
+        frac = jnp.clip(env_steps / max(1, cfg.eps_decay_steps), 0.0, 1.0)
+    return cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+
+
+@jax.jit
+def act_batch(params, key, obs, mask, eps):
+    """Vmapped masked ε-greedy: one action per env row.
+
+    obs (B, D), mask (B, A) -> (B,) i32.  Exploration draws a uniformly
+    random *valid* action (argmax of uniform scores over the mask).
+    """
+    greedy = masked_argmax(dqn_apply(params, obs), mask)
+    k_bern, k_choice = jax.random.split(key)
+    explore = jax.random.uniform(k_bern, greedy.shape) < eps
+    scores = jax.random.uniform(k_choice, mask.shape)
+    rand = jnp.argmax(jnp.where(mask, scores, -1.0), axis=-1)
+    return jnp.where(explore, rand, greedy).astype(jnp.int32)
+
+
 class DQNAgent:
     def __init__(self, state_dim: int, n_actions: int, cfg: DQNConfig | None = None,
                  seed: int = 0):
@@ -76,22 +114,33 @@ class DQNAgent:
         self.params = init_dqn(key, state_dim, n_actions)
         self.target_params = jax.tree.map(jnp.copy, self.params)
         self.opt = _adam_init(self.params)
-        self.replay = ReplayBuffer(self.cfg.buffer_size, state_dim, n_actions, seed)
+        self._replay: ReplayBuffer | None = None   # lazy: ~100 MB at defaults
+        self._replay_shape = (state_dim, n_actions, seed)
         self.rng = np.random.default_rng(seed)
         self.env_steps = 0
         self.updates = 0
 
+    @property
+    def replay(self) -> ReplayBuffer:
+        """Numpy replay for the scalar loop; the vectorized engine keeps its
+        own on-device ring, so allocation waits for first use."""
+        if self._replay is None:
+            d, a, seed = self._replay_shape
+            self._replay = ReplayBuffer(self.cfg.buffer_size, d, a, seed)
+        return self._replay
+
     # ----------------------------------------------------------------- act
     @property
     def epsilon(self) -> float:
-        c = self.cfg
-        frac = min(1.0, self.env_steps / max(1, c.eps_decay_steps))
-        return c.eps_start + (c.eps_end - c.eps_start) * frac
+        return epsilon_at(self.cfg, self.env_steps)
 
     def act(self, state: np.ndarray, mask: np.ndarray, greedy: bool = False) -> int:
-        self.env_steps += 1
-        if not greedy and self.rng.random() < self.epsilon:
-            return int(self.rng.choice(np.flatnonzero(mask)))
+        if not greedy:
+            # only exploration steps advance the ε-decay schedule; greedy
+            # (evaluation) calls must not change exploration behaviour
+            self.env_steps += 1
+            if self.rng.random() < self.epsilon:
+                return int(self.rng.choice(np.flatnonzero(mask)))
         q = np.array(_q_values(self.params, state[None]))[0]
         q[~mask] = -np.inf
         return int(np.argmax(q))

@@ -22,13 +22,22 @@ from repro.core.profiles import JobProfile
 
 
 def _best_for_group(group: list[JobProfile], partitions: list[Partition],
-                    max_perms: int = 8) -> tuple[float, Partition | None, tuple[int, ...]]:
-    """Min CoRunTime over partitions of matching arity x slot orderings."""
+                    max_perms: int | None = None) -> tuple[float, Partition | None, tuple[int, ...]]:
+    """Min CoRunTime over partitions of matching arity x slot orderings.
+
+    ``max_perms=None`` enumerates all C! slot orderings — required for the
+    oracle to actually be an upper bound (a truncated sweep silently missed
+    16 of the 24 orderings for C=4 groups).  Pass a cap only for explicitly
+    approximate policies.
+    """
     best_t, best_p, best_perm = float("inf"), None, tuple(range(len(group)))
     for p in partitions:
         if p.arity != len(group):
             continue
-        for perm in itertools.islice(itertools.permutations(range(len(group))), max_perms):
+        perms = itertools.permutations(range(len(group)))
+        if max_perms is not None:
+            perms = itertools.islice(perms, max_perms)
+        for perm in perms:
             t = corun_time([group[i] for i in perm], p)
             if t < best_t:
                 best_t, best_p, best_perm = t, p, perm
@@ -37,7 +46,8 @@ def _best_for_group(group: list[JobProfile], partitions: list[Partition],
 
 def exhaustive_schedule(queue: list[JobProfile], c_max: int,
                         partitions: list[Partition],
-                        enforce_solo_constraint: bool = True) -> Schedule:
+                        enforce_solo_constraint: bool = True,
+                        max_perms: int | None = None) -> Schedule:
     """Exact set-partition DP (O(3^W) submask enumeration) over group costs."""
     W = len(queue)
     solo_part = [p for p in enumerate_partitions(1) if p.arity == 1][0]
@@ -45,7 +55,7 @@ def exhaustive_schedule(queue: list[JobProfile], c_max: int,
     @lru_cache(maxsize=None)
     def group_cost(mask: int) -> tuple[float, object]:
         group = [queue[i] for i in range(W) if mask >> i & 1]
-        best_t, best_p, best_perm = _best_for_group(group, partitions)
+        best_t, best_p, best_perm = _best_for_group(group, partitions, max_perms)
         if len(group) == 1 and best_p is None:
             return solo_run_time(group), (solo_part, (0,))
         if best_p is None:

@@ -9,15 +9,35 @@ Rewards (paper Table VI):
     on close:  Σ_j r_i(j)  +  r_f = (SoloRunTime/CoRunTime - 1) x 100
     r_i = (SmAllocRatio*ComputeRatio + MemoryAllocRatio*MemoryRatio) * DurationRatio^2
 Episode: schedule the whole window; terminal when all W jobs are grouped.
+
+The environment has two implementations:
+
+  * **Functional core** — an immutable :class:`EnvState` pytree with pure
+    ``reset``/``step`` transition functions whose reward math runs on
+    precomputed JAX arrays (:mod:`repro.core.perfmodel_jax`).  Everything is
+    jit-able and vmap-able, so the training engine fuses B parallel episodes
+    and the DQN update into a single ``lax.scan`` (see ``train.py``).
+    :class:`VecCoScheduleEnv` owns the compiled entry points.
+  * **Stateful reference wrapper** — :class:`CoScheduleEnv` keeps the
+    original mutable gym-style API (used by ``RLScheduler``, the baselines,
+    and examples) and computes rewards with the float64 Python perfmodel.
+    The parity test pins the functional core to this wrapper step-for-step.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
+from typing import NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.partition import N_UNITS, Partition, enumerate_partitions
 from repro.core.perfmodel import corun_time, solo_run_time
+from repro.core.perfmodel_jax import (
+    PartitionTable, QueueArrays, build_partition_table, group_reward,
+    queue_arrays, stack_queues,
+)
 from repro.core.problem import Schedule
 from repro.core.profiles import FEATURES, JobProfile
 
@@ -32,9 +52,136 @@ class EnvConfig:
     r_i_weight: float = 0.2              # r_f carries the true objective
     invalid_penalty: float = -10.0       # masked anyway; safety net
 
+    def key(self) -> tuple:
+        """Hashable identity (EnvConfig is mutable; used for engine caches).
+        Derived from the declared fields so it can never go stale."""
+        import dataclasses
+
+        return tuple(getattr(self, f.name) for f in dataclasses.fields(self))
+
+
+class EnvState(NamedTuple):
+    """Immutable episode state; ``queue`` is constant through the episode."""
+
+    queue: QueueArrays                   # per-queue precomputed job arrays
+    scheduled: jnp.ndarray               # (W,) bool
+    group_idx: jnp.ndarray               # (c_max,) i32, selection order, -1 pad
+    group_size: jnp.ndarray              # () i32
+
+
+class VecCoScheduleEnv:
+    """Functional env: pure jitted ``reset``/``step`` + vmapped batch forms.
+
+    ``reset(queue_arrays)`` and ``step(state, action)`` are pure functions of
+    their inputs — all mutation is in the returned :class:`EnvState`.  The
+    batch variants (``reset_batch``/``step_batch``) vmap over a leading env
+    axis; ``queue_batch`` builds the stacked :class:`QueueArrays` input.
+    """
+
+    def __init__(self, cfg: EnvConfig | None = None):
+        self.cfg = cfg or EnvConfig()
+        self.partitions: list[Partition] = enumerate_partitions(self.cfg.c_max)
+        self.table: PartitionTable = build_partition_table(
+            self.partitions, self.cfg.c_max)
+        self.n_features = len(FEATURES)
+        self.state_dim = self.cfg.window * (self.n_features + N_FLAGS)
+        self.n_actions = self.cfg.window + len(self.partitions)
+        self.reset = jax.jit(self._reset)
+        self.step = jax.jit(self._step)
+        self.reset_batch = jax.jit(jax.vmap(self._reset))
+        self.step_batch = jax.jit(jax.vmap(self._step))
+
+    # ----------------------------------------------------------- queue prep
+    def queue_arrays(self, queue: list[JobProfile]) -> QueueArrays:
+        return queue_arrays(queue, self.cfg.window)
+
+    def queue_batch(self, queues: list[list[JobProfile]]) -> QueueArrays:
+        return stack_queues([self.queue_arrays(q) for q in queues])
+
+    # ------------------------------------------------------- pure functions
+    def _reset(self, qa: QueueArrays) -> tuple[EnvState, jnp.ndarray, jnp.ndarray]:
+        state = EnvState(
+            queue=qa,
+            scheduled=jnp.zeros((self.cfg.window,), bool),
+            group_idx=jnp.full((self.cfg.c_max,), -1, jnp.int32),
+            group_size=jnp.int32(0),
+        )
+        return state, self._obs(state), self._mask(state)
+
+    def _member(self, state: EnvState) -> jnp.ndarray:
+        """(W,) bool — job i currently selected into the open group."""
+        live = jnp.arange(self.cfg.c_max) < state.group_size
+        hits = state.group_idx[None, :] == jnp.arange(self.cfg.window)[:, None]
+        return jnp.any(hits & live[None, :], axis=1)
+
+    def _obs(self, state: EnvState) -> jnp.ndarray:
+        member = self._member(state)
+        valid = state.queue.valid
+        progress = state.group_size.astype(jnp.float32) / max(1, self.cfg.c_max)
+        flags = jnp.stack([
+            (valid & ~state.scheduled & ~member).astype(jnp.float32),
+            member.astype(jnp.float32),
+            (state.scheduled & valid).astype(jnp.float32),
+            (~valid).astype(jnp.float32),
+            jnp.where(valid, progress, 0.0),
+        ], axis=1)
+        return jnp.concatenate([state.queue.features, flags], axis=1).reshape(-1)
+
+    def _mask(self, state: EnvState) -> jnp.ndarray:
+        member = self._member(state)
+        can_select = (state.queue.valid & ~state.scheduled & ~member
+                      & (state.group_size < self.cfg.c_max))
+        can_close = (state.group_size >= 1) & (self.table.arity == state.group_size)
+        return jnp.concatenate([can_select, can_close])
+
+    def _done(self, state: EnvState) -> jnp.ndarray:
+        return (jnp.all(state.scheduled | ~state.queue.valid)
+                & (state.group_size == 0))
+
+    def _step(self, state: EnvState, action: jnp.ndarray):
+        """Pure transition -> (state', obs', reward, done, mask')."""
+        W = self.cfg.window
+        mask = self._mask(state)
+        valid = mask[action]
+        is_select = action < W
+        # select branch: append to the open group (selection order preserved)
+        sel_state = state._replace(
+            group_idx=state.group_idx.at[state.group_size].set(
+                action.astype(jnp.int32)),
+            group_size=state.group_size + 1,
+        )
+        # close branch: score the group under partition p, mark scheduled
+        p_idx = jnp.clip(action - W, 0, len(self.partitions) - 1)
+        r_close = group_reward(self.table, state.queue, state.group_idx,
+                               state.group_size, p_idx,
+                               self.cfg.r_i_weight, self.cfg.r_f_scale)
+        close_state = state._replace(
+            scheduled=state.scheduled | self._member(state),
+            group_idx=jnp.full((self.cfg.c_max,), -1, jnp.int32),
+            group_size=jnp.int32(0),
+        )
+        branch = jax.tree.map(lambda a, b: jnp.where(is_select, a, b),
+                              sel_state, close_state)
+        new_state = jax.tree.map(lambda a, b: jnp.where(valid, a, b),
+                                 branch, state)
+        reward = jnp.where(
+            valid,
+            jnp.where(is_select, 0.0, r_close),
+            jnp.float32(self.cfg.invalid_penalty),
+        )
+        return (new_state, self._obs(new_state), reward,
+                self._done(new_state), self._mask(new_state))
+
 
 class CoScheduleEnv:
-    """Gym-style (reset/step) but dependency-free."""
+    """Gym-style (reset/step) reference wrapper, dependency-free.
+
+    Thin stateful shell over the same action/observation contract as the
+    functional core, kept for the scheduler/baselines API.  Rewards use the
+    float64 Python perfmodel, making this the ground truth the vectorized
+    engine is parity-tested against; it also materializes the
+    :class:`Schedule` object the online phase consumes.
+    """
 
     def __init__(self, cfg: EnvConfig | None = None):
         self.cfg = cfg or EnvConfig()

@@ -156,18 +156,18 @@ def corun(group: list[JobProfile], partition: Partition) -> CoRunResult:
     """CoRunTime for `group` under `partition` (jobs -> slots in order)."""
     slots = partition.slots
     assert len(group) == len(slots), (len(group), partition.label)
-    # bucket jobs by slice
-    by_slice: dict[int, tuple[list[JobProfile], list[float], Slice]] = {}
-    for job, (si, s, beta) in zip(group, slots):
+    # bucket group positions by slice (positional, so a job object appearing
+    # twice in a group keeps both finish times)
+    by_slice: dict[int, tuple[list[int], list[float], Slice]] = {}
+    for pos, (si, s, beta) in enumerate(slots):
         bucket = by_slice.setdefault(si, ([], [], s))
-        bucket[0].append(job)
+        bucket[0].append(pos)
         bucket[1].append(beta)
     finish = [0.0] * len(group)
-    order = {id(j): i for i, j in enumerate(group)}
-    for si, (jobs, betas, s) in by_slice.items():
-        fts = _simulate_slice(jobs, betas, s)
-        for job, ft in zip(jobs, fts):
-            finish[order[id(job)]] = ft
+    for si, (positions, betas, s) in by_slice.items():
+        fts = _simulate_slice([group[p] for p in positions], betas, s)
+        for pos, ft in zip(positions, fts):
+            finish[pos] = ft
     solo = [j.solo_time() for j in group]
     return CoRunResult(makespan=max(finish), finish_times=finish, solo_times=solo)
 

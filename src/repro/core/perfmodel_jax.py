@@ -1,0 +1,264 @@
+"""JAX mirror of the co-run performance model for in-graph RL rewards.
+
+Everything ``perfmodel.py`` computes per (group, partition) — roofline terms,
+water-filled bandwidth contention, the phase simulation over completion
+events — is reproduced here as fixed-shape ``jnp`` operations so the
+environment's close-group reward can run under ``jit``/``vmap``/``scan``.
+
+Two precomputed array bundles make that possible:
+
+  * ``PartitionTable`` — static per ``EnvConfig``: slot -> (slice id, units,
+    Level-2 share) for every partition in the curated table, padded to
+    ``c_max`` slots.
+  * ``QueueArrays``   — static per queue: per-job roofline terms at every
+    slice width, solo times, counter features, and window means.
+
+The scalar Python model stays the float64 reference; the parity test in
+``tests/test_vectorized_train.py`` pins this float32 mirror to it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import N_UNITS, Partition
+from repro.core.perfmodel import KAPPA_INTERFERENCE, SIGMA_QUANTUM
+from repro.core.profiles import FEATURES, JobProfile
+
+UNIT_SIZES = (1, 2, 4, 8)            # valid slice widths (powers of two)
+_FP_ITERS = 30                       # perfmodel fixed-point iteration budget
+
+
+class PartitionTable(NamedTuple):
+    """Curated partition table flattened to padded per-slot arrays."""
+
+    slot_valid: jnp.ndarray          # (P, S) bool — slot exists
+    slot_slice: jnp.ndarray          # (P, S) i32 — slice id within partition
+    slot_units_idx: jnp.ndarray      # (P, S) i32 — index into UNIT_SIZES
+    slot_units: jnp.ndarray          # (P, S) f32 — slice width in units
+    slot_beta: jnp.ndarray           # (P, S) f32 — Level-2 compute share
+    slice_shared: jnp.ndarray        # (P, S) bool — slice id s holds >1 share
+    arity: jnp.ndarray               # (P,) i32
+
+
+class QueueArrays(NamedTuple):
+    """Per-queue job terms; leading axis is the (padded) window slot."""
+
+    features: jnp.ndarray            # (W, F) f32 — paper counter features
+    valid: jnp.ndarray               # (W,) bool — real job (not padding)
+    comp: jnp.ndarray                # (W, U) f32 — compute seconds/step
+    mem: jnp.ndarray                 # (W, U) f32 — HBM seconds/step
+    collb: jnp.ndarray               # (W, U) f32 — collective-bytes seconds
+    colll: jnp.ndarray               # (W, U) f32 — collective latency chain
+    fixedt: jnp.ndarray              # (W, U) f32 — fixed + serial seconds
+    steps: jnp.ndarray               # (W,) f32 — job length in steps
+    solo: jnp.ndarray                # (W,) f32 — SoloRunTime
+    cpct: jnp.ndarray                # (W,) f32 — Compute (SM) [%]
+    mpct: jnp.ndarray                # (W,) f32 — Memory [%]
+    mean_c: jnp.ndarray              # () f32 — window mean of cpct
+    mean_m: jnp.ndarray              # () f32 — window mean of mpct
+    mean_d: jnp.ndarray              # () f32 — window mean of solo
+
+
+def build_partition_table(partitions: list[Partition], c_max: int) -> PartitionTable:
+    P, S = len(partitions), c_max
+    valid = np.zeros((P, S), bool)
+    slot_slice = np.zeros((P, S), np.int32)
+    units_idx = np.zeros((P, S), np.int32)
+    units = np.ones((P, S), np.float32)
+    beta = np.ones((P, S), np.float32)
+    shared = np.zeros((P, S), bool)
+    arity = np.zeros((P,), np.int32)
+    for p_i, p in enumerate(partitions):
+        arity[p_i] = p.arity
+        for k, (si, s, b) in enumerate(p.slots):
+            valid[p_i, k] = True
+            slot_slice[p_i, k] = si
+            units_idx[p_i, k] = UNIT_SIZES.index(s.units)
+            units[p_i, k] = s.units
+            beta[p_i, k] = b
+        for si, s in enumerate(p.slices):
+            shared[p_i, si] = len(s.shares) > 1
+    return PartitionTable(*(jnp.asarray(a) for a in
+                            (valid, slot_slice, units_idx, units, beta, shared, arity)))
+
+
+def queue_arrays(queue: list[JobProfile], window: int) -> QueueArrays:
+    """Precompute all job terms the jitted reward needs (numpy, once/queue)."""
+    assert len(queue) <= window, (len(queue), window)
+    W, U, F = window, len(UNIT_SIZES), len(FEATURES)
+    feats = np.zeros((W, F), np.float32)
+    valid = np.zeros((W,), bool)
+    comp, mem, collb, colll, fixedt = (np.zeros((W, U), np.float32) for _ in range(5))
+    fixedt[:] = 1.0                   # harmless nonzero for padded rows
+    steps = np.ones((W,), np.float32)
+    solo = np.zeros((W,), np.float32)
+    cpct = np.zeros((W,), np.float32)
+    mpct = np.zeros((W,), np.float32)
+    for i, j in enumerate(queue):
+        valid[i] = True
+        feats[i] = j.features()
+        for u_i, u in enumerate(UNIT_SIZES):
+            c, m, x = j.terms(u)      # torus factor defaults to the slice's
+            comp[i, u_i], mem[i, u_i], collb[i, u_i] = c, m, x
+            colll[i, u_i] = j.coll_latency(u)
+            fixedt[i, u_i] = j.fixed_latency(u) + j.serial_s
+        steps[i] = j.steps
+        solo[i] = j.solo_time()
+        cpct[i] = j.compute_pct
+        mpct[i] = j.memory_pct
+    n = max(1, len(queue))
+    return QueueArrays(
+        features=jnp.asarray(feats), valid=jnp.asarray(valid),
+        comp=jnp.asarray(comp), mem=jnp.asarray(mem), collb=jnp.asarray(collb),
+        colll=jnp.asarray(colll), fixedt=jnp.asarray(fixedt),
+        steps=jnp.asarray(steps), solo=jnp.asarray(solo),
+        cpct=jnp.asarray(cpct), mpct=jnp.asarray(mpct),
+        mean_c=jnp.float32(cpct[:len(queue)].sum() / n),
+        mean_m=jnp.float32(mpct[:len(queue)].sum() / n),
+        mean_d=jnp.float32(solo[:len(queue)].sum() / n),
+    )
+
+
+def stack_queues(qas: list[QueueArrays]) -> QueueArrays:
+    """Batch per-queue arrays along a new leading axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *qas)
+
+
+# ---------------------------------------------------------------------------
+# water-filling + phase simulation (fixed-shape mirrors of perfmodel.py)
+# ---------------------------------------------------------------------------
+
+def water_fill_vec(demands: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """``perfmodel.water_fill`` over an S-lane vector with an active mask.
+
+    The Python loop removes >=1 sated lane per iteration or terminates, so
+    it reaches the fixed point in at most S iterations; the while form exits
+    as soon as capacity is exhausted or everyone is sated.
+    """
+
+    def cond(carry):
+        _, remaining, act = carry
+        return jnp.any(act) & (remaining > 1e-12)
+
+    def body(carry):
+        alloc, remaining, act = carry
+        fair = remaining / jnp.maximum(jnp.sum(act), 1)
+        sated = act & (demands - alloc <= fair + 1e-15)
+        any_sated = jnp.any(sated)
+        deficit = jnp.sum(jnp.where(sated, demands - alloc, 0.0))
+        remaining = jnp.where(any_sated, remaining - deficit, 0.0)
+        alloc = jnp.where(sated, demands,
+                          jnp.where(~any_sated & act, alloc + fair, alloc))
+        return alloc, remaining, act & ~sated
+
+    alloc, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.zeros_like(demands), jnp.float32(1.0), active))
+    return alloc
+
+
+def _slice_step_times(c, m, xb, xl, fx, active, shared_flag):
+    """Per-step times for the active co-residents of one slice (S lanes)."""
+    n_active = jnp.sum(active)
+    multi = n_active > 1
+    shared_mem = shared_flag & multi
+
+    def cond(carry):
+        _, _, _, _, delta, i = carry
+        return (i < _FP_ITERS) & (delta >= 1e-9)
+
+    def body(carry):
+        mem_t, coll_t, _, _, _, i = carry
+        st = jnp.maximum(jnp.maximum(c, mem_t), coll_t + xl) + fx
+        mem_u = jnp.minimum(1.0, m / st)
+        coll_u = jnp.minimum(1.0, xb / st)
+        ma = water_fill_vec(mem_u, active)
+        ca = water_fill_vec(coll_u, active)
+        use_m = shared_mem & (ma > 1e-12) & (mem_u > ma + 1e-12)
+        use_x = multi & (ca > 1e-12) & (coll_u > ca + 1e-12)
+        tgt_m = jnp.where(use_m, m / jnp.maximum(ma, 1e-30), m)
+        tgt_x = jnp.where(use_x, xb / jnp.maximum(ca, 1e-30), xb)
+        delta = jnp.sum(jnp.where(active, jnp.abs(tgt_m - mem_t)
+                                  + jnp.abs(tgt_x - coll_t), 0.0))
+        return (mem_t + 0.5 * (tgt_m - mem_t), coll_t + 0.5 * (tgt_x - coll_t),
+                mem_u, coll_u, delta, i + 1)
+
+    mem_t, coll_t, mem_u, coll_u, _, _ = jax.lax.while_loop(
+        cond, body,
+        (m, xb, jnp.zeros_like(m), jnp.zeros_like(m), jnp.float32(jnp.inf),
+         jnp.int32(0)))
+    sum_mu = jnp.sum(jnp.where(active, mem_u, 0.0))
+    sum_cu = jnp.sum(jnp.where(active, coll_u, 0.0))
+    km = jnp.where(shared_mem, 1.0 + KAPPA_INTERFERENCE * (sum_mu - mem_u), 1.0)
+    kx = jnp.where(multi, 1.0 + KAPPA_INTERFERENCE * (sum_cu - coll_u), 1.0)
+    t = jnp.maximum(jnp.maximum(c, mem_t * km), (coll_t + xl) * kx) + fx
+    return t * jnp.where(multi, 1.0 + SIGMA_QUANTUM * (n_active - 1), 1.0)
+
+
+def _simulate_slice(c, m, xb, xl, fx, steps, members, shared_flag):
+    """Phase simulation of one slice -> per-lane finish times.
+
+    Completion is detected both by remaining-work underflow (the Python
+    criterion, too strict in float32) and by achieving the phase's minimum
+    finish time, so the argmin job always completes its phase.
+    """
+    S = c.shape[-1]
+
+    def cond(carry):
+        _, active, _, _, i = carry
+        return jnp.any(active) & (i < S)
+
+    def body(carry):
+        remaining, active, t, finish, i = carry
+        st = _slice_step_times(c, m, xb, xl, fx, active, shared_flag)
+        tt = jnp.where(active, remaining * st, jnp.inf)
+        dt = jnp.min(tt)
+        new_rem = jnp.where(active, remaining - dt / st, remaining)
+        done_now = active & ((new_rem <= 1e-9) | (tt <= dt * (1.0 + 1e-6)))
+        finish = jnp.where(done_now, t + dt, finish)
+        return new_rem, active & ~done_now, t + dt, finish, i + 1
+
+    _, _, _, finish, _ = jax.lax.while_loop(
+        cond, body,
+        (jnp.where(members, steps, 0.0), members, jnp.float32(0.0),
+         jnp.zeros_like(steps), jnp.int32(0)))
+    return finish
+
+
+def group_reward(table: PartitionTable, qa: QueueArrays,
+                 group_idx: jnp.ndarray, group_size: jnp.ndarray,
+                 p_idx: jnp.ndarray, r_i_weight: float,
+                 r_f_scale: float) -> jnp.ndarray:
+    """Paper Table VI close-group reward: r_i_weight * Σ r_i + r_f."""
+    S = group_idx.shape[0]
+    W = qa.steps.shape[0]
+    slot_ok = table.slot_valid[p_idx] & (jnp.arange(S) < group_size)
+    j = jnp.clip(group_idx, 0, W - 1)
+    u = table.slot_units_idx[p_idx]
+    beta = table.slot_beta[p_idx]
+    c = qa.comp[j, u] / beta
+    m, xb, xl, fx = qa.mem[j, u], qa.collb[j, u], qa.colll[j, u], qa.fixedt[j, u]
+    steps = qa.steps[j]
+    sl = table.slot_slice[p_idx]
+
+    def per_slice(s, finish):
+        mem = slot_ok & (sl == s)
+        f = _simulate_slice(c, m, xb, xl, fx, steps, mem,
+                            table.slice_shared[p_idx, s])
+        return jnp.where(mem, f, finish)
+
+    finish = jax.lax.fori_loop(0, S, per_slice, jnp.zeros((S,), jnp.float32))
+    makespan = jnp.max(jnp.where(slot_ok, finish, 0.0))
+    solo = jnp.sum(jnp.where(slot_ok, qa.solo[j], 0.0))
+    rf = jnp.where(makespan > 0,
+                   (solo / jnp.maximum(makespan, 1e-30) - 1.0) * r_f_scale, 0.0)
+    sm_alloc = (table.slot_units[p_idx] / N_UNITS) * beta
+    mem_alloc = table.slot_units[p_idx] / N_UNITS
+    cr = qa.cpct[j] / jnp.maximum(qa.mean_c, 1e-9)
+    mr = qa.mpct[j] / jnp.maximum(qa.mean_m, 1e-9)
+    dr = qa.solo[j] / jnp.maximum(qa.mean_d, 1e-9)
+    ri = (sm_alloc * cr + mem_alloc * mr) * dr ** 2
+    return r_i_weight * jnp.sum(jnp.where(slot_ok, ri, 0.0)) + rf

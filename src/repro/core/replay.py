@@ -1,10 +1,101 @@
-"""Uniform experience replay buffer (numpy circular store)."""
+"""Experience replay: JAX-native on-device ring + numpy reference buffer.
+
+``ReplayState`` + ``replay_init/push/sample`` form a pure-functional circular
+buffer that lives on-device and threads through ``lax.scan`` as part of the
+training carry — pushes are batched scatters, sampling is a jitted gather.
+``ReplayBuffer`` keeps the original numpy API for the scalar (seed-equivalent)
+training loop and the single-env agent.
+"""
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
 import numpy as np
+
+FIELDS = ("s", "a", "r", "s2", "done", "mask2")
+
+
+class ReplayState(NamedTuple):
+    """Ring buffer contents + cursor; capacity is the static leading dim."""
+
+    s: jnp.ndarray                   # (C, state_dim) f32
+    a: jnp.ndarray                   # (C,) i32
+    r: jnp.ndarray                   # (C,) f32
+    s2: jnp.ndarray                  # (C, state_dim) f32
+    done: jnp.ndarray                # (C,) f32
+    mask2: jnp.ndarray               # (C, n_actions) bool
+    ptr: jnp.ndarray                 # () i32 — next write slot
+    size: jnp.ndarray                # () i32 — filled entries (<= C)
+
+    @property
+    def capacity(self) -> int:
+        return self.a.shape[0]
+
+
+def replay_init(capacity: int, state_dim: int, n_actions: int) -> ReplayState:
+    return ReplayState(
+        s=jnp.zeros((capacity, state_dim), jnp.float32),
+        a=jnp.zeros((capacity,), jnp.int32),
+        r=jnp.zeros((capacity,), jnp.float32),
+        s2=jnp.zeros((capacity, state_dim), jnp.float32),
+        done=jnp.zeros((capacity,), jnp.float32),
+        mask2=jnp.zeros((capacity, n_actions), bool),
+        ptr=jnp.int32(0),
+        size=jnp.int32(0),
+    )
+
+
+def replay_push(rs: ReplayState, batch: dict) -> ReplayState:
+    """Write B transitions at the cursor (wrapping); pure, jit-able.
+
+    Contract: every push to a given ring must use the **same** block size,
+    and that size must divide the capacity (the training driver rounds
+    capacity up to a multiple of B).  Uniform block-aligned writes keep each
+    push one contiguous ``dynamic_update_slice`` — XLA updates those in
+    place when the buffer is a loop carry, whereas a gather-indexed scatter
+    copies the whole ring every scan step.  Mixed push sizes would leave the
+    cursor mid-block where ``dynamic_update_slice`` clamps instead of
+    wrapping; the divisibility assert below catches size/capacity mismatch,
+    uniformity is the caller's obligation.
+    """
+    cap = rs.capacity
+    n = batch["a"].shape[0]
+    assert cap % n == 0, f"push size {n} must divide capacity {cap}"
+    if not isinstance(rs.ptr, jax.core.Tracer):
+        # eager path: catch mixed block sizes before they corrupt the ring
+        # (inside jit the cursor is a tracer; the engine pushes uniformly)
+        assert int(rs.ptr) % n == 0, (
+            f"cursor {int(rs.ptr)} not aligned to push size {n} — all pushes "
+            "to a ring must use one block size")
+
+    def put(buf, new):
+        new = new.astype(buf.dtype)
+        start = (rs.ptr,) + (jnp.int32(0),) * (buf.ndim - 1)
+        return jax.lax.dynamic_update_slice(buf, new, start)
+
+    return rs._replace(
+        s=put(rs.s, batch["s"]),
+        a=put(rs.a, batch["a"]),
+        r=put(rs.r, batch["r"]),
+        s2=put(rs.s2, batch["s2"]),
+        done=put(rs.done, batch["done"]),
+        mask2=put(rs.mask2, batch["mask2"]),
+        ptr=(rs.ptr + n) % cap,
+        size=jnp.minimum(rs.size + n, cap),
+    )
+
+
+def replay_sample(rs: ReplayState, key: jax.Array, n: int) -> dict:
+    """Uniform sample of n transitions from the filled region."""
+    idx = jax.random.randint(key, (n,), 0, jnp.maximum(rs.size, 1))
+    return {f: getattr(rs, f)[idx] for f in FIELDS}
 
 
 class ReplayBuffer:
+    """Uniform replay (numpy circular store) for the scalar training loop."""
+
     def __init__(self, capacity: int, state_dim: int, n_actions: int, seed: int = 0):
         self.capacity = capacity
         self.rng = np.random.default_rng(seed)

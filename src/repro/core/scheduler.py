@@ -1,6 +1,8 @@
 """Online phase (paper §IV-B): trained agent -> (L_JS, L_R) for a queue.
 
-The agent runs greedily (ε = 0). The §IV-A constraint
+The agent runs greedily (ε = 0) on the stateful reference env — greedy
+calls do not advance the agent's ε-decay schedule, so scheduling/evaluation
+frequency never perturbs training exploration. The §IV-A constraint
 ``CoRunTime <= SoloRunTime`` is then *enforced by construction*: any group
 whose predicted co-run loses to time sharing is split back into solo runs
 (the paper's constraint-1 guard).  Jobs without a profile in the repository

@@ -1,16 +1,53 @@
-"""Offline RL training (paper §IV-B): random queues over the zoo, ε-greedy
-exploration, dueling double-DQN updates; held-out jobs excluded (paper's
-unseen-application generalization test)."""
+"""Offline RL training (paper §IV-B) on a vectorized pure-functional engine.
+
+``train_agent`` drives B parallel environments through a single jitted
+``lax.scan``: vmapped ε-greedy action selection, batched ``EnvState.step``
+transitions, pushes into the on-device replay ring, and interleaved
+double-DQN updates all live in one compiled program — no per-step Python
+dispatch.  Episodes auto-reset inside the scan; the driver peels off
+segments of ~``eval_every`` episodes, runs the greedy evaluation rollout,
+and emits history records with the same keys as the original loop.
+Record semantics are segment-granular: ``episode`` is the cumulative
+completed-episode count when the record was taken (it can overshoot
+``cfg.episodes`` by up to one segment) and ``ep_reward`` is the mean
+return of the episodes completed in that segment, not a single episode's
+total.
+
+``train_agent_scalar`` preserves the seed per-step Python loop verbatim —
+it is the semantic reference for the parity test and the baseline for
+``benchmarks/train_throughput.py``.
+
+Random queues over the zoo, ε-greedy exploration, dueling double-DQN
+updates; held-out jobs excluded (paper's unseen-application generalization
+test).
+
+**Deliberate default-cadence change:** the scalar seed loop ran 1 DQN
+update per env transition (128 gradient samples per transition — far above
+the classic DQN ratio).  The vectorized default is 1 update per
+``update_every`` (16) transitions = 8 samples/transition, the
+DeepMind-classic cadence; with the target network synced on a fixed
+*transition* cadence this trains schedulers whose throughput clears the
+seed acceptance bar across seeds.  Set ``update_every=1`` to recover the
+seed's update work exactly (at matched update work the scanned engine is
+no faster than the scalar loop — updates dominate; see BENCH_train.json's
+``speedup_matched_updates``).
+"""
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent import DQNAgent, DQNConfig
-from repro.core.env import CoScheduleEnv, EnvConfig
+from repro.core.agent import DQNAgent, DQNConfig, _dqn_update, act_batch, epsilon_at
+from repro.core.env import CoScheduleEnv, EnvConfig, EnvState, VecCoScheduleEnv
 from repro.core.metrics import relative_throughput
+from repro.core.perfmodel_jax import stack_queues
 from repro.core.profiles import JobProfile
+from repro.core.replay import ReplayState, replay_init, replay_push, replay_sample
 from repro.core.scheduler import RLScheduler
 from repro.core.workloads import QUEUE_KINDS, make_queue
 
@@ -22,6 +59,8 @@ class TrainConfig:
     n_train_queues: int = 20            # paper: 20 random queues for training
     seed: int = 0
     eval_every: int = 100
+    batch_envs: int = 16                # B parallel envs in the scanned engine
+    update_every: int = 16              # env transitions per DQN update
     dqn: DQNConfig = field(default_factory=DQNConfig)
 
 
@@ -39,22 +78,229 @@ def heldout_split(jobs: list[JobProfile], frac: float = 0.33, seed: int = 7):
     return held
 
 
+def _train_queues(jobs, env_cfg, cfg, heldout, rng):
+    """20 fixed training queues, all classes represented (paper §V-A2)."""
+    return [
+        make_queue(jobs, QUEUE_KINDS[i % len(QUEUE_KINDS)], env_cfg.window, rng,
+                   exclude=heldout)
+        for i in range(cfg.n_train_queues)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Scanned rollout+update engine
+# ---------------------------------------------------------------------------
+
+class _Carry(NamedTuple):
+    env: EnvState                        # B-batched episode states
+    obs: jnp.ndarray                     # (B, D)
+    mask: jnp.ndarray                    # (B, A)
+    reset_env: EnvState                  # per-env episode-start states
+    reset_obs: jnp.ndarray
+    reset_mask: jnp.ndarray
+    params: dict
+    target: dict
+    opt: dict
+    replay: ReplayState
+    key: jax.Array
+    env_steps: jnp.ndarray               # () i32
+    updates: jnp.ndarray                 # () i32
+    ep_ret: jnp.ndarray                  # (B,) running episode returns
+
+
+def _bsel(pred, a, b):
+    """Per-env tree select: pred (B,) broadcast over each leaf's trailing dims."""
+    def sel(x, y):
+        p = pred.reshape(pred.shape + (1,) * (x.ndim - 1))
+        return jnp.where(p, x, y)
+    return jax.tree.map(sel, a, b)
+
+
+def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
+                  batch_envs: int, updates_per_scan: int,
+                  update_period: int, target_sync_updates: int):
+    """One scan step = B env transitions + gated DQN updates.
+
+    ``updates_per_scan`` updates run every ``update_period``-th scan step —
+    the two together honor ``update_every`` whether B is larger or smaller
+    than it.  ``target_sync_updates`` is the sync period in *updates*,
+    pre-scaled by the driver so the target network refreshes on the same
+    env-transition cadence as the scalar loop (whose 1:1 update ratio made
+    ``DQNConfig.target_sync`` updates == transitions).
+    """
+    B = batch_envs
+
+    def body(c: _Carry, _):
+        key, k_act, k_upd = jax.random.split(c.key, 3)
+        env_steps = c.env_steps + B
+        eps = epsilon_at(dqn_cfg, env_steps)
+        a = act_batch(c.params, k_act, c.obs, c.mask, eps)
+        env2, obs2, r, done, mask2 = venv.step_batch(c.env, a)
+        replay = replay_push(c.replay, {
+            "s": c.obs, "a": a, "r": r, "s2": obs2,
+            "done": done.astype(jnp.float32), "mask2": mask2})
+        scan_t = env_steps // B                       # 1-based scan step index
+        can = (replay.size >= dqn_cfg.batch_size) & (scan_t % update_period == 0)
+
+        def upd(_, uc):
+            params, target, opt, updates, k = uc
+            k, k_s = jax.random.split(k)
+            batch = replay_sample(replay, k_s, dqn_cfg.batch_size)
+            params, opt, _ = _dqn_update(params, target, opt, batch, dqn_cfg)
+            updates = updates + 1
+            sync = updates % target_sync_updates == 0
+            target = jax.tree.map(lambda p, t: jnp.where(sync, p, t),
+                                  params, target)
+            return params, target, opt, updates, k
+
+        # `can` is a scalar (the body is not vmapped), so cond really skips
+        # the untaken branch — no tree-wide where copies, and warmup steps
+        # before the buffer fills pay nothing
+        params, target, opt, updates, _ = jax.lax.cond(
+            can,
+            lambda uc: jax.lax.fori_loop(0, updates_per_scan, upd, uc),
+            lambda uc: uc,
+            (c.params, c.target, c.opt, c.updates, k_upd))
+        ep_all = c.ep_ret + r
+        carry = _Carry(
+            env=_bsel(done, c.reset_env, env2),
+            obs=jnp.where(done[:, None], c.reset_obs, obs2),
+            mask=jnp.where(done[:, None], c.reset_mask, mask2),
+            reset_env=c.reset_env, reset_obs=c.reset_obs, reset_mask=c.reset_mask,
+            params=params, target=target, opt=opt, replay=replay, key=key,
+            env_steps=env_steps, updates=updates,
+            ep_ret=jnp.where(done, 0.0, ep_all),
+        )
+        return carry, (done, jnp.where(done, ep_all, 0.0))
+
+    def run_segment(carry: _Carry, n_steps: int):
+        return jax.lax.scan(body, carry, None, length=n_steps)
+
+    # donate the carry: the replay ring is ~100 MB and re-enters every
+    # segment — without donation each call copies it across the jit boundary
+    return jax.jit(run_segment, static_argnums=1, donate_argnums=0)
+
+
+_ENGINE_CACHE: dict = {}
+
+
+def _engine_for(env_cfg: EnvConfig, dqn_cfg: DQNConfig,
+                batch_envs: int, updates_per_scan: int,
+                update_period: int, target_sync_updates: int):
+    key = (env_cfg.key(), dqn_cfg, batch_envs, updates_per_scan,
+           update_period, target_sync_updates)
+    if key not in _ENGINE_CACHE:
+        venv = VecCoScheduleEnv(env_cfg)
+        _ENGINE_CACHE[key] = (venv, _build_engine(venv, dqn_cfg, batch_envs,
+                                                  updates_per_scan,
+                                                  update_period,
+                                                  target_sync_updates))
+        while len(_ENGINE_CACHE) > 8:      # bound compiled-engine retention
+            _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
+    return _ENGINE_CACHE[key]
+
+
 def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
                 cfg: TrainConfig | None = None, heldout: set[str] | None = None,
                 verbose: bool = False) -> tuple[DQNAgent, list[dict]]:
+    """Train on the scanned vectorized engine; same signature/records as ever."""
+    cfg = cfg or TrainConfig()
+    env_cfg = env_cfg or EnvConfig()
+    B = cfg.batch_envs
+    # honor the configured updates-per-transition ratio on both sides of
+    # B vs update_every: several updates per scan step when B is larger,
+    # one update every few scan steps when B is smaller
+    ratio = B * cfg.updates_per_step / max(1, cfg.update_every)
+    if ratio >= 1.0:
+        updates_per_scan, update_period = max(1, round(ratio)), 1
+    else:
+        updates_per_scan, update_period = 1, max(1, round(1.0 / ratio))
+    # keep the target-refresh cadence fixed in env transitions (the scalar
+    # loop's 1:1 ratio made target_sync updates == transitions)
+    sync_updates = max(1, round(cfg.dqn.target_sync * updates_per_scan
+                                / (B * update_period)))
+    venv, engine = _engine_for(env_cfg, cfg.dqn, B, updates_per_scan,
+                               update_period, sync_updates)
+    agent = DQNAgent(venv.state_dim, venv.n_actions, cfg.dqn, seed=cfg.seed)
+    rng = np.random.default_rng(cfg.seed)
+    heldout = heldout if heldout is not None else heldout_split(jobs)
+    train_queues = _train_queues(jobs, env_cfg, cfg, heldout, rng)
+    qa = [venv.queue_arrays(q) for q in train_queues]
+
+    # segment length targeting ~eval_every completed episodes per scan;
+    # never below one worst-case episode (2W steps: all-solo groups) —
+    # env state resets at segment boundaries, so a shorter segment would
+    # complete zero episodes and the driver loop could never terminate
+    ep_len = env_cfg.window + math.ceil(env_cfg.window / env_cfg.c_max)
+    seg_eps = max(1, min(cfg.eval_every, cfg.episodes))
+    seg_steps = max(2 * env_cfg.window, math.ceil(seg_eps * ep_len / B))
+
+    params, target, opt = agent.params, agent.target_params, agent.opt
+    # round capacity up to a multiple of B: ring writes stay block-aligned
+    capacity = -(-cfg.dqn.buffer_size // B) * B
+    replay = replay_init(capacity, venv.state_dim, venv.n_actions)
+    key = jax.random.PRNGKey(cfg.seed)
+    env_steps = jnp.int32(0)
+    updates = jnp.int32(0)
+    eval_every = max(1, cfg.eval_every)
+    episodes_done, next_eval = 0, eval_every
+    history: list[dict] = []
+
+    while episodes_done < cfg.episodes:
+        # each env runs one of the 20 fixed queues for this segment
+        env_q = rng.integers(0, len(train_queues), size=B)
+        qa_batch = stack_queues([qa[i] for i in env_q])
+        r_env, r_obs, r_mask = venv.reset_batch(qa_batch)
+        # distinct buffers for the live-env side: the jitted segment donates
+        # its carry, and XLA rejects the same buffer donated twice
+        live_env = jax.tree.map(jnp.copy, r_env)
+        carry = _Carry(env=live_env, obs=jnp.copy(r_obs), mask=jnp.copy(r_mask),
+                       reset_env=r_env, reset_obs=r_obs, reset_mask=r_mask,
+                       params=params, target=target, opt=opt, replay=replay,
+                       key=key, env_steps=env_steps, updates=updates,
+                       ep_ret=jnp.zeros((B,), jnp.float32))
+        carry, (dones, rets) = engine(carry, seg_steps)
+        params, target, opt, replay, key = (carry.params, carry.target, carry.opt,
+                                            carry.replay, carry.key)
+        env_steps, updates = carry.env_steps, carry.updates
+        n_done = int(np.asarray(dones).sum())
+        episodes_done += n_done
+        if episodes_done >= next_eval or episodes_done >= cfg.episodes:
+            agent.params, agent.target_params, agent.opt = params, target, opt
+            agent.env_steps, agent.updates = int(env_steps), int(updates)
+            sched = RLScheduler(agent, env_cfg).schedule(train_queues[0])
+            ep_reward = float(np.asarray(rets).sum() / max(1, n_done))
+            rec = {"episode": episodes_done, "eps": agent.epsilon,
+                   "ep_reward": ep_reward,
+                   "eval_throughput": relative_throughput(sched)}
+            history.append(rec)
+            next_eval = (episodes_done // eval_every + 1) * eval_every
+            if verbose:
+                print(f"ep {rec['episode']:5d} eps={rec['eps']:.3f} "
+                      f"reward={rec['ep_reward']:8.1f} "
+                      f"eval_tp={rec['eval_throughput']:.3f}")
+
+    agent.params, agent.target_params, agent.opt = params, target, opt
+    agent.env_steps, agent.updates = int(env_steps), int(updates)
+    return agent, history
+
+
+# ---------------------------------------------------------------------------
+# Seed-equivalent scalar loop (reference + throughput baseline)
+# ---------------------------------------------------------------------------
+
+def train_agent_scalar(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
+                       cfg: TrainConfig | None = None,
+                       heldout: set[str] | None = None,
+                       verbose: bool = False) -> tuple[DQNAgent, list[dict]]:
+    """The original per-step Python training loop, preserved verbatim."""
     cfg = cfg or TrainConfig()
     env_cfg = env_cfg or EnvConfig()
     env = CoScheduleEnv(env_cfg)
     agent = DQNAgent(env.state_dim, env.n_actions, cfg.dqn, seed=cfg.seed)
     rng = np.random.default_rng(cfg.seed)
     heldout = heldout if heldout is not None else heldout_split(jobs)
-
-    # 20 fixed training queues, all classes represented (paper §V-A2)
-    train_queues = [
-        make_queue(jobs, QUEUE_KINDS[i % len(QUEUE_KINDS)], env_cfg.window, rng,
-                   exclude=heldout)
-        for i in range(cfg.n_train_queues)
-    ]
+    train_queues = _train_queues(jobs, env_cfg, cfg, heldout, rng)
 
     history: list[dict] = []
     for ep in range(cfg.episodes):
@@ -69,7 +315,7 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
             ep_reward += r
             for _ in range(cfg.updates_per_step):
                 agent.update()
-        if (ep + 1) % cfg.eval_every == 0 or ep == cfg.episodes - 1:
+        if (ep + 1) % max(1, cfg.eval_every) == 0 or ep == cfg.episodes - 1:
             sched = RLScheduler(agent, env_cfg).schedule(train_queues[0])
             rec = {"episode": ep + 1, "eps": agent.epsilon, "ep_reward": ep_reward,
                    "eval_throughput": relative_throughput(sched)}

@@ -1,0 +1,114 @@
+"""Minimal stand-in for hypothesis so property tests run without the dep.
+
+The container does not ship ``hypothesis``; importing it at module scope
+used to abort the whole tier-1 suite at collection.  Test modules import
+through this shim::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+The shim implements just the surface this repo uses — ``@given`` with
+keyword strategies, ``@settings(max_examples=...)``, and the ``integers``,
+``floats``, ``booleans``, ``sampled_from``, and ``lists`` strategies —
+drawing examples from a deterministic per-test RNG.  No shrinking, no
+database; failures report the drawn example in the assertion chain.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+class settings:  # noqa: N801 — decorator + profile API lookalike
+    def __init__(self, max_examples=None, **_):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._compat_max_examples = self.max_examples
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        pass
+
+    @classmethod
+    def load_profile(cls, name):
+        pass
+
+
+def given(*pos_strategies, **strategies):
+    def deco(fn):
+        if pos_strategies:
+            # hypothesis maps positional strategies onto the rightmost params
+            import inspect
+
+            names = list(inspect.signature(fn).parameters)
+            mapped = dict(zip(names[len(names) - len(pos_strategies):],
+                              pos_strategies))
+            assert not (set(mapped) & set(strategies))
+            strategies.update(mapped)
+
+        def wrapper():
+            # zero-arg signature: pytest must not mistake drawn params
+            # for fixtures.  @settings may sit above @given (stamping the
+            # wrapper) or below it (stamping fn) — honor both orders.
+            n = (getattr(wrapper, "_compat_max_examples", None)
+                 or getattr(fn, "_compat_max_examples", None)
+                 or DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"{fn.__name__} failed on example {i}: {drawn!r}") from e
+        functools.update_wrapper(wrapper, fn, updated=())
+        del wrapper.__wrapped__             # keep pytest off fn's signature
+        return wrapper
+    return deco

@@ -1,15 +1,24 @@
 """Test session setup: lock jax to the default 1-device CPU backend early so
 any later import that touches XLA_FLAGS (e.g. repro.launch.dryrun helpers)
-cannot change the device count, and keep hypothesis CI-friendly."""
+cannot change the device count, and keep hypothesis CI-friendly.
+
+Hypothesis is optional: when it is absent the profile registration is
+skipped and test modules fall back to the deterministic shim in
+``_hypothesis_compat`` — the suite must never abort at collection because
+of a missing dev dependency."""
 import jax
-from hypothesis import HealthCheck, settings
 
 jax.devices()  # initialize backend now (1 CPU device)
 
-settings.register_profile(
-    "ci",
-    max_examples=20,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("ci")
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:
+    pass
+else:
+    settings.register_profile(
+        "ci",
+        max_examples=20,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("ci")

@@ -1,7 +1,11 @@
 """RL environment + agent invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import EnvConfig, make_zoo, validate_schedule
 from repro.core.agent import DQNAgent, DQNConfig, _dqn_update
@@ -68,6 +72,18 @@ def test_masked_argmax():
     assert int(masked_argmax(q, mask)[0]) == 2
 
 
+def test_masked_argmax_tie_takes_lowest_valid_index():
+    """Exact Q ties must resolve to the first valid action, deterministically."""
+    q = jnp.array([[2.0, 7.0, 7.0, 7.0]])
+    mask = jnp.array([[True, False, True, True]])
+    assert int(masked_argmax(q, mask)[0]) == 2
+    # all-equal rows: the first *valid* index wins
+    q0 = jnp.zeros((1, 4))
+    assert int(masked_argmax(q0, mask)[0]) == 0
+    assert int(masked_argmax(q0, jnp.array([[False, False, True, True]]))[0]) == 2
+    assert int(masked_argmax(q0, jnp.ones((1, 4), bool))[0]) == 0
+
+
 def test_dqn_shapes_and_dueling():
     import jax
 
@@ -81,8 +97,6 @@ def test_dqn_shapes_and_dueling():
 
 
 def test_dqn_update_reduces_td_loss():
-    import jax
-
     cfg = DQNConfig(lr=1e-2)
     agent = DQNAgent(10, 4, cfg, seed=0)
     rng = np.random.default_rng(0)
@@ -108,6 +122,18 @@ def test_agent_act_respects_mask():
     for _ in range(10):
         a = agent.act(np.zeros(10, np.float32), mask)
         assert mask[a]
+
+
+def test_greedy_act_does_not_advance_epsilon_schedule():
+    """Evaluation (greedy) calls must not consume ε-decay env steps."""
+    agent = DQNAgent(10, 5, DQNConfig(eps_decay_steps=100), seed=0)
+    mask = np.ones(5, bool)
+    eps0 = agent.epsilon
+    for _ in range(20):
+        agent.act(np.zeros(10, np.float32), mask, greedy=True)
+    assert agent.env_steps == 0 and agent.epsilon == eps0
+    agent.act(np.zeros(10, np.float32), mask)          # exploration step
+    assert agent.env_steps == 1 and agent.epsilon < eps0
 
 
 def test_replay_cycles():

@@ -71,6 +71,29 @@ def test_scheduler_online_protocol_unprofiled_jobs_run_solo():
     assert QUEUE[2].name in names
 
 
+def test_best_for_group_defaults_to_full_permutation_sweep():
+    """The oracle's per-group search must cover all C! slot orderings —
+    a truncated sweep (the old max_perms=8) is not an upper bound."""
+    import itertools
+
+    from repro.core.baselines import _best_for_group
+    from repro.core.partition import enumerate_partitions
+    from repro.core.perfmodel import corun_time
+
+    group = [ZOO[i] for i in (0, 12, 20, 25)]     # mixed CI/MI/US 4-group
+    parts = [p for p in enumerate_partitions(4) if p.arity == 4]
+    t_default, p_default, _ = _best_for_group(group, parts)
+    brute = min(
+        corun_time([group[i] for i in perm], p)
+        for p in parts
+        for perm in itertools.permutations(range(4))
+    )
+    assert t_default == brute
+    # a truncated sweep can only be worse or equal
+    t_trunc, _, _ = _best_for_group(group, parts, max_perms=1)
+    assert t_default <= t_trunc
+
+
 def test_window_scaling_monotone_for_oracle():
     """Paper Fig. 9: more window -> no less throughput (oracle)."""
     rng = np.random.default_rng(1)
