@@ -4,7 +4,6 @@ from __future__ import annotations
 import os
 import time
 
-import numpy as np
 
 from repro import checkpoint as ck
 from repro.core import DQNAgent, EnvConfig, RLScheduler, TrainConfig, make_zoo, train_agent

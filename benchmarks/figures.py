@@ -8,7 +8,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit, get_zoo, rl_scheduler
-from repro.core import POLICIES, Schedule, corun_time, solo_run_time, summarize, paper_queues
+from repro.core import POLICIES, Schedule, corun_time, solo_run_time, paper_queues
 from repro.core.metrics import avg_app_slowdown, fairness, relative_throughput
 from repro.core.partition import Partition, Slice, enumerate_partitions
 from repro.core.workloads import zoo_by_class

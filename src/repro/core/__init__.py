@@ -1,7 +1,7 @@
 """The paper's primary contribution: RL-based co-optimization of hierarchical
 resource partitioning (Level-1 mesh slicing + Level-2 fractional sharing) and
 co-scheduling group selection. See DESIGN.md §2 for the GPU->TPU mapping."""
-from repro.core.agent import DQNAgent, DQNConfig, act_batch, epsilon_at
+from repro.core.agent import DQNAgent, DQNConfig, act_batch, beta_at, epsilon_at
 from repro.core.baselines import POLICIES, oracle, time_sharing
 from repro.core.env import CoScheduleEnv, EnvConfig, EnvState, VecCoScheduleEnv
 from repro.core.metrics import summarize
@@ -9,7 +9,11 @@ from repro.core.partition import Partition, Slice, enumerate_partitions
 from repro.core.perfmodel import corun, corun_time, solo_run_time
 from repro.core.problem import Schedule, validate_schedule
 from repro.core.profiles import JobProfile, ProfileRepository, analytic_profile
-from repro.core.replay import ReplayState, replay_init, replay_push, replay_sample
+from repro.core.replay import (
+    PrioritizedReplayBuffer, PrioritizedReplayState, ReplayBuffer, ReplayState,
+    per_init, per_push, per_sample, per_update, replay_init, replay_push,
+    replay_sample,
+)
 from repro.core.scheduler import RLScheduler
 from repro.core.train import (
     TrainConfig, heldout_split, train_agent, train_agent_scalar,
@@ -18,11 +22,13 @@ from repro.core.workloads import make_queue, make_zoo, paper_queues
 
 __all__ = [
     "CoScheduleEnv", "DQNAgent", "DQNConfig", "EnvConfig", "EnvState",
-    "JobProfile", "POLICIES", "Partition", "ProfileRepository",
-    "RLScheduler", "ReplayState", "Schedule", "Slice", "TrainConfig",
-    "VecCoScheduleEnv", "act_batch", "analytic_profile", "corun",
+    "JobProfile", "POLICIES", "Partition", "PrioritizedReplayBuffer",
+    "PrioritizedReplayState", "ProfileRepository", "RLScheduler",
+    "ReplayBuffer", "ReplayState", "Schedule", "Slice", "TrainConfig",
+    "VecCoScheduleEnv", "act_batch", "analytic_profile", "beta_at", "corun",
     "corun_time", "enumerate_partitions", "epsilon_at", "heldout_split",
-    "make_queue", "make_zoo", "oracle", "paper_queues", "replay_init",
-    "replay_push", "replay_sample", "solo_run_time", "summarize",
-    "time_sharing", "train_agent", "train_agent_scalar", "validate_schedule",
+    "make_queue", "make_zoo", "oracle", "paper_queues", "per_init",
+    "per_push", "per_sample", "per_update", "replay_init", "replay_push",
+    "replay_sample", "solo_run_time", "summarize", "time_sharing",
+    "train_agent", "train_agent_scalar", "validate_schedule",
 ]

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.network import dqn_apply, init_dqn, masked_argmax
-from repro.core.replay import ReplayBuffer
+from repro.core.replay import PrioritizedReplayBuffer, ReplayBuffer
 
 
 @dataclass(frozen=True)
@@ -43,35 +43,65 @@ def _adam_init(params):
             "t": jnp.zeros((), jnp.int32)}
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def _dqn_update(params, target_params, opt, batch, cfg: DQNConfig):
-    def loss_fn(p):
-        q = dqn_apply(p, batch["s"])                                   # (B, A)
-        q_sa = jnp.take_along_axis(q, batch["a"][:, None], axis=1)[:, 0]
-        # double DQN: online argmax (masked), target value
-        q2_online = dqn_apply(p, batch["s2"])
-        a2 = masked_argmax(q2_online, batch["mask2"])
-        q2_target = dqn_apply(target_params, batch["s2"])
-        v2 = jnp.take_along_axis(q2_target, a2[:, None], axis=1)[:, 0]
-        v2 = jnp.where(batch["mask2"].any(axis=1), v2, 0.0)           # terminal: no actions
-        y = batch["r"] * cfg.reward_scale + cfg.gamma * (1.0 - batch["done"]) * v2
-        y = jax.lax.stop_gradient(y)
-        err = q_sa - y
-        huber = jnp.where(jnp.abs(err) <= cfg.huber_delta,
-                          0.5 * err ** 2,
-                          cfg.huber_delta * (jnp.abs(err) - 0.5 * cfg.huber_delta))
-        return jnp.mean(huber)
+def _td_and_huber(p, target_params, batch, cfg: DQNConfig):
+    """Per-sample double-DQN TD error and its Huber transform."""
+    q = dqn_apply(p, batch["s"])                                       # (B, A)
+    q_sa = jnp.take_along_axis(q, batch["a"][:, None], axis=1)[:, 0]
+    # double DQN: online argmax (masked), target value
+    q2_online = dqn_apply(p, batch["s2"])
+    a2 = masked_argmax(q2_online, batch["mask2"])
+    q2_target = dqn_apply(target_params, batch["s2"])
+    v2 = jnp.take_along_axis(q2_target, a2[:, None], axis=1)[:, 0]
+    v2 = jnp.where(batch["mask2"].any(axis=1), v2, 0.0)               # terminal: no actions
+    y = batch["r"] * cfg.reward_scale + cfg.gamma * (1.0 - batch["done"]) * v2
+    y = jax.lax.stop_gradient(y)
+    err = q_sa - y
+    huber = jnp.where(jnp.abs(err) <= cfg.huber_delta,
+                      0.5 * err ** 2,
+                      cfg.huber_delta * (jnp.abs(err) - 0.5 * cfg.huber_delta))
+    return err, huber
 
-    loss, grads = jax.value_and_grad(loss_fn)(params)
+
+def _adam_step(params, grads, opt, lr: float):
     t = opt["t"] + 1
     b1, b2, eps = 0.9, 0.999, 1e-8
     m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
     v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
     tf = t.astype(jnp.float32)
-    lr_t = cfg.lr * jnp.sqrt(1 - b2 ** tf) / (1 - b1 ** tf)
+    lr_t = lr * jnp.sqrt(1 - b2 ** tf) / (1 - b1 ** tf)
     params = jax.tree.map(lambda p, m_, v_: p - lr_t * m_ / (jnp.sqrt(v_) + eps),
                           params, m, v)
-    return params, {"m": m, "v": v, "t": t}, loss
+    return params, {"m": m, "v": v, "t": t}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _dqn_update(params, target_params, opt, batch, cfg: DQNConfig):
+    def loss_fn(p):
+        _, huber = _td_and_huber(p, target_params, batch, cfg)
+        return jnp.mean(huber)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt = _adam_step(params, grads, opt, cfg.lr)
+    return params, opt, loss
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _dqn_update_per(params, target_params, opt, batch, w, cfg: DQNConfig):
+    """Importance-weighted double-DQN update -> (params, opt, loss, |td|).
+
+    ``w`` are per-sample IS weights from the prioritized sampler (applied
+    inside the loss); the returned absolute TD errors feed the sum-tree
+    priority refresh.  With ``w == 1`` this is bit-identical to
+    ``_dqn_update`` — multiplying the Huber terms by exact ones changes no
+    float — which is what keeps ``per_alpha = 0`` a true uniform engine.
+    """
+    def loss_fn(p):
+        err, huber = _td_and_huber(p, target_params, batch, cfg)
+        return jnp.mean(w * huber), jnp.abs(err)
+
+    (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt = _adam_step(params, grads, opt, cfg.lr)
+    return params, opt, loss, td
 
 
 @jax.jit
@@ -91,6 +121,21 @@ def epsilon_at(cfg: DQNConfig, env_steps):
     return cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
 
 
+def beta_at(beta0: float, env_steps, decay_steps: int):
+    """Linear IS-exponent anneal β0 -> 1 over the ε-decay horizon.
+
+    Prioritized replay's bias correction should be complete (β = 1) by the
+    time exploration has settled, so β shares ``eps_decay_steps``.  Accepts
+    a plain int (scalar loop) or a traced array (scanned engine), like
+    ``epsilon_at``.
+    """
+    if isinstance(env_steps, (int, float)):
+        frac = min(1.0, env_steps / max(1, decay_steps))
+    else:
+        frac = jnp.clip(env_steps / max(1, decay_steps), 0.0, 1.0)
+    return beta0 + (1.0 - beta0) * frac
+
+
 @jax.jit
 def act_batch(params, key, obs, mask, eps):
     """Vmapped masked ε-greedy: one action per env row.
@@ -108,7 +153,8 @@ def act_batch(params, key, obs, mask, eps):
 
 class DQNAgent:
     def __init__(self, state_dim: int, n_actions: int, cfg: DQNConfig | None = None,
-                 seed: int = 0):
+                 seed: int = 0, per_alpha: float = 0.0, per_beta0: float = 0.4,
+                 per_eps: float = 1e-3):
         self.cfg = cfg or DQNConfig()
         key = jax.random.PRNGKey(seed)
         self.params = init_dqn(key, state_dim, n_actions)
@@ -116,6 +162,9 @@ class DQNAgent:
         self.opt = _adam_init(self.params)
         self._replay: ReplayBuffer | None = None   # lazy: ~100 MB at defaults
         self._replay_shape = (state_dim, n_actions, seed)
+        self.per_alpha = per_alpha                 # 0 -> uniform replay
+        self.per_beta0 = per_beta0
+        self.per_eps = per_eps
         self.rng = np.random.default_rng(seed)
         self.env_steps = 0
         self.updates = 0
@@ -126,7 +175,12 @@ class DQNAgent:
         own on-device ring, so allocation waits for first use."""
         if self._replay is None:
             d, a, seed = self._replay_shape
-            self._replay = ReplayBuffer(self.cfg.buffer_size, d, a, seed)
+            if self.per_alpha > 0:
+                self._replay = PrioritizedReplayBuffer(
+                    self.cfg.buffer_size, d, a, seed,
+                    alpha=self.per_alpha, eps=self.per_eps)
+            else:
+                self._replay = ReplayBuffer(self.cfg.buffer_size, d, a, seed)
         return self._replay
 
     # ----------------------------------------------------------------- act
@@ -152,10 +206,19 @@ class DQNAgent:
     def update(self) -> float | None:
         if len(self.replay) < self.cfg.batch_size:
             return None
-        batch = self.replay.sample(self.cfg.batch_size)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        self.params, self.opt, loss = _dqn_update(
-            self.params, self.target_params, self.opt, batch, self.cfg)
+        if self.per_alpha > 0:
+            beta = beta_at(self.per_beta0, self.env_steps, self.cfg.eps_decay_steps)
+            batch, idx, w = self.replay.sample(self.cfg.batch_size, beta)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt, loss, td = _dqn_update_per(
+                self.params, self.target_params, self.opt, batch,
+                jnp.asarray(w), self.cfg)
+            self.replay.update_priorities(idx, np.asarray(td))
+        else:
+            batch = self.replay.sample(self.cfg.batch_size)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt, loss = _dqn_update(
+                self.params, self.target_params, self.opt, batch, self.cfg)
         self.updates += 1
         if self.updates % self.cfg.target_sync == 0:
             self.target_params = jax.tree.map(jnp.copy, self.params)

@@ -15,7 +15,7 @@ from __future__ import annotations
 import itertools
 from functools import lru_cache
 
-from repro.core.partition import Partition, enumerate_partitions, partitions_by_arity
+from repro.core.partition import Partition, enumerate_partitions
 from repro.core.perfmodel import corun_time, solo_run_time
 from repro.core.problem import Schedule
 from repro.core.profiles import JobProfile

@@ -35,8 +35,8 @@ import numpy as np
 from repro.core.partition import N_UNITS, Partition, enumerate_partitions
 from repro.core.perfmodel import corun_time, solo_run_time
 from repro.core.perfmodel_jax import (
-    PartitionTable, QueueArrays, build_partition_table, group_reward,
-    queue_arrays, stack_queues,
+    PartitionTable, QueueArrays, build_partition_table, group_metrics,
+    group_reward, queue_arrays, stack_queues,
 )
 from repro.core.problem import Schedule
 from repro.core.profiles import FEATURES, JobProfile
@@ -90,6 +90,7 @@ class VecCoScheduleEnv:
         self.step = jax.jit(self._step)
         self.reset_batch = jax.jit(jax.vmap(self._reset))
         self.step_batch = jax.jit(jax.vmap(self._step))
+        self.close_metrics_batch = jax.jit(jax.vmap(self._close_metrics))
 
     # ----------------------------------------------------------- queue prep
     def queue_arrays(self, queue: list[JobProfile]) -> QueueArrays:
@@ -171,6 +172,23 @@ class VecCoScheduleEnv:
         )
         return (new_state, self._obs(new_state), reward,
                 self._done(new_state), self._mask(new_state))
+
+    def _close_metrics(self, state: EnvState, action: jnp.ndarray):
+        """(co-run time, solo time, multi-job?) the close `action` realizes.
+
+        Zeros when `action` is not a valid close, so an evaluation scan can
+        unconditionally accumulate these alongside ``step``/``step_batch`` —
+        the relative-throughput bookkeeping of the greedy rollout stays
+        entirely on device (no Python perfmodel in the eval hot path).
+        """
+        W = self.cfg.window
+        ok = self._mask(state)[action] & (action >= W)
+        p_idx = jnp.clip(action - W, 0, len(self.partitions) - 1)
+        mk, so, _ = group_metrics(self.table, state.queue, state.group_idx,
+                                  state.group_size, p_idx)
+        zero = jnp.float32(0.0)
+        return (jnp.where(ok, mk, zero), jnp.where(ok, so, zero),
+                ok & (state.group_size > 1))
 
 
 class CoScheduleEnv:

@@ -4,7 +4,6 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.problem import Schedule
-from repro.core.profiles import JobProfile
 
 
 def relative_throughput(sched: Schedule) -> float:

@@ -228,11 +228,15 @@ def _simulate_slice(c, m, xb, xl, fx, steps, members, shared_flag):
     return finish
 
 
-def group_reward(table: PartitionTable, qa: QueueArrays,
-                 group_idx: jnp.ndarray, group_size: jnp.ndarray,
-                 p_idx: jnp.ndarray, r_i_weight: float,
-                 r_f_scale: float) -> jnp.ndarray:
-    """Paper Table VI close-group reward: r_i_weight * Σ r_i + r_f."""
+def group_metrics(table: PartitionTable, qa: QueueArrays,
+                  group_idx: jnp.ndarray, group_size: jnp.ndarray,
+                  p_idx: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(co-run makespan, Σ solo time, Σ r_i) for the group under partition p_idx.
+
+    The makespan/solo pair is the in-graph mirror of ``corun_time`` /
+    ``solo_run_time`` — it powers both the Table VI reward and the
+    device-resident evaluation rollout's relative-throughput accumulators.
+    """
     S = group_idx.shape[0]
     W = qa.steps.shape[0]
     slot_ok = table.slot_valid[p_idx] & (jnp.arange(S) < group_size)
@@ -253,12 +257,21 @@ def group_reward(table: PartitionTable, qa: QueueArrays,
     finish = jax.lax.fori_loop(0, S, per_slice, jnp.zeros((S,), jnp.float32))
     makespan = jnp.max(jnp.where(slot_ok, finish, 0.0))
     solo = jnp.sum(jnp.where(slot_ok, qa.solo[j], 0.0))
-    rf = jnp.where(makespan > 0,
-                   (solo / jnp.maximum(makespan, 1e-30) - 1.0) * r_f_scale, 0.0)
     sm_alloc = (table.slot_units[p_idx] / N_UNITS) * beta
     mem_alloc = table.slot_units[p_idx] / N_UNITS
     cr = qa.cpct[j] / jnp.maximum(qa.mean_c, 1e-9)
     mr = qa.mpct[j] / jnp.maximum(qa.mean_m, 1e-9)
     dr = qa.solo[j] / jnp.maximum(qa.mean_d, 1e-9)
     ri = (sm_alloc * cr + mem_alloc * mr) * dr ** 2
-    return r_i_weight * jnp.sum(jnp.where(slot_ok, ri, 0.0)) + rf
+    return makespan, solo, jnp.sum(jnp.where(slot_ok, ri, 0.0))
+
+
+def group_reward(table: PartitionTable, qa: QueueArrays,
+                 group_idx: jnp.ndarray, group_size: jnp.ndarray,
+                 p_idx: jnp.ndarray, r_i_weight: float,
+                 r_f_scale: float) -> jnp.ndarray:
+    """Paper Table VI close-group reward: r_i_weight * Σ r_i + r_f."""
+    makespan, solo, ri = group_metrics(table, qa, group_idx, group_size, p_idx)
+    rf = jnp.where(makespan > 0,
+                   (solo / jnp.maximum(makespan, 1e-30) - 1.0) * r_f_scale, 0.0)
+    return r_i_weight * ri + rf

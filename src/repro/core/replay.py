@@ -1,10 +1,34 @@
-"""Experience replay: JAX-native on-device ring + numpy reference buffer.
+"""Experience replay: uniform + prioritized, JAX on-device and numpy mirror.
 
-``ReplayState`` + ``replay_init/push/sample`` form a pure-functional circular
-buffer that lives on-device and threads through ``lax.scan`` as part of the
-training carry — pushes are batched scatters, sampling is a jitted gather.
-``ReplayBuffer`` keeps the original numpy API for the scalar (seed-equivalent)
-training loop and the single-env agent.
+Two storage layers share one ring-buffer contract (block-aligned
+``dynamic_update_slice`` writes — see :func:`replay_push`):
+
+  * ``ReplayState`` + ``replay_init/push/sample`` — the original pure
+    uniform ring that threads through ``lax.scan`` as part of the training
+    carry.
+  * ``PrioritizedReplayState`` + ``per_init/push/sample/update`` —
+    proportional prioritized experience replay (Schaul et al. 2016) built on
+    a **pure-JAX sum-tree**: leaf ``i`` holds ``(|td_i| + eps)**alpha``,
+    internal nodes hold subtree sums, and sampling descends the tree with a
+    fixed ``log2(L)``-step ``fori_loop`` so push/sample/priority-update are
+    all jit-able and live inside the scanned engine.  Internal nodes are
+    rebuilt from the leaves after every write (a handful of reshape-sums),
+    so float32 error never accumulates across pushes.  New transitions
+    enter at the running max priority; ``per_sample`` draws stratified
+    proportional samples and returns importance-sampling weights normalized
+    to ``max(w) == 1``.  ``alpha == 0`` is a *static* branch that
+    reproduces the uniform sampler bit-exactly (same key -> same indices,
+    weights all ones), which is what lets ``TrainConfig.per_alpha = 0``
+    default to uniform-equivalent behavior.
+
+``ReplayBuffer`` / ``PrioritizedReplayBuffer`` keep the same semantics in
+numpy (identical sum-tree layout) for the scalar reference loop, so parity
+tests can pin the functional core against them.
+
+Sampling an **empty** ring is undefined: both samplers index the
+zero-initialized store and would return garbage transitions.  Callers must
+gate on ``size`` (the scanned engine's warmup gate requires
+``size >= batch_size`` before the first update); the eager path asserts.
 """
 from __future__ import annotations
 
@@ -87,11 +111,168 @@ def replay_push(rs: ReplayState, batch: dict) -> ReplayState:
     )
 
 
+def _assert_nonempty(size) -> None:
+    """Eager-path guard: sampling an empty ring reads zero-filled garbage.
+
+    Inside jit `size` is a tracer and the caller owns the warmup gate (the
+    scanned engine only updates once ``size >= batch_size``)."""
+    if not isinstance(size, jax.core.Tracer):
+        assert int(size) > 0, (
+            "replay sample on an empty ring — push transitions first or gate "
+            "on `size` (the engine's warmup gate)")
+
+
+def _uniform_indices(rs: ReplayState, key: jax.Array, n: int) -> jnp.ndarray:
+    return jax.random.randint(key, (n,), 0, jnp.maximum(rs.size, 1))
+
+
 def replay_sample(rs: ReplayState, key: jax.Array, n: int) -> dict:
-    """Uniform sample of n transitions from the filled region."""
-    idx = jax.random.randint(key, (n,), 0, jnp.maximum(rs.size, 1))
+    """Uniform sample of n transitions from the filled region.
+
+    Precondition: ``rs.size > 0`` (asserted eagerly; jitted callers gate)."""
+    _assert_nonempty(rs.size)
+    idx = _uniform_indices(rs, key, n)
     return {f: getattr(rs, f)[idx] for f in FIELDS}
 
+
+# ---------------------------------------------------------------------------
+# Prioritized replay: pure-JAX sum-tree over the same ring
+# ---------------------------------------------------------------------------
+
+def _leaf_count(capacity: int) -> int:
+    """Leaves of the complete binary tree: next power of two >= capacity."""
+    return 1 << max(0, capacity - 1).bit_length()
+
+
+class PrioritizedReplayState(NamedTuple):
+    """Uniform ring + sum-tree priorities; threads through ``lax.scan``.
+
+    ``tree`` is a flat complete binary tree of ``2 * L`` float32 nodes
+    (``L = _leaf_count(capacity)``): leaf ``i`` lives at ``L + i``, node
+    ``k``'s children are ``2k`` and ``2k + 1``, the total priority mass is
+    the root ``tree[1]`` (``tree[0]`` is unused).  Leaves hold priorities
+    already exponentiated by alpha; leaves past ``capacity`` stay zero.
+    """
+
+    ring: ReplayState
+    tree: jnp.ndarray                # (2 * L,) f32 — sum-tree nodes
+    max_p: jnp.ndarray               # () f32 — running max leaf priority
+
+    @property
+    def capacity(self) -> int:
+        return self.ring.capacity
+
+    @property
+    def ptr(self) -> jnp.ndarray:
+        return self.ring.ptr
+
+    @property
+    def size(self) -> jnp.ndarray:
+        return self.ring.size
+
+
+def per_init(capacity: int, state_dim: int, n_actions: int) -> PrioritizedReplayState:
+    return PrioritizedReplayState(
+        ring=replay_init(capacity, state_dim, n_actions),
+        tree=jnp.zeros((2 * _leaf_count(capacity),), jnp.float32),
+        max_p=jnp.float32(1.0),
+    )
+
+
+def _tree_rebuild(tree: jnp.ndarray) -> jnp.ndarray:
+    """Recompute every internal node from the (already written) leaves.
+
+    log2(L) reshape-sums (~2L adds total) — cheap next to a DQN update, and
+    rebuilding from leaves each time keeps float32 sums drift-free."""
+    level = tree[tree.shape[0] // 2:]
+    levels = [level]
+    while level.shape[0] > 1:
+        level = level.reshape(-1, 2).sum(axis=1)
+        levels.append(level)
+    return jnp.concatenate([jnp.zeros((1,), tree.dtype)] + levels[::-1])
+
+
+def _tree_query(tree: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized sum-tree descent: prefix-sum targets ``v`` -> leaf indices.
+
+    Descends right only when the right subtree still has mass, so float
+    round-off at segment boundaries can't walk into the zero-padded tail.
+    """
+    L = tree.shape[0] // 2
+    depth = max(0, L.bit_length() - 1)
+
+    def step(_, kv):
+        k, v = kv
+        left = tree[2 * k]
+        go_right = (v >= left) & (tree[2 * k + 1] > 0)
+        return 2 * k + go_right.astype(jnp.int32), v - jnp.where(go_right, left, 0.0)
+
+    k0 = jnp.ones(v.shape, jnp.int32)
+    k, _ = jax.lax.fori_loop(0, depth, step, (k0, v))
+    return k - L
+
+
+def per_push(ps: PrioritizedReplayState, batch: dict) -> PrioritizedReplayState:
+    """Ring push (same block-aligned contract as ``replay_push``); the new
+    block enters at the running max priority so fresh transitions are seen
+    at least once before TD errors re-rank them."""
+    n = batch["a"].shape[0]
+    L = ps.tree.shape[0] // 2
+    tree = jax.lax.dynamic_update_slice(
+        ps.tree, jnp.full((n,), ps.max_p, jnp.float32), (L + ps.ring.ptr,))
+    return PrioritizedReplayState(
+        ring=replay_push(ps.ring, batch),
+        tree=_tree_rebuild(tree),
+        max_p=ps.max_p,
+    )
+
+
+def per_sample(ps: PrioritizedReplayState, key: jax.Array, n: int,
+               alpha: float, beta) -> tuple[dict, jnp.ndarray, jnp.ndarray]:
+    """Stratified proportional sample -> (batch, indices, IS weights).
+
+    ``alpha`` is static: ``alpha == 0`` takes the uniform branch, which
+    bit-matches ``replay_sample`` given the same key (weights all ones).
+    Otherwise weights are ``(size * P(i)) ** -beta`` normalized so the
+    largest sampled weight is exactly 1.  Precondition: ``ps.size > 0``.
+    """
+    _assert_nonempty(ps.ring.size)
+    if alpha == 0.0:
+        idx = _uniform_indices(ps.ring, key, n)
+        w = jnp.ones((n,), jnp.float32)
+    else:
+        L = ps.tree.shape[0] // 2
+        total = ps.tree[1]
+        u = jax.random.uniform(key, (n,))
+        targets = (jnp.arange(n, dtype=jnp.float32) + u) * (total / n)
+        idx = _tree_query(ps.tree, targets)
+        idx = jnp.minimum(idx, jnp.maximum(ps.ring.size, 1) - 1)
+        probs = ps.tree[L + idx] / jnp.maximum(total, 1e-30)
+        n_filled = jnp.maximum(ps.ring.size, 1).astype(jnp.float32)
+        w = (n_filled * jnp.maximum(probs, 1e-30)) ** (-beta)
+        w = (w / jnp.max(w)).astype(jnp.float32)
+    batch = {f: getattr(ps.ring, f)[idx] for f in FIELDS}
+    return batch, idx, w
+
+
+def per_update(ps: PrioritizedReplayState, idx: jnp.ndarray,
+               td_err: jnp.ndarray, alpha: float,
+               eps: float) -> PrioritizedReplayState:
+    """Re-rank sampled leaves from TD error: ``p = (|td| + eps) ** alpha``.
+
+    Duplicate indices in ``idx`` carry identical TD errors (same transition,
+    same params), so the scatter is deterministic in effect."""
+    # cast before use: TD errors arrive f64 when JAX_ENABLE_X64 promotes the
+    # network params, but the tree (scan carry) must stay f32
+    p = ((jnp.abs(td_err) + eps) ** alpha).astype(jnp.float32)
+    L = ps.tree.shape[0] // 2
+    tree = _tree_rebuild(ps.tree.at[L + idx].set(p))
+    return ps._replace(tree=tree, max_p=jnp.maximum(ps.max_p, jnp.max(p)))
+
+
+# ---------------------------------------------------------------------------
+# numpy mirrors for the scalar reference loop
+# ---------------------------------------------------------------------------
 
 class ReplayBuffer:
     """Uniform replay (numpy circular store) for the scalar training loop."""
@@ -119,8 +300,77 @@ class ReplayBuffer:
         return self.capacity if self.full else self.ptr
 
     def sample(self, batch: int) -> dict:
+        assert len(self) > 0, "sample from an empty replay buffer"
         idx = self.rng.integers(0, len(self), size=batch)
         return {
             "s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
             "s2": self.s2[idx], "done": self.done[idx], "mask2": self.mask2[idx],
         }
+
+
+class PrioritizedReplayBuffer(ReplayBuffer):
+    """Numpy mirror of the JAX sum-tree PER (identical tree layout).
+
+    ``sample`` returns ``(batch, indices, IS weights)``; priorities update
+    per-leaf with an ancestor walk (the scalar loop pushes one transition at
+    a time, so incremental updates beat full rebuilds here).
+    """
+
+    def __init__(self, capacity: int, state_dim: int, n_actions: int,
+                 seed: int = 0, alpha: float = 0.6, eps: float = 1e-3):
+        super().__init__(capacity, state_dim, n_actions, seed)
+        self.alpha = alpha
+        self.eps = eps
+        self.leaves = _leaf_count(capacity)
+        self.tree = np.zeros((2 * self.leaves,), np.float64)
+        self.max_p = 1.0
+
+    def _set(self, idx, priorities) -> None:
+        for i, p in zip(np.atleast_1d(idx), np.atleast_1d(priorities)):
+            j = self.leaves + int(i)
+            self.tree[j] = p
+            j //= 2
+            while j >= 1:
+                self.tree[j] = self.tree[2 * j] + self.tree[2 * j + 1]
+                j //= 2
+
+    def push(self, s, a, r, s2, done, mask2) -> None:
+        i = self.ptr
+        super().push(s, a, r, s2, done, mask2)
+        self._set(i, self.max_p)
+
+    def _query(self, v: float) -> int:
+        k = 1
+        while k < self.leaves:
+            left = self.tree[2 * k]
+            if v >= left and self.tree[2 * k + 1] > 0:
+                v -= left
+                k = 2 * k + 1
+            else:
+                k = 2 * k
+        return k - self.leaves
+
+    def sample(self, batch: int, beta: float = 0.4):
+        assert len(self) > 0, "sample from an empty replay buffer"
+        if self.alpha == 0.0:
+            idx = self.rng.integers(0, len(self), size=batch)
+            w = np.ones(batch, np.float32)
+        else:
+            total = self.tree[1]
+            u = self.rng.uniform(size=batch)
+            targets = (np.arange(batch) + u) * (total / batch)
+            idx = np.array([self._query(t) for t in targets], np.int64)
+            idx = np.minimum(idx, len(self) - 1)
+            probs = self.tree[self.leaves + idx] / max(total, 1e-30)
+            w = (len(self) * np.maximum(probs, 1e-30)) ** (-beta)
+            w = (w / w.max()).astype(np.float32)
+        out = {
+            "s": self.s[idx], "a": self.a[idx], "r": self.r[idx],
+            "s2": self.s2[idx], "done": self.done[idx], "mask2": self.mask2[idx],
+        }
+        return out, idx, w
+
+    def update_priorities(self, idx, td_err) -> None:
+        p = (np.abs(np.asarray(td_err, np.float64)) + self.eps) ** self.alpha
+        self._set(idx, p)
+        self.max_p = max(self.max_p, float(p.max()))

@@ -4,14 +4,21 @@
 ``lax.scan``: vmapped ε-greedy action selection, batched ``EnvState.step``
 transitions, pushes into the on-device replay ring, and interleaved
 double-DQN updates all live in one compiled program — no per-step Python
-dispatch.  Episodes auto-reset inside the scan; the driver peels off
-segments of ~``eval_every`` episodes, runs the greedy evaluation rollout,
-and emits history records with the same keys as the original loop.
-Record semantics are segment-granular: ``episode`` is the cumulative
+dispatch.  With ``cfg.per_alpha > 0`` the ring is a sum-tree prioritized
+buffer (``repro.core.replay``): stratified proportional sampling, IS
+weights (β annealed alongside ε) inside the loss, and |TD|-driven priority
+refresh, all threaded through the scan carry.  Episodes auto-reset inside
+the scan; the driver peels off segments of ~``eval_every`` episodes, runs
+the greedy evaluation rollout — itself a jitted ``step_batch`` scan over
+*every* train queue at once, with co-run/solo times accumulated from the
+in-graph perfmodel, so a training run never leaves device between
+segments — and emits history records with the same keys as the original
+loop.  Record semantics are segment-granular: ``episode`` is the cumulative
 completed-episode count when the record was taken (it can overshoot
-``cfg.episodes`` by up to one segment) and ``ep_reward`` is the mean
-return of the episodes completed in that segment, not a single episode's
-total.
+``cfg.episodes`` by up to one segment), ``ep_reward`` is the mean return
+of the episodes completed in that segment, and ``eval_throughput`` is the
+mean relative throughput over the train queues (previously: queue 0 only,
+via the scalar reference env).
 
 ``train_agent_scalar`` preserves the seed per-step Python loop verbatim —
 it is the semantic reference for the parity test and the baseline for
@@ -42,12 +49,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent import DQNAgent, DQNConfig, _dqn_update, act_batch, epsilon_at
+from repro.core.agent import (
+    DQNAgent, DQNConfig, _dqn_update, _dqn_update_per, act_batch, beta_at,
+    epsilon_at,
+)
 from repro.core.env import CoScheduleEnv, EnvConfig, EnvState, VecCoScheduleEnv
 from repro.core.metrics import relative_throughput
+from repro.core.network import dqn_apply, masked_argmax
 from repro.core.perfmodel_jax import stack_queues
 from repro.core.profiles import JobProfile
-from repro.core.replay import ReplayState, replay_init, replay_push, replay_sample
+from repro.core.replay import (
+    PrioritizedReplayState, ReplayState, per_init, per_push, per_sample,
+    per_update, replay_init, replay_push, replay_sample,
+)
 from repro.core.scheduler import RLScheduler
 from repro.core.workloads import QUEUE_KINDS, make_queue
 
@@ -61,6 +75,9 @@ class TrainConfig:
     eval_every: int = 100
     batch_envs: int = 16                # B parallel envs in the scanned engine
     update_every: int = 16              # env transitions per DQN update
+    per_alpha: float = 0.0              # PER priority exponent; 0 = uniform
+    per_beta0: float = 0.4              # initial IS-correction exponent
+    per_eps: float = 1e-3               # priority floor added to |TD|
     dqn: DQNConfig = field(default_factory=DQNConfig)
 
 
@@ -101,7 +118,7 @@ class _Carry(NamedTuple):
     params: dict
     target: dict
     opt: dict
-    replay: ReplayState
+    replay: ReplayState | PrioritizedReplayState
     key: jax.Array
     env_steps: jnp.ndarray               # () i32
     updates: jnp.ndarray                 # () i32
@@ -118,7 +135,8 @@ def _bsel(pred, a, b):
 
 def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
                   batch_envs: int, updates_per_scan: int,
-                  update_period: int, target_sync_updates: int):
+                  update_period: int, target_sync_updates: int,
+                  per: tuple[float, float, float] | None = None):
     """One scan step = B env transitions + gated DQN updates.
 
     ``updates_per_scan`` updates run every ``update_period``-th scan step —
@@ -127,6 +145,13 @@ def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
     pre-scaled by the driver so the target network refreshes on the same
     env-transition cadence as the scalar loop (whose 1:1 update ratio made
     ``DQNConfig.target_sync`` updates == transitions).
+
+    ``per = (alpha, beta0, eps)`` statically selects the prioritized-replay
+    engine: the carry holds a :class:`PrioritizedReplayState`, each update
+    draws a stratified proportional sample, applies IS weights (β annealed
+    alongside ε) inside the loss, and writes the new |TD|-derived priorities
+    back into the sum-tree before the next update of the same scan step.
+    ``per=None`` is the uniform engine, unchanged.
     """
     B = batch_envs
 
@@ -136,31 +161,59 @@ def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
         eps = epsilon_at(dqn_cfg, env_steps)
         a = act_batch(c.params, k_act, c.obs, c.mask, eps)
         env2, obs2, r, done, mask2 = venv.step_batch(c.env, a)
-        replay = replay_push(c.replay, {
+        push = replay_push if per is None else per_push
+        replay = push(c.replay, {
             "s": c.obs, "a": a, "r": r, "s2": obs2,
             "done": done.astype(jnp.float32), "mask2": mask2})
         scan_t = env_steps // B                       # 1-based scan step index
         can = (replay.size >= dqn_cfg.batch_size) & (scan_t % update_period == 0)
 
-        def upd(_, uc):
-            params, target, opt, updates, k = uc
-            k, k_s = jax.random.split(k)
-            batch = replay_sample(replay, k_s, dqn_cfg.batch_size)
-            params, opt, _ = _dqn_update(params, target, opt, batch, dqn_cfg)
-            updates = updates + 1
-            sync = updates % target_sync_updates == 0
-            target = jax.tree.map(lambda p, t: jnp.where(sync, p, t),
-                                  params, target)
-            return params, target, opt, updates, k
+        if per is None:
+            def upd(_, uc):
+                params, target, opt, updates, k = uc
+                k, k_s = jax.random.split(k)
+                batch = replay_sample(replay, k_s, dqn_cfg.batch_size)
+                params, opt, _ = _dqn_update(params, target, opt, batch, dqn_cfg)
+                updates = updates + 1
+                sync = updates % target_sync_updates == 0
+                target = jax.tree.map(lambda p, t: jnp.where(sync, p, t),
+                                      params, target)
+                return params, target, opt, updates, k
 
-        # `can` is a scalar (the body is not vmapped), so cond really skips
-        # the untaken branch — no tree-wide where copies, and warmup steps
-        # before the buffer fills pay nothing
-        params, target, opt, updates, _ = jax.lax.cond(
-            can,
-            lambda uc: jax.lax.fori_loop(0, updates_per_scan, upd, uc),
-            lambda uc: uc,
-            (c.params, c.target, c.opt, c.updates, k_upd))
+            # `can` is a scalar (the body is not vmapped), so cond really
+            # skips the untaken branch — no tree-wide where copies, and
+            # warmup steps before the buffer fills pay nothing
+            params, target, opt, updates, _ = jax.lax.cond(
+                can,
+                lambda uc: jax.lax.fori_loop(0, updates_per_scan, upd, uc),
+                lambda uc: uc,
+                (c.params, c.target, c.opt, c.updates, k_upd))
+        else:
+            alpha, beta0, per_eps = per
+            beta = beta_at(beta0, env_steps, dqn_cfg.eps_decay_steps)
+
+            def upd(_, uc):
+                params, target, opt, updates, rep, k = uc
+                k, k_s = jax.random.split(k)
+                batch, idx, w = per_sample(rep, k_s, dqn_cfg.batch_size,
+                                           alpha, beta)
+                params, opt, _, td = _dqn_update_per(params, target, opt,
+                                                     batch, w, dqn_cfg)
+                if alpha > 0:          # alpha == 0: priorities never read
+                    rep = per_update(rep, idx, td, alpha, per_eps)
+                updates = updates + 1
+                sync = updates % target_sync_updates == 0
+                target = jax.tree.map(lambda p, t: jnp.where(sync, p, t),
+                                      params, target)
+                return params, target, opt, updates, rep, k
+
+            # the replay joins the update carry here: priority writes must
+            # be visible to the next update drawn in the same scan step
+            params, target, opt, updates, replay, _ = jax.lax.cond(
+                can,
+                lambda uc: jax.lax.fori_loop(0, updates_per_scan, upd, uc),
+                lambda uc: uc,
+                (c.params, c.target, c.opt, c.updates, replay, k_upd))
         ep_all = c.ep_ret + r
         carry = _Carry(
             env=_bsel(done, c.reset_env, env2),
@@ -181,20 +234,53 @@ def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
     return jax.jit(run_segment, static_argnums=1, donate_argnums=0)
 
 
+def _build_eval(venv: VecCoScheduleEnv):
+    """Jitted greedy evaluation: many queues per record, fully on device.
+
+    Greedy rollout over a batch of eval queues via ``step_batch`` (2W scan
+    steps — the episode-length upper bound: W selects + at most W closes),
+    accumulating each closed group's co-run/solo time from the in-graph
+    perfmodel.  Mirrors ``RLScheduler._enforce_constraints``: a multi-job
+    group whose co-run loses to time sharing is counted at its solo time
+    (the §IV-A constraint-1 fallback).  Returns per-queue relative
+    throughput — no scalar ``CoScheduleEnv`` anywhere in the eval hot path.
+    """
+    two_w = 2 * venv.cfg.window
+
+    def run(params, env, obs, mask):
+        def body(carry, _):
+            env, obs, mask, cot, sol = carry
+            a = masked_argmax(dqn_apply(params, obs), mask)
+            mk, so, multi = venv.close_metrics_batch(env, a)
+            env2, obs2, _, _, mask2 = venv.step_batch(env, a)
+            cot = cot + jnp.where(multi & (mk > so), so, mk)
+            sol = sol + so
+            return (env2, obs2, mask2, cot, sol), None
+
+        zeros = jnp.zeros(mask.shape[:1], jnp.float32)
+        (_, _, _, cot, sol), _ = jax.lax.scan(
+            body, (env, obs, mask, zeros, zeros), None, length=two_w)
+        return jnp.where(cot > 0, sol / jnp.maximum(cot, 1e-30), 0.0)
+
+    return jax.jit(run)
+
+
 _ENGINE_CACHE: dict = {}
 
 
 def _engine_for(env_cfg: EnvConfig, dqn_cfg: DQNConfig,
                 batch_envs: int, updates_per_scan: int,
-                update_period: int, target_sync_updates: int):
+                update_period: int, target_sync_updates: int,
+                per: tuple[float, float, float] | None):
     key = (env_cfg.key(), dqn_cfg, batch_envs, updates_per_scan,
-           update_period, target_sync_updates)
+           update_period, target_sync_updates, per)
     if key not in _ENGINE_CACHE:
         venv = VecCoScheduleEnv(env_cfg)
         _ENGINE_CACHE[key] = (venv, _build_engine(venv, dqn_cfg, batch_envs,
                                                   updates_per_scan,
                                                   update_period,
-                                                  target_sync_updates))
+                                                  target_sync_updates, per),
+                              _build_eval(venv))
         while len(_ENGINE_CACHE) > 8:      # bound compiled-engine retention
             _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
     return _ENGINE_CACHE[key]
@@ -202,11 +288,20 @@ def _engine_for(env_cfg: EnvConfig, dqn_cfg: DQNConfig,
 
 def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
                 cfg: TrainConfig | None = None, heldout: set[str] | None = None,
-                verbose: bool = False) -> tuple[DQNAgent, list[dict]]:
-    """Train on the scanned vectorized engine; same signature/records as ever."""
+                verbose: bool = False,
+                _force_per: bool = False) -> tuple[DQNAgent, list[dict]]:
+    """Train on the scanned vectorized engine; same signature/records as ever.
+
+    ``cfg.per_alpha > 0`` switches the engine to prioritized replay.
+    ``_force_per`` routes ``per_alpha == 0`` through the PER machinery
+    anyway (uniform indices, unit weights) — the regression parity test
+    uses it to pin that path bit-exactly to the uniform engine.
+    """
     cfg = cfg or TrainConfig()
     env_cfg = env_cfg or EnvConfig()
     B = cfg.batch_envs
+    use_per = cfg.per_alpha > 0 or _force_per
+    per = (cfg.per_alpha, cfg.per_beta0, cfg.per_eps) if use_per else None
     # honor the configured updates-per-transition ratio on both sides of
     # B vs update_every: several updates per scan step when B is larger,
     # one update every few scan steps when B is smaller
@@ -219,13 +314,16 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     # loop's 1:1 ratio made target_sync updates == transitions)
     sync_updates = max(1, round(cfg.dqn.target_sync * updates_per_scan
                                 / (B * update_period)))
-    venv, engine = _engine_for(env_cfg, cfg.dqn, B, updates_per_scan,
-                               update_period, sync_updates)
-    agent = DQNAgent(venv.state_dim, venv.n_actions, cfg.dqn, seed=cfg.seed)
+    venv, engine, eval_fn = _engine_for(env_cfg, cfg.dqn, B, updates_per_scan,
+                                        update_period, sync_updates, per)
+    agent = DQNAgent(venv.state_dim, venv.n_actions, cfg.dqn, seed=cfg.seed,
+                     per_alpha=cfg.per_alpha, per_beta0=cfg.per_beta0,
+                     per_eps=cfg.per_eps)
     rng = np.random.default_rng(cfg.seed)
     heldout = heldout if heldout is not None else heldout_split(jobs)
     train_queues = _train_queues(jobs, env_cfg, cfg, heldout, rng)
     qa = [venv.queue_arrays(q) for q in train_queues]
+    qa_eval = stack_queues(qa)          # evaluation covers every train queue
 
     # segment length targeting ~eval_every completed episodes per scan;
     # never below one worst-case episode (2W steps: all-solo groups) —
@@ -238,7 +336,8 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     params, target, opt = agent.params, agent.target_params, agent.opt
     # round capacity up to a multiple of B: ring writes stay block-aligned
     capacity = -(-cfg.dqn.buffer_size // B) * B
-    replay = replay_init(capacity, venv.state_dim, venv.n_actions)
+    init = per_init if use_per else replay_init
+    replay = init(capacity, venv.state_dim, venv.n_actions)
     key = jax.random.PRNGKey(cfg.seed)
     env_steps = jnp.int32(0)
     updates = jnp.int32(0)
@@ -268,11 +367,14 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
         if episodes_done >= next_eval or episodes_done >= cfg.episodes:
             agent.params, agent.target_params, agent.opt = params, target, opt
             agent.env_steps, agent.updates = int(env_steps), int(updates)
-            sched = RLScheduler(agent, env_cfg).schedule(train_queues[0])
+            # device-resident greedy eval: every train queue in one jitted
+            # batch rollout; record the mean relative throughput
+            e_env, e_obs, e_mask = venv.reset_batch(qa_eval)
+            tp = eval_fn(params, e_env, e_obs, e_mask)
             ep_reward = float(np.asarray(rets).sum() / max(1, n_done))
             rec = {"episode": episodes_done, "eps": agent.epsilon,
                    "ep_reward": ep_reward,
-                   "eval_throughput": relative_throughput(sched)}
+                   "eval_throughput": float(np.asarray(tp).mean())}
             history.append(rec)
             next_eval = (episodes_done // eval_every + 1) * eval_every
             if verbose:
@@ -297,7 +399,9 @@ def train_agent_scalar(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     cfg = cfg or TrainConfig()
     env_cfg = env_cfg or EnvConfig()
     env = CoScheduleEnv(env_cfg)
-    agent = DQNAgent(env.state_dim, env.n_actions, cfg.dqn, seed=cfg.seed)
+    agent = DQNAgent(env.state_dim, env.n_actions, cfg.dqn, seed=cfg.seed,
+                     per_alpha=cfg.per_alpha, per_beta0=cfg.per_beta0,
+                     per_eps=cfg.per_eps)
     rng = np.random.default_rng(cfg.seed)
     heldout = heldout if heldout is not None else heldout_split(jobs)
     train_queues = _train_queues(jobs, env_cfg, cfg, heldout, rng)

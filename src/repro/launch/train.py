@@ -22,7 +22,6 @@ from repro.data import DataPipeline
 from repro.models.model import init_params
 from repro.optim import OptConfig, init_opt_state
 from repro.runtime.steps import make_train_step, state_shardings
-from repro.sharding import specs_to_shardings
 
 
 def main():

@@ -14,7 +14,7 @@ from repro.models.attention import (
 )
 from repro.models.layers import ones_init, rmsnorm
 from repro.models.mlp import gelu_mlp_apply, init_gelu_mlp
-from repro.models.transformer import ZERO_AUX, _maybe_remat, scan_or_loop
+from repro.models.transformer import ZERO_AUX, scan_or_loop
 from repro.sharding import constrain
 
 

@@ -212,7 +212,7 @@ def prefill(params, tokens, cfg, max_len: int):
         def body(carry, layer_p):
             x, = carry
             h = rmsnorm(x, layer_p["ln1"], cfg.norm_eps)
-            from repro.models.attention import _project_kv, attn_apply  # local to keep HLO lean
+            from repro.models.attention import _project_kv  # local to keep HLO lean
 
             k, v = _project_kv(layer_p["attn"], h, cfg)
             x, _ = tfm.decoder_layer_apply(layer_p, x, cfg, positions)

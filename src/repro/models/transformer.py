@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.attention import attn_apply, attn_decode, init_attn, init_kv_cache
-from repro.models.layers import ones_init, pdtype, rmsnorm
+from repro.models.layers import ones_init, rmsnorm
 from repro.models.mamba import init_mamba, init_mamba_state, mamba_apply, mamba_decode
 from repro.models.mlp import init_swiglu, swiglu_apply
 from repro.models.moe import init_moe, moe_apply, moe_decode

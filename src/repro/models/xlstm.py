@@ -20,7 +20,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import causal_conv1d, conv1d_step, dense_init, pdtype, rmsnorm
-from repro.sharding import constrain
 
 NEG = -1e30
 
@@ -50,7 +49,10 @@ def init_mlstm(key, cfg) -> dict:
         "wk": dense_init(ks[3], (D, D), dt),
         "wv": dense_init(ks[4], (D, D), dt),
         "w_gates": dense_init(ks[5], (D, 2 * H), jnp.float32),  # i, f pre-activations
-        "b_gates": jnp.concatenate([jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]),
+        # explicit f32: default-dtype linspace turns f64 under JAX_ENABLE_X64
+        # and would poison the chunk_step scan carry
+        "b_gates": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                    jnp.linspace(3.0, 6.0, H, dtype=jnp.float32)]),
         "onorm": jnp.ones((D,), jnp.float32),                   # post-memory groupnorm scale
         "w_down": dense_init(ks[6], (D, M), dt),
     }
@@ -236,8 +238,11 @@ def init_slstm(key, cfg) -> dict:
         "norm": jnp.ones((M,), jnp.float32),
         "slstm_w": dense_init(ks[0], (M, 4 * M), jnp.float32),
         "slstm_r": dense_init(ks[1], (H, 4, dh, dh), jnp.float32, in_axis=2) * 0.5,
+        # explicit f32 (see b_gates): default dtypes flip to f64 under X64
         "slstm_b": jnp.concatenate(
-            [jnp.zeros((2 * M,)), jnp.linspace(3.0, 6.0, M), jnp.zeros((M,))]
+            [jnp.zeros((2 * M,), jnp.float32),
+             jnp.linspace(3.0, 6.0, M, dtype=jnp.float32),
+             jnp.zeros((M,), jnp.float32)]
         ),
         "ffn_norm": jnp.ones((M,), jnp.float32),
         "w_up": dense_init(ks[2], (M, 2 * F), dt),

@@ -16,7 +16,7 @@ its quanta rebalanced away (work stealing).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax

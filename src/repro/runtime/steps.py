@@ -6,7 +6,6 @@ dry-run (``.lower`` on ShapeDtypeStructs) and real execution.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

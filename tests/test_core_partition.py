@@ -4,7 +4,6 @@ import pytest
 from repro.core.partition import (
     CHIPS_PER_UNIT,
     N_UNITS,
-    Partition,
     Slice,
     enumerate_partitions,
     partitions_by_arity,

@@ -1,9 +1,9 @@
 """Co-run performance-model properties."""
 import numpy as np
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import given, strategies as st
 except ImportError:
-    from _hypothesis_compat import given, settings, st
+    from _hypothesis_compat import given, st
 
 from repro.configs import SHAPES, get_config, scaled_shape
 from repro.core.partition import Partition, Slice, enumerate_partitions

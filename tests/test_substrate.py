@@ -4,7 +4,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:
@@ -12,7 +11,7 @@ except ImportError:
 
 from repro.checkpoint import latest_step, restore, save
 from repro.data import DataPipeline
-from repro.optim import OptConfig, adamw_update, global_norm, init_opt_state, lr_at
+from repro.optim import OptConfig, adamw_update, init_opt_state, lr_at
 
 
 # ---------------------------------------------------------------------------
