@@ -18,6 +18,18 @@ def emit(name: str, us_per_call: float, derived) -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
 
 
+def missing_keys(path: str, required) -> list[str]:
+    """Keys absent from a committed BENCH json (all of them if no file) —
+    the shared --smoke guard check."""
+    import json
+
+    if not os.path.exists(path):
+        return list(required)
+    with open(path) as f:
+        data = json.load(f)
+    return [k for k in required if k not in data]
+
+
 def get_zoo():
     return make_zoo(dryrun_dir=DRYRUN_DIR if os.path.isdir(DRYRUN_DIR) else None)
 

@@ -26,7 +26,7 @@ import os
 import sys
 import time
 
-from benchmarks.common import emit
+from benchmarks.common import emit, missing_keys
 from repro.core import (
     EnvConfig, TrainConfig, make_zoo, train_agent, train_agent_scalar,
 )
@@ -132,15 +132,6 @@ def _per_comparison(zoo, env_cfg, episodes: int, seeds: list[int],
     return out
 
 
-def _check_keys(path: str) -> list[str]:
-    """Missing required keys in an existing BENCH_train.json (empty = ok)."""
-    if not os.path.exists(path):
-        return list(REQUIRED_KEYS)
-    with open(path) as f:
-        data = json.load(f)
-    return [k for k in REQUIRED_KEYS if k not in data]
-
-
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="shrink measured episodes")
@@ -191,7 +182,7 @@ def main() -> None:
         if speedup < args.speedup_floor:
             failures.append(f"speedup {speedup:.2f}x below floor "
                             f"{args.speedup_floor:.2f}x")
-        missing = _check_keys(args.bench_json)
+        missing = missing_keys(args.bench_json, REQUIRED_KEYS)
         if missing:
             failures.append(f"{args.bench_json} missing keys: {missing}")
         if args.out:

@@ -15,7 +15,7 @@ from __future__ import annotations
 import itertools
 from functools import lru_cache
 
-from repro.core.partition import Partition, enumerate_partitions
+from repro.core.partition import Partition, enumerate_partitions, solo_partition
 from repro.core.perfmodel import corun_time, solo_run_time
 from repro.core.problem import Schedule
 from repro.core.profiles import JobProfile
@@ -50,7 +50,7 @@ def exhaustive_schedule(queue: list[JobProfile], c_max: int,
                         max_perms: int | None = None) -> Schedule:
     """Exact set-partition DP (O(3^W) submask enumeration) over group costs."""
     W = len(queue)
-    solo_part = [p for p in enumerate_partitions(1) if p.arity == 1][0]
+    solo_part = solo_partition()
 
     @lru_cache(maxsize=None)
     def group_cost(mask: int) -> tuple[float, object]:
@@ -100,10 +100,10 @@ def exhaustive_schedule(queue: list[JobProfile], c_max: int,
 # ---------------------------------------------------------------------------
 
 def time_sharing(queue: list[JobProfile], c_max: int = 4) -> Schedule:
-    solo = [p for p in enumerate_partitions(1) if p.arity == 1]
+    solo = solo_partition()
     sched = Schedule()
     for j in queue:
-        sched.add([j], solo[0])
+        sched.add([j], solo)
     return sched
 
 

@@ -133,6 +133,12 @@ def enumerate_partitions(c_max: int = 4) -> list[Partition]:
     return [p for p in table if p.arity <= c_max]
 
 
+def solo_partition() -> Partition:
+    """The full-pod single-slot partition (time sharing's unit; the slot
+    unprofiled first-sight jobs run on in the online protocol)."""
+    return enumerate_partitions(1)[0]
+
+
 def partitions_by_arity(c_max: int = 4) -> dict[int, list[Partition]]:
     out: dict[int, list[Partition]] = {}
     for p in enumerate_partitions(c_max):

@@ -205,7 +205,14 @@ def load_dryrun_profiles(dryrun_dir: str, steps: int = 100) -> dict[str, JobProf
 # ---------------------------------------------------------------------------
 
 class ProfileRepository:
-    """Keyed by job binary path+name (paper's matching function)."""
+    """Keyed by job binary path+name (paper's matching function).
+
+    Besides the lookup/insert protocol the online scheduler uses, the
+    repository is the *training corpus* of the MISO-style periodic
+    re-training loop (``repro.online.retrain``): ``jobs()`` snapshots the
+    profiles collected so far so ``train_agent`` can refresh the agent
+    against exactly the applications the cluster has actually seen.
+    """
 
     def __init__(self):
         self._store: dict[str, JobProfile] = {}
@@ -218,6 +225,20 @@ class ProfileRepository:
 
     def insert(self, binary_path: str, profile: JobProfile) -> None:
         self._store[self.key(binary_path)] = profile
+
+    def jobs(self) -> list[JobProfile]:
+        """Insertion-ordered snapshot of every profiled application."""
+        return list(self._store.values())
+
+    def class_counts(self) -> dict[str, int]:
+        """CI/MI/US population of the repository (re-training gate input)."""
+        out = {"CI": 0, "MI": 0, "US": 0}
+        for p in self._store.values():
+            out[p.job_class] += 1
+        return out
+
+    def __contains__(self, binary_path: str) -> bool:
+        return self.key(binary_path) in self._store
 
     def __len__(self) -> int:
         return len(self._store)

@@ -11,9 +11,14 @@ Two storage layers share one ring-buffer contract (block-aligned
     a **pure-JAX sum-tree**: leaf ``i`` holds ``(|td_i| + eps)**alpha``,
     internal nodes hold subtree sums, and sampling descends the tree with a
     fixed ``log2(L)``-step ``fori_loop`` so push/sample/priority-update are
-    all jit-able and live inside the scanned engine.  Internal nodes are
-    rebuilt from the leaves after every write (a handful of reshape-sums),
-    so float32 error never accumulates across pushes.  New transitions
+    all jit-able and live inside the scanned engine.  Writes are
+    **incremental**: after setting the touched leaves, only their ancestor
+    paths are recomputed bottom-up (``O(B log C)`` adds for a B-leaf write
+    instead of the old ``O(C)`` full-level rebuild), and because every
+    affected internal node is recomputed as the exact sum of its two
+    children the tree stays bit-identical to a from-scratch rebuild —
+    float32 error never accumulates (``_tree_rebuild`` is kept as the
+    reference the parity test pins against).  New transitions
     enter at the running max priority; ``per_sample`` draws stratified
     proportional samples and returns importance-sampling weights normalized
     to ``max(w) == 1``.  ``alpha == 0`` is a *static* branch that
@@ -182,14 +187,38 @@ def per_init(capacity: int, state_dim: int, n_actions: int) -> PrioritizedReplay
 def _tree_rebuild(tree: jnp.ndarray) -> jnp.ndarray:
     """Recompute every internal node from the (already written) leaves.
 
-    log2(L) reshape-sums (~2L adds total) — cheap next to a DQN update, and
-    rebuilding from leaves each time keeps float32 sums drift-free."""
+    log2(L) reshape-sums (~2L adds total).  No longer on the hot path —
+    ``per_push``/``per_update`` use the O(B log C) ancestor-path update —
+    but kept as the reference implementation: the incremental update is
+    parity-tested bit-exact against this."""
     level = tree[tree.shape[0] // 2:]
     levels = [level]
     while level.shape[0] > 1:
         level = level.reshape(-1, 2).sum(axis=1)
         levels.append(level)
     return jnp.concatenate([jnp.zeros((1,), tree.dtype)] + levels[::-1])
+
+
+def _tree_ascend(tree: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """Recompute the ancestors of the leaves at absolute positions ``pos``.
+
+    Walks the log2(L) levels bottom-up; at each level every touched node is
+    recomputed as the exact sum of its two children (gather before scatter,
+    so duplicate parents write identical values).  Because untouched nodes
+    already equal the sum of their children by induction, the result is
+    **bit-identical** to ``_tree_rebuild`` at O(B log C) instead of O(C)
+    work — the incremental form the 1M+-capacity rings need.
+    """
+    L = tree.shape[0] // 2
+    depth = max(0, L.bit_length() - 1)
+
+    def level(_, carry):
+        tree, k = carry
+        k = k // 2
+        return tree.at[k].set(tree[2 * k] + tree[2 * k + 1]), k
+
+    tree, _ = jax.lax.fori_loop(0, depth, level, (tree, pos))
+    return tree
 
 
 def _tree_query(tree: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
@@ -220,9 +249,10 @@ def per_push(ps: PrioritizedReplayState, batch: dict) -> PrioritizedReplayState:
     L = ps.tree.shape[0] // 2
     tree = jax.lax.dynamic_update_slice(
         ps.tree, jnp.full((n,), ps.max_p, jnp.float32), (L + ps.ring.ptr,))
+    pos = L + ps.ring.ptr + jnp.arange(n, dtype=jnp.int32)
     return PrioritizedReplayState(
         ring=replay_push(ps.ring, batch),
-        tree=_tree_rebuild(tree),
+        tree=_tree_ascend(tree, pos),
         max_p=ps.max_p,
     )
 
@@ -266,7 +296,7 @@ def per_update(ps: PrioritizedReplayState, idx: jnp.ndarray,
     # network params, but the tree (scan carry) must stay f32
     p = ((jnp.abs(td_err) + eps) ** alpha).astype(jnp.float32)
     L = ps.tree.shape[0] // 2
-    tree = _tree_rebuild(ps.tree.at[L + idx].set(p))
+    tree = _tree_ascend(ps.tree.at[L + idx].set(p), L + idx.astype(jnp.int32))
     return ps._replace(tree=tree, max_p=jnp.maximum(ps.max_p, jnp.max(p)))
 
 

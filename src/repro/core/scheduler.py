@@ -15,7 +15,7 @@ from dataclasses import dataclass
 
 from repro.core.agent import DQNAgent
 from repro.core.env import CoScheduleEnv, EnvConfig
-from repro.core.partition import enumerate_partitions
+from repro.core.partition import solo_partition
 from repro.core.perfmodel import corun_time, solo_run_time
 from repro.core.problem import Schedule
 from repro.core.profiles import JobProfile, ProfileRepository
@@ -25,6 +25,47 @@ from repro.core.profiles import JobProfile, ProfileRepository
 class SchedulerStats:
     fallback_groups: int = 0
     unprofiled_jobs: int = 0
+    windows: int = 0                 # RL scheduling windows run by submissions
+
+
+def submission_protocol(repository: ProfileRepository,
+                        submissions: list[tuple[str, JobProfile | None]],
+                        plan, window: int | None = None,
+                        on_unprofiled=None, on_window=None) -> Schedule:
+    """The §IV-B online submission protocol, shared by every dispatcher.
+
+    Submissions are ``(binary_path, maybe-fresh-profile)`` pairs.  A binary
+    the repository has never seen runs **solo** on the full pod (profiled as
+    it runs) and its fresh measurement enters the repository — a first
+    sight with no measurement is reported via ``on_unprofiled`` but cannot
+    be scheduled.  The profiled remainder is chunked into ``window``-sized
+    batches (``None``: one batch) and handed to ``plan(queue) -> Schedule``.
+    ``RLScheduler.schedule_submissions`` and the online package's
+    ``DispatchPolicy.dispatch`` are both thin wrappers over this function,
+    so the first-sight cost is identical across policies by construction.
+    """
+    solo = solo_partition()
+    sched = Schedule()
+    profiled: list[JobProfile] = []
+    for path, fresh in submissions:
+        prof = repository.lookup(path)
+        if prof is None:
+            if on_unprofiled is not None:
+                on_unprofiled(path, fresh)
+            if fresh is not None:       # measured during this solo run
+                repository.insert(path, fresh)
+                sched.add([fresh], solo)
+            continue
+        profiled.append(prof)
+    W = window or max(1, len(profiled))
+    for lo in range(0, len(profiled), W):
+        chunk = profiled[lo:lo + W]
+        if on_window is not None:
+            on_window(chunk)
+        inner = plan(chunk)
+        for g, p in zip(inner.groups, inner.partitions):
+            sched.add(g, p)
+    return sched
 
 
 class RLScheduler:
@@ -32,7 +73,9 @@ class RLScheduler:
                  repository: ProfileRepository | None = None):
         self.agent = agent
         self.env_cfg = env_cfg or EnvConfig()
-        self.repository = repository or ProfileRepository()
+        # `or` would discard an *empty* repository (len 0 is falsy) and
+        # silently sever the caller's handle to the shared profile store
+        self.repository = repository if repository is not None else ProfileRepository()
         self.stats = SchedulerStats()
 
     def schedule(self, queue: list[JobProfile]) -> Schedule:
@@ -47,28 +90,27 @@ class RLScheduler:
         return self._enforce_constraints(env.schedule)
 
     def schedule_submissions(self, submissions: list[tuple[str, JobProfile | None]]) -> Schedule:
-        """Online protocol: (binary_path, maybe-fresh-profile) submissions.
-        Unprofiled jobs run solo (full pod) and enter the repository."""
-        solo = [p for p in enumerate_partitions(1) if p.arity == 1][0]
-        profiled: list[JobProfile] = []
-        sched = Schedule()
-        for path, fresh in submissions:
-            prof = self.repository.lookup(path)
-            if prof is None:
-                self.stats.unprofiled_jobs += 1
-                if fresh is not None:       # measured during this solo run
-                    self.repository.insert(path, fresh)
-                    sched.add([fresh], solo)
-                continue
-            profiled.append(prof)
-        if profiled:
-            inner = self.schedule(profiled)
-            for g, p in zip(inner.groups, inner.partitions):
-                sched.add(g, p)
-        return sched
+        """:func:`submission_protocol` with the agent as planner.
+
+        Unprofiled jobs run solo (full pod) and enter the repository; the
+        profiled remainder is co-scheduled by the agent.  More profiled jobs
+        than the agent's window are chunked into successive window-sized RL
+        episodes (each counted in ``stats.windows``) — the event-driven
+        cluster simulator hands over whatever is pending, which can exceed W.
+        """
+        def on_unprofiled(path, fresh):
+            self.stats.unprofiled_jobs += 1
+
+        def on_window(chunk):
+            self.stats.windows += 1
+
+        return submission_protocol(self.repository, submissions,
+                                   self.schedule, window=self.env_cfg.window,
+                                   on_unprofiled=on_unprofiled,
+                                   on_window=on_window)
 
     def _enforce_constraints(self, sched: Schedule) -> Schedule:
-        solo = [p for p in enumerate_partitions(1) if p.arity == 1][0]
+        solo = solo_partition()
         out = Schedule()
         for g, p in zip(sched.groups, sched.partitions):
             if len(g) > 1 and corun_time(g, p) > solo_run_time(g):

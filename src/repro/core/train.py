@@ -18,7 +18,20 @@ completed-episode count when the record was taken (it can overshoot
 ``cfg.episodes`` by up to one segment), ``ep_reward`` is the mean return
 of the episodes completed in that segment, and ``eval_throughput`` is the
 mean relative throughput over the train queues (previously: queue 0 only,
-via the scalar reference env).
+via the scalar reference env).  Each record also carries
+``heldout_throughput`` — the same greedy metric over a second stacked batch
+of queues drawn *only* from the held-out (unseen) jobs, the paper's
+generalization test — evaluated in the same jitted ``step_batch`` rollout
+(the two batches are concatenated along the queue axis).  When no held-out
+jobs exist (e.g. re-training on a live profile repository with
+``heldout=set()``) the field is ``None``.
+
+``train_agent(..., warm_start=agent)`` seeds the engine from an existing
+agent's online/target params and optimizer state instead of a fresh
+initialization — the MISO-style periodic re-training entry point
+(``repro.online.retrain``): exploration (``env_steps``) restarts at zero so
+``cfg.dqn``'s ε schedule governs the refresh, but the Q-function continues
+from where the previous cycle left off.
 
 ``train_agent_scalar`` preserves the seed per-step Python loop verbatim —
 it is the semantic reference for the parity test and the baseline for
@@ -71,6 +84,8 @@ class TrainConfig:
     episodes: int = 3000
     updates_per_step: int = 1
     n_train_queues: int = 20            # paper: 20 random queues for training
+    n_heldout_queues: int = 8           # unseen-job queues per eval record
+    strict_classes: bool = True         # demand CI+MI+US in the train pool
     seed: int = 0
     eval_every: int = 100
     batch_envs: int = 16                # B parallel envs in the scanned engine
@@ -96,11 +111,33 @@ def heldout_split(jobs: list[JobProfile], frac: float = 0.33, seed: int = 7):
 
 
 def _train_queues(jobs, env_cfg, cfg, heldout, rng):
-    """20 fixed training queues, all classes represented (paper §V-A2)."""
+    """20 fixed training queues, all classes represented (paper §V-A2).
+
+    ``cfg.strict_classes=False`` lets recipes remap missing classes onto
+    the ones present — required when training on a live profile repository
+    mid-growth (the online retrainer sets it); offline callers keep the
+    historical 'zoo has no X jobs' validation by default."""
     return [
         make_queue(jobs, QUEUE_KINDS[i % len(QUEUE_KINDS)], env_cfg.window, rng,
-                   exclude=heldout)
+                   exclude=heldout, strict=cfg.strict_classes)
         for i in range(cfg.n_train_queues)
+    ]
+
+
+def _heldout_queues(jobs, env_cfg, cfg, heldout, rng):
+    """Queues drawn only from held-out jobs — the generalization eval batch.
+
+    Empty when there are no held-out jobs (then the per-record
+    ``heldout_throughput`` is ``None``).  Uses its own RNG so the training
+    stream (queue composition, per-segment env assignment) is untouched.
+    """
+    pool = [j for j in jobs if j.name in heldout]
+    if not pool or cfg.n_heldout_queues <= 0:
+        return []
+    return [
+        make_queue(pool, QUEUE_KINDS[i % len(QUEUE_KINDS)], env_cfg.window, rng,
+                   strict=False)
+        for i in range(cfg.n_heldout_queues)
     ]
 
 
@@ -288,11 +325,14 @@ def _engine_for(env_cfg: EnvConfig, dqn_cfg: DQNConfig,
 
 def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
                 cfg: TrainConfig | None = None, heldout: set[str] | None = None,
-                verbose: bool = False,
+                verbose: bool = False, warm_start: DQNAgent | None = None,
                 _force_per: bool = False) -> tuple[DQNAgent, list[dict]]:
     """Train on the scanned vectorized engine; same signature/records as ever.
 
     ``cfg.per_alpha > 0`` switches the engine to prioritized replay.
+    ``warm_start`` seeds params/target/opt from an existing agent (shapes
+    must match this ``env_cfg``); exploration restarts at step 0 under
+    ``cfg.dqn``'s ε schedule — the periodic re-training entry point.
     ``_force_per`` routes ``per_alpha == 0`` through the PER machinery
     anyway (uniform indices, unit weights) — the regression parity test
     uses it to pin that path bit-exactly to the uniform engine.
@@ -319,11 +359,26 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     agent = DQNAgent(venv.state_dim, venv.n_actions, cfg.dqn, seed=cfg.seed,
                      per_alpha=cfg.per_alpha, per_beta0=cfg.per_beta0,
                      per_eps=cfg.per_eps)
+    if warm_start is not None:
+        # copy (not alias): the jitted segment donates its carry, and donated
+        # buffers are invalidated — the caller's agent must stay usable
+        src, dst = jax.tree.leaves(warm_start.params), jax.tree.leaves(agent.params)
+        assert len(src) == len(dst) and all(a.shape == b.shape
+                                            for a, b in zip(src, dst)), \
+            "warm_start agent shape mismatch with this EnvConfig/DQNConfig"
+        agent.params = jax.tree.map(jnp.copy, warm_start.params)
+        agent.target_params = jax.tree.map(jnp.copy, warm_start.target_params)
+        agent.opt = jax.tree.map(jnp.copy, warm_start.opt)
     rng = np.random.default_rng(cfg.seed)
     heldout = heldout if heldout is not None else heldout_split(jobs)
     train_queues = _train_queues(jobs, env_cfg, cfg, heldout, rng)
+    held_queues = _heldout_queues(jobs, env_cfg, cfg, heldout,
+                                  np.random.default_rng(cfg.seed + 0x9E37))
     qa = [venv.queue_arrays(q) for q in train_queues]
-    qa_eval = stack_queues(qa)          # evaluation covers every train queue
+    n_tr = len(train_queues)
+    # one stacked eval batch: train queues first, held-out queues after —
+    # a single jitted rollout yields both metrics per record
+    qa_eval = stack_queues(qa + [venv.queue_arrays(q) for q in held_queues])
 
     # segment length targeting ~eval_every completed episodes per scan;
     # never below one worst-case episode (2W steps: all-solo groups) —
@@ -370,17 +425,21 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
             # device-resident greedy eval: every train queue in one jitted
             # batch rollout; record the mean relative throughput
             e_env, e_obs, e_mask = venv.reset_batch(qa_eval)
-            tp = eval_fn(params, e_env, e_obs, e_mask)
+            tp = np.asarray(eval_fn(params, e_env, e_obs, e_mask))
             ep_reward = float(np.asarray(rets).sum() / max(1, n_done))
             rec = {"episode": episodes_done, "eps": agent.epsilon,
                    "ep_reward": ep_reward,
-                   "eval_throughput": float(np.asarray(tp).mean())}
+                   "eval_throughput": float(tp[:n_tr].mean()),
+                   "heldout_throughput": (float(tp[n_tr:].mean())
+                                          if held_queues else None)}
             history.append(rec)
             next_eval = (episodes_done // eval_every + 1) * eval_every
             if verbose:
+                held = rec["heldout_throughput"]
                 print(f"ep {rec['episode']:5d} eps={rec['eps']:.3f} "
                       f"reward={rec['ep_reward']:8.1f} "
-                      f"eval_tp={rec['eval_throughput']:.3f}")
+                      f"eval_tp={rec['eval_throughput']:.3f} "
+                      f"held_tp={held if held is None else f'{held:.3f}'}")
 
     agent.params, agent.target_params, agent.opt = params, target, opt
     agent.env_steps, agent.updates = int(env_steps), int(updates)

@@ -90,13 +90,26 @@ def zoo_by_class(jobs: list[JobProfile]) -> dict[str, list[JobProfile]]:
 
 
 def make_queue(jobs: list[JobProfile], kind: str, window: int, rng: np.random.Generator,
-               exclude: set[str] | None = None) -> list[JobProfile]:
-    """Paper §V-A2 queue recipes: CI/MI/US-dominant or Balanced."""
+               exclude: set[str] | None = None, strict: bool = True) -> list[JobProfile]:
+    """Paper §V-A2 queue recipes: CI/MI/US-dominant or Balanced.
+
+    ``strict=True`` (the default) demands every class be represented and
+    raises otherwise — the historical contract for the curated zoo.  With
+    ``strict=False`` missing classes are remapped round-robin onto the
+    classes that *are* present, preserving the recipe's proportions as far
+    as the pool allows; the online re-training loop needs this because the
+    live :class:`~repro.core.profiles.ProfileRepository` grows one observed
+    application at a time and may not cover all three classes yet.
+    """
     by_cls = zoo_by_class([j for j in jobs if not exclude or j.name not in exclude])
     classes = ["CI", "MI", "US"]
-    for c in classes:
-        if not by_cls[c]:
-            raise ValueError(f"zoo has no {c} jobs")
+    missing = [c for c in classes if not by_cls[c]]
+    if missing:
+        if strict or len(missing) == len(classes):
+            raise ValueError(f"zoo has no {missing[0]} jobs")
+        avail = [c for c in classes if by_cls[c]]
+        by_cls.update({m: by_cls[avail[i % len(avail)]]
+                       for i, m in enumerate(missing)})
     picks: list[JobProfile] = []
     if kind == "balanced":
         seq = [classes[i % 3] for i in range(window)]

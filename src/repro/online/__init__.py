@@ -1,0 +1,57 @@
+"""Online cluster serving: event-driven multi-tenant arrivals + re-training.
+
+This package turns the offline queue solver into a system that serves
+traffic over simulated time — the paper's §IV-B online phase under
+MISO-style multi-tenant dynamics.
+
+Event model
+-----------
+:class:`~repro.online.simulator.ClusterSimulator` advances a single event
+heap of ``ARRIVE`` / ``TICK`` / ``FREE`` events.  Submissions queue FCFS;
+whenever the pod is idle, the head window (up to W submissions) is handed
+to a :class:`~repro.online.policies.DispatchPolicy` as ``(binary,
+profile)`` pairs.  First-sight binaries run solo while being profiled and
+enter the :class:`~repro.core.profiles.ProfileRepository`; profiled jobs
+are co-scheduled into hierarchically partitioned groups that execute back
+to back, each appending to the slice-occupancy timeline.  Per-job
+wait/turnaround and cluster makespan/throughput/utilization land in a
+:class:`~repro.online.simulator.SimResult`.  Everything is deterministic
+given the trace seed.
+
+Traces ↔ paper workload mix
+---------------------------
+:mod:`repro.online.traces` generates arrival processes (Poisson, bursty
+MMPP, diurnal, heavy-tailed job scales) whose per-arrival job draw follows
+the paper's §V-A2 queue recipes: ``mix="ci"|"mi"|"us"`` weights the
+dominant class at 50% (the CI/MI/US-dominant queue categories of Table V),
+``mix="balanced"`` draws classes uniformly.  A trace is therefore the
+streaming analogue of the paper's static queue families.
+
+Re-training
+-----------
+:class:`~repro.online.retrain.OnlineRetrainer` hangs off the simulator's
+periodic tick: every K simulated minutes it re-trains the agent on the live
+repository (warm-started from current params via ``train_agent(...,
+warm_start=...)``) and hot-swaps the refreshed agent into the RL dispatch
+policy.
+"""
+from repro.online.policies import (
+    DispatchPolicy, GreedyPackerPolicy, PolicyStats, RLDispatchPolicy,
+    StaticPartitionPolicy, TimeSharingPolicy,
+)
+from repro.online.retrain import OnlineRetrainer, default_retrain_train_config
+from repro.online.simulator import (
+    Arrival, ClusterSimulator, JobRecord, Segment, SimResult,
+)
+from repro.online.traces import (
+    TRACE_FAMILIES, diurnal_trace, heavy_tailed_trace, mmpp_trace,
+    poisson_trace,
+)
+
+__all__ = [
+    "Arrival", "ClusterSimulator", "DispatchPolicy", "GreedyPackerPolicy",
+    "JobRecord", "OnlineRetrainer", "PolicyStats", "RLDispatchPolicy",
+    "Segment", "SimResult", "StaticPartitionPolicy", "TRACE_FAMILIES",
+    "TimeSharingPolicy", "default_retrain_train_config", "diurnal_trace",
+    "heavy_tailed_trace", "mmpp_trace", "poisson_trace",
+]

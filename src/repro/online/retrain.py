@@ -1,0 +1,82 @@
+"""MISO-style periodic re-training against the live profile repository.
+
+Every ``interval_s`` of *simulated* time (driven by the simulator's TICK
+events), the retrainer snapshots the profile repository — exactly the
+applications the cluster has observed and profiled so far — re-trains the
+DQN co-scheduler on queues drawn from that snapshot, **warm-starting** from
+the serving agent's current params/target/optimizer state, and hot-swaps
+the refreshed agent into the dispatch policy.  The scanned training engine
+(``train_agent``) makes minute-scale refresh cycles affordable: one cycle
+at the default retrain budget is a few hundred episodes, a couple of
+seconds of wall clock on CPU.
+
+Re-training waits until the repository holds at least ``min_jobs`` distinct
+profiles (early ticks on a cold repository would train on one or two
+applications and overfit the Q-function to them).  Queues are built with
+``strict=False``, so a repository that does not yet span all three CI/MI/US
+classes still trains — recipes remap onto the classes observed.
+
+Wall-clock cost note: each distinct ``TrainConfig``/``EnvConfig`` shape
+compiles its own engine; reusing one ``RetrainConfig`` across cycles means
+the first tick pays compilation and every later tick runs from the engine
+cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+from repro.core.agent import DQNConfig
+from repro.core.train import TrainConfig, train_agent
+from repro.online.policies import RLDispatchPolicy
+
+
+def default_retrain_train_config(episodes: int = 240) -> TrainConfig:
+    """A refresh-sized training budget: modest exploration restart (the
+    warm-started Q-function needs adaptation, not rediscovery), small queue
+    set, one history record per cycle."""
+    return TrainConfig(
+        episodes=episodes, eval_every=episodes, n_train_queues=8,
+        n_heldout_queues=0, strict_classes=False, batch_envs=8,
+        update_every=8,
+        dqn=DQNConfig(eps_start=0.25, eps_end=0.01, eps_decay_steps=2000,
+                      buffer_size=20_000),
+    )
+
+
+@dataclass
+class OnlineRetrainer:
+    """Tick callback for :class:`~repro.online.simulator.ClusterSimulator`.
+
+    Attach with ``ClusterSimulator(policy, tick_interval_s=cfg.interval_s,
+    on_tick=retrainer)``; ``history`` records one entry per completed
+    re-training cycle (simulated time, repository size, final train eval).
+    The environment config is the serving policy's own (the agent must be
+    re-trained for exactly the env it schedules in), so it is derived, not
+    passed.
+    """
+
+    policy: RLDispatchPolicy
+    train_cfg: TrainConfig = field(default_factory=default_retrain_train_config)
+    interval_s: float = 1800.0           # K simulated minutes between cycles
+    min_jobs: int = 4
+    reseed: bool = True                  # vary queue draws across cycles
+    history: list = field(default_factory=list)
+
+    def __call__(self, now: float, sim) -> None:
+        repo = self.policy.repository
+        jobs = repo.jobs()
+        if len(jobs) < self.min_jobs:
+            return
+        cfg = self.train_cfg
+        if self.reseed:
+            cfg = replace(cfg, seed=cfg.seed + len(self.history))
+        agent, hist = train_agent(jobs, self.policy.scheduler.env_cfg, cfg,
+                                  heldout=set(), warm_start=self.policy.agent)
+        self.policy.hot_swap(agent)
+        self.history.append({
+            "t_s": now,
+            "repository_jobs": len(jobs),
+            "class_counts": repo.class_counts(),
+            "episodes": hist[-1]["episode"],
+            "train_eval_throughput": hist[-1]["eval_throughput"],
+        })

@@ -71,6 +71,85 @@ def test_scheduler_online_protocol_unprofiled_jobs_run_solo():
     assert QUEUE[2].name in names
 
 
+def test_schedule_submissions_fresh_none_is_skipped_but_counted():
+    """An unprofiled job with no fresh measurement cannot run (nothing to
+    schedule) — it is counted, not silently dropped into the schedule."""
+    env_cfg = EnvConfig(window=6, c_max=4)
+    sched_obj = RLScheduler(_fresh_agent(env_cfg), env_cfg)
+    sched = sched_obj.schedule_submissions([("/bin/ghost", None)])
+    assert sched.groups == []
+    assert sched_obj.stats.unprofiled_jobs == 1
+    assert len(sched_obj.repository) == 0
+
+
+def test_schedule_submissions_unprofiled_runs_solo_full_pod():
+    env_cfg = EnvConfig(window=6, c_max=4)
+    sched_obj = RLScheduler(_fresh_agent(env_cfg), env_cfg)
+    sched = sched_obj.schedule_submissions([("/bin/new", QUEUE[0])])
+    assert len(sched.groups) == 1 and len(sched.groups[0]) == 1
+    p = sched.partitions[0]
+    assert p.arity == 1 and p.slices[0].units == 8     # full pod, solo
+    assert sched_obj.repository.lookup("/bin/new") is QUEUE[0]
+
+
+def test_schedule_submissions_chunks_oversized_windows():
+    """More profiled jobs than W run as successive RL windows, all covered."""
+    env_cfg = EnvConfig(window=4, c_max=3)
+    repo = ProfileRepository()
+    subs = []
+    for i in range(10):
+        repo.insert(f"/bin/j{i}", QUEUE[i % len(QUEUE)])
+        subs.append((f"/bin/j{i}", None))
+    sched_obj = RLScheduler(_fresh_agent(env_cfg), env_cfg, repo)
+    sched = sched_obj.schedule_submissions(subs)
+    assert sched_obj.stats.windows == 3                # ceil(10 / 4)
+    assert sched_obj.stats.unprofiled_jobs == 0
+    assert sum(len(g) for g in sched.groups) == 10
+    for g, p in zip(sched.groups, sched.partitions):
+        assert len(g) == p.arity <= 3
+
+
+def test_scheduler_shares_caller_repository_even_when_empty():
+    """Regression: an empty repository is falsy — `or` used to replace it,
+    severing the caller's handle to the shared profile store."""
+    env_cfg = EnvConfig(window=6, c_max=4)
+    repo = ProfileRepository()
+    sched_obj = RLScheduler(_fresh_agent(env_cfg), env_cfg, repo)
+    assert sched_obj.repository is repo
+    sched_obj.schedule_submissions([("/bin/a", QUEUE[0])])
+    assert "/bin/a" in repo
+
+
+def test_enforce_constraints_counts_fallback_groups():
+    """A group whose co-run loses to time sharing is split back into solo
+    runs and tallied in stats.fallback_groups."""
+    from repro.core.partition import enumerate_partitions
+    from repro.core.perfmodel import corun_time, solo_run_time
+    from repro.core.problem import Schedule
+
+    bad = None
+    for p in (q for q in enumerate_partitions(4) if q.arity == 2):
+        for i in range(len(ZOO)):
+            for j in range(i, len(ZOO)):
+                g = [ZOO[i], ZOO[j]]
+                if corun_time(g, p) > solo_run_time(g):
+                    bad = (g, p)
+                    break
+            if bad:
+                break
+        if bad:
+            break
+    assert bad is not None, "zoo has no losing co-run pair to test with"
+    env_cfg = EnvConfig(window=6, c_max=4)
+    sched_obj = RLScheduler(_fresh_agent(env_cfg), env_cfg)
+    raw = Schedule()
+    raw.add(*bad)
+    out = sched_obj._enforce_constraints(raw)
+    assert sched_obj.stats.fallback_groups == 1
+    assert [len(g) for g in out.groups] == [1, 1]
+    assert all(p.arity == 1 for p in out.partitions)
+
+
 def test_best_for_group_defaults_to_full_permutation_sweep():
     """The oracle's per-group search must cover all C! slot orderings —
     a truncated sweep (the old max_perms=8) is not an upper bound."""

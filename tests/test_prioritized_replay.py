@@ -115,6 +115,29 @@ def test_tree_query_never_returns_zero_mass_leaf():
     assert np.asarray(idx).max() < 4
 
 
+def test_incremental_ancestor_updates_bit_match_full_rebuild():
+    """per_push/per_update recompute only ancestor paths (O(B log C)); the
+    result must be bit-identical to a from-scratch rebuild of the same
+    leaves — every touched node is the exact sum of its children, so no
+    float32 drift can accumulate either."""
+    from repro.core.replay import _tree_rebuild
+
+    rng = np.random.default_rng(0)
+    for capacity in (8, 12, 32):           # 12: leaves > capacity (padding)
+        ps = per_init(capacity, 3, 2)
+        for step in range(12):
+            if step % 2 == 0:
+                ps = per_push(ps, _block(step + 1))
+            else:
+                n_idx = int(rng.integers(1, 6))
+                idx = jnp.asarray(rng.integers(0, capacity, size=n_idx))
+                td = jnp.asarray(rng.gamma(1.0, 2.0, size=n_idx), jnp.float32)
+                ps = per_update(ps, idx, td, alpha=0.7, eps=1e-3)
+            rebuilt = np.asarray(_tree_rebuild(ps.tree))
+            assert np.array_equal(np.asarray(ps.tree), rebuilt), (
+                capacity, step)
+
+
 def test_sample_empty_ring_asserts():
     rs = replay_init(8, 2, 2)
     with pytest.raises(AssertionError):
@@ -200,7 +223,8 @@ def test_prioritized_training_runs_and_decays():
     agent, hist = train_agent(ZOO, env_cfg, _small_cfg(per_alpha=0.6))
     assert hist and hist[-1]["episode"] >= 40
     for rec in hist:
-        assert set(rec) == {"episode", "eps", "ep_reward", "eval_throughput"}
+        assert set(rec) == {"episode", "eps", "ep_reward", "eval_throughput",
+                            "heldout_throughput"}
         assert np.isfinite(rec["ep_reward"]) and np.isfinite(rec["eval_throughput"])
     assert hist[-1]["eps"] < 1.0
     assert agent.per_alpha == 0.6

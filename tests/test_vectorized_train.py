@@ -167,8 +167,52 @@ def test_train_agent_history_contract():
     agent, hist = train_agent(ZOO, env_cfg, _small_cfg(seed=1))
     assert hist, "history must not be empty"
     for rec in hist:
-        assert set(rec) == {"episode", "eps", "ep_reward", "eval_throughput"}
+        assert set(rec) == {"episode", "eps", "ep_reward", "eval_throughput",
+                            "heldout_throughput"}
+        # the zoo has held-out jobs, so the generalization metric is live
+        assert np.isfinite(rec["heldout_throughput"])
     assert hist[-1]["episode"] >= 40
     assert agent.env_steps > 0 and agent.updates > 0
     # ε decayed from its start value
     assert hist[-1]["eps"] < 1.0
+
+
+def test_heldout_throughput_none_without_heldout_jobs():
+    """heldout=set() (e.g. re-training on a live repository) disables the
+    generalization batch instead of crashing or faking a number."""
+    env_cfg = EnvConfig(window=4, c_max=3)
+    _, hist = train_agent(ZOO, env_cfg, _small_cfg(seed=2), heldout=set())
+    assert all(rec["heldout_throughput"] is None for rec in hist)
+
+
+def test_train_agent_warm_start_copies_and_continues():
+    env_cfg = EnvConfig(window=4, c_max=3)
+    a1, _ = train_agent(ZOO, env_cfg, _small_cfg())
+    snap = [np.asarray(x).copy() for x in jax.tree.leaves(a1.params)]
+    a2, h2 = train_agent(ZOO, env_cfg, _small_cfg(seed=3), warm_start=a1)
+    assert h2
+    # donation must not invalidate or mutate the caller's agent
+    for x, y in zip(snap, jax.tree.leaves(a1.params)):
+        assert np.array_equal(x, np.asarray(y))
+    # warm start actually seeds the run: same seed, different outcome
+    a3, _ = train_agent(ZOO, env_cfg, _small_cfg(seed=3))
+    diffs = [not np.array_equal(np.asarray(x), np.asarray(y))
+             for x, y in zip(jax.tree.leaves(a2.params),
+                             jax.tree.leaves(a3.params))]
+    assert any(diffs)
+
+
+def test_train_agent_default_still_validates_job_classes():
+    """strict_classes=True (default) keeps the historical guard: a pool
+    missing a class fails loudly instead of silently remapping recipes."""
+    ci_only = [j for j in ZOO if j.job_class == "CI"]
+    env_cfg = EnvConfig(window=4, c_max=3)
+    with pytest.raises(ValueError, match="no .* jobs"):
+        train_agent(ci_only, env_cfg, _small_cfg(), heldout=set())
+
+
+def test_train_agent_warm_start_shape_mismatch_rejected():
+    env_cfg = EnvConfig(window=4, c_max=3)
+    wrong = DQNAgent(10, 5, DQNConfig(), seed=0)
+    with pytest.raises(AssertionError, match="warm_start"):
+        train_agent(ZOO, env_cfg, _small_cfg(), warm_start=wrong)
