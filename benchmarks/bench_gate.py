@@ -1,0 +1,94 @@
+"""CI gate over the *committed* benchmark trajectories (stdlib only).
+
+``--smoke`` re-measures on tiny budgets; this gate instead pins the
+numbers already committed in ``BENCH_online.json`` / ``BENCH_train.json``
+so a PR cannot silently regress the recorded trajectory (ROADMAP's CI
+hardening item: gate on ``per_comparison`` and ``BENCH_online.json``
+ratio regressions):
+
+  * every trace family's recorded ``rl_retrain`` throughput stays at or
+    above ``RL_TS_FLOOR`` x time sharing;
+  * concurrent dispatch never records below blocking-window dispatch, and
+    strictly beats it on the fragmented family;
+  * PER's recorded sample-efficiency comparison has not drifted: at the
+    1000-episode budget, prioritized replay's mean eval throughput stays
+    within ``PER_DRIFT`` of uniform replay's (the matched-update-work
+    comparison of PR 2).
+
+Exits 1 with a failure list; run as
+``PYTHONPATH=src python -m benchmarks.bench_gate``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RL_TS_FLOOR = 0.97        # committed rl_retrain/time_sharing per family
+CONC_BLK_FLOOR = 0.999    # committed concurrent/blocking per family
+FRAG_MARGIN = 1.02        # fragmented family must strictly win
+PER_DRIFT = 0.15          # |prioritized - uniform| / uniform at 1000 ep
+
+
+def _load(path: str, failures: list[str]) -> dict | None:
+    if not os.path.exists(path):
+        failures.append(f"{path} missing")
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate_online(bench: dict, failures: list[str]) -> None:
+    for fam, ratio in bench.get("rl_vs_time_sharing", {}).items():
+        if ratio < RL_TS_FLOOR:
+            failures.append(f"online: rl_retrain/ts on {fam} = {ratio:.3f} "
+                            f"< floor {RL_TS_FLOOR}")
+    cmp_ = bench.get("dispatch_comparison", {})
+    if not cmp_:
+        failures.append("online: dispatch_comparison section missing")
+    for fam, ratios in cmp_.items():
+        worst = min(ratios.values())
+        if worst < CONC_BLK_FLOOR:
+            failures.append(f"online: concurrent/blocking on {fam} = "
+                            f"{worst:.3f} < floor {CONC_BLK_FLOOR}")
+    frag = cmp_.get("fragmented", {}).get("time_sharing", 0.0)
+    if frag < FRAG_MARGIN:
+        failures.append(f"online: fragmented concurrent/blocking = "
+                        f"{frag:.3f} < margin {FRAG_MARGIN}")
+
+
+def gate_train(bench: dict, failures: list[str]) -> None:
+    per = bench.get("per_comparison")
+    if not per:
+        failures.append("train: per_comparison section missing")
+        return
+    se = per.get("sample_efficiency_1000ep", {})
+    uni = se.get("uniform_mean_eval_throughput")
+    pri = se.get("prioritized_mean_eval_throughput")
+    if uni is None or pri is None:
+        failures.append("train: per_comparison sample-efficiency keys missing")
+        return
+    drift = abs(pri - uni) / uni
+    if drift > PER_DRIFT:
+        failures.append(f"train: PER vs uniform drift {drift:.3f} "
+                        f"> {PER_DRIFT} (uniform {uni:.3f}, "
+                        f"prioritized {pri:.3f})")
+
+
+def main() -> None:
+    failures: list[str] = []
+    online = _load("BENCH_online.json", failures)
+    if online is not None:
+        gate_online(online, failures)
+    train = _load("BENCH_train.json", failures)
+    if train is not None:
+        gate_train(train, failures)
+    if failures:
+        print("BENCH GATE FAIL:\n  " + "\n  ".join(failures))
+        sys.exit(1)
+    print("bench gate ok: committed BENCH_online.json / BENCH_train.json "
+          "ratios within floors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,23 +1,35 @@
 """Online cluster benchmark: policies under multi-tenant arrival traces.
 
 Serves identical arrival traces (Poisson / bursty MMPP / diurnal /
-heavy-tailed job scales) through the event-driven cluster simulator with
-each dispatch policy, and writes ``BENCH_online.json`` — the online-phase
-trajectory future PRs regress against.  The headline figures are
-makespan-derived throughput ratios vs the time-sharing baseline (the
-paper's Fig. 8 metric, streamed: up to 1.87x in the paper's queues); the RL
-policy runs twice, once frozen and once with MISO-style periodic
-re-training against the live profile repository.
+heavy-tailed job scales / fragmentation-stressing right-sized widths)
+through the event-driven cluster simulator with each dispatch policy, and
+writes ``BENCH_online.json`` — the online-phase trajectory future PRs
+regress against.  The headline figures are makespan-derived throughput
+ratios vs the time-sharing baseline (the paper's Fig. 8 metric, streamed:
+up to 1.87x in the paper's queues); the RL policy runs twice, once frozen
+and once with MISO-style periodic re-training against the live profile
+repository.
+
+Every trace family is additionally served under both dispatch modes —
+slice-level **concurrent + backfill** (the default) vs the PR-3
+**blocking-window** pod — with the same frozen policies, and the
+``concurrent_vs_blocking`` throughput ratios land in the
+``dispatch_comparison`` section: 1.0 on full-pod-only families (the modes
+are bit-compatible there) and strictly above 1.0 on the fragmented family,
+where right-sized jobs pack disjoint slices and small groups backfill idle
+gaps.
 
     PYTHONPATH=src python -m benchmarks.online_sim [--fast] \
         [--out BENCH_online.json]
 
 ``--smoke`` is the CI guard (< 60 s): a tiny agent, short traces, RL with
-re-training vs time sharing only; fails (exit 1) if the RL policy's
-throughput drops below ``--ratio-floor`` x time sharing on the Poisson
-trace or if the committed ``BENCH_online.json`` is missing required keys.
-Smoke mode does not overwrite the committed trajectory unless ``--out`` is
-given.
+re-training vs time sharing, plus the dispatch-mode comparison; fails
+(exit 1) if the RL policy's throughput drops below ``--ratio-floor`` x
+time sharing on the Poisson trace, if concurrent dispatch falls below
+blocking on any smoke family, if it fails to *beat* blocking by
+``--frag-margin`` on the fragmented family, or if the committed
+``BENCH_online.json`` is missing required keys.  Smoke mode does not
+overwrite the committed trajectory unless ``--out`` is given.
 """
 from __future__ import annotations
 
@@ -26,6 +38,7 @@ import json
 import sys
 import time
 
+from benchmarks.bench_gate import CONC_BLK_FLOOR, FRAG_MARGIN
 from benchmarks.common import emit, missing_keys
 from repro.core import EnvConfig, TrainConfig, make_zoo, train_agent
 from repro.core.agent import DQNConfig
@@ -35,13 +48,14 @@ from repro.online import (
     default_retrain_train_config,
 )
 
-REQUIRED_KEYS = ("window", "n_arrivals", "traces", "rl_vs_time_sharing", "note")
+REQUIRED_KEYS = ("window", "n_arrivals", "traces", "rl_vs_time_sharing",
+                 "dispatch_comparison", "note")
 
 
-def _simulate(policy, trace, window, retrainer=None):
+def _simulate(policy, trace, window, retrainer=None, mode="concurrent"):
     t0 = time.perf_counter()
     sim = ClusterSimulator(
-        policy, window=window,
+        policy, window=window, mode=mode,
         tick_interval_s=retrainer.interval_s if retrainer else None,
         on_tick=retrainer)
     res = sim.run(trace)
@@ -58,11 +72,16 @@ def _bench_trace(tname, trace, agent, env_cfg, window, retrain_cfg,
     """All policies on one trace; fresh repositories so profiling restarts."""
     out: dict = {"arrivals": len(trace), "span_s": trace[-1].t}
     out["time_sharing"] = _simulate(TimeSharingPolicy(), trace, window)
+    # dispatch-mode comparison: same frozen policies, blocking pod
+    out["time_sharing_blocking"] = _simulate(TimeSharingPolicy(), trace,
+                                             window, mode="blocking")
     if baselines:
         out["greedy_packer"] = _simulate(GreedyPackerPolicy(), trace, window)
         out["mig_mps_default"] = _simulate(
             StaticPartitionPolicy("mig_mps_default"), trace, window)
         out["rl"] = _simulate(RLDispatchPolicy(agent, env_cfg), trace, window)
+        out["rl_blocking"] = _simulate(RLDispatchPolicy(agent, env_cfg),
+                                       trace, window, mode="blocking")
     pol = RLDispatchPolicy(agent, env_cfg)
     rt = OnlineRetrainer(policy=pol, **retrain_cfg)
     out["rl_retrain"] = _simulate(pol, trace, window, retrainer=rt)
@@ -70,8 +89,14 @@ def _bench_trace(tname, trace, agent, env_cfg, window, retrain_cfg,
     for name in ("greedy_packer", "mig_mps_default", "rl", "rl_retrain"):
         if name in out:
             out[f"{name}_vs_time_sharing"] = out[name]["throughput"] / ts_tp
+    cvb = {"time_sharing": (out["time_sharing"]["throughput"]
+                            / out["time_sharing_blocking"]["throughput"])}
+    if "rl_blocking" in out:
+        cvb["rl"] = out["rl"]["throughput"] / out["rl_blocking"]["throughput"]
+    out["concurrent_vs_blocking"] = cvb
     emit(f"online_{tname}", out["rl_retrain"]["sim_wall_s"] * 1e6,
-         f"rl_rt/ts={out['rl_retrain_vs_time_sharing']:.3f}")
+         f"rl_rt/ts={out['rl_retrain_vs_time_sharing']:.3f} "
+         f"conc/blk={cvb['time_sharing']:.3f}")
     return out
 
 
@@ -79,9 +104,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="shrink the full run")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI guard: tiny counts, ratio floor + key check")
+                    help="CI guard: tiny counts, ratio floors + key check")
     ap.add_argument("--ratio-floor", type=float, default=0.98,
                     help="min rl_retrain/time_sharing throughput in --smoke")
+    ap.add_argument("--frag-margin", type=float, default=FRAG_MARGIN,
+                    help="min concurrent/blocking throughput on the "
+                         "fragmented family in --smoke (shared with "
+                         "benchmarks.bench_gate)")
     ap.add_argument("--window", type=int, default=None)
     ap.add_argument("--arrivals", type=int, default=None)
     ap.add_argument("--episodes", type=int, default=None)
@@ -99,7 +128,7 @@ def main() -> None:
         window = args.window or 6
         episodes = args.episodes or 120
         n = args.arrivals or 32
-        families = ("poisson", "mmpp", "heavy_tailed")
+        families = ("poisson", "fragmented", "mmpp")
         interval_min = args.retrain_interval_min or 40.0
         retrain_episodes = 80
     else:
@@ -134,6 +163,8 @@ def main() -> None:
                                    retrain_cfg, baselines=not args.smoke)
 
     rl_vs_ts = {t: traces[t]["rl_retrain_vs_time_sharing"] for t in traces}
+    dispatch_cmp = {t: traces[t]["concurrent_vs_blocking"] for t in traces}
+    frag = traces.get("fragmented", {})
     result = {
         "window": window,
         "n_arrivals": n,
@@ -144,10 +175,19 @@ def main() -> None:
                     "episodes": retrain_episodes},
         "traces": traces,
         "rl_vs_time_sharing": rl_vs_ts,
+        "dispatch_comparison": dispatch_cmp,
         "acceptance": {
             "poisson_arrivals": traces.get("poisson", {}).get("arrivals", 0),
             "rl_retrain_beats_time_sharing_on_poisson":
                 rl_vs_ts.get("poisson", 0.0) > 1.0,
+            "concurrent_ge_blocking_all_families":
+                all(min(r.values()) >= CONC_BLK_FLOOR
+                    for r in dispatch_cmp.values()),
+            "concurrent_strictly_beats_blocking_on_fragmented":
+                frag.get("concurrent_vs_blocking",
+                         {}).get("time_sharing", 0.0) > 1.0,
+            "fragmented_backfills":
+                frag.get("time_sharing", {}).get("backfills", 0),
         },
         "note": ("throughput = total solo work / makespan (time sharing ~1.0 "
                  "on a saturated pod); *_vs_time_sharing are ratios of that "
@@ -155,7 +195,13 @@ def main() -> None:
                  "on the live profile repository every interval_min simulated "
                  "minutes, warm-started from current params, and hot-swaps "
                  "it; all policies pay the same first-sight profiling cost "
-                 "(unprofiled jobs run solo)"),
+                 "(unprofiled jobs run solo); dispatch_comparison = "
+                 "concurrent-dispatch/blocking-window throughput per policy "
+                 "on identical traces — 1.0 where placements are full-pod "
+                 "(bit-compatible modes), >1.0 on the fragmented family "
+                 "where right-sized jobs pack disjoint slices and backfill "
+                 "idle gaps; slice_utilization/idle_slice_frac in each "
+                 "summary are claimed-unit-seconds over N_UNITS x makespan"),
     }
 
     if args.smoke:
@@ -164,6 +210,15 @@ def main() -> None:
         if ratio < args.ratio_floor:
             failures.append(f"rl_retrain/time_sharing {ratio:.3f} below "
                             f"floor {args.ratio_floor:.2f}")
+        for fam, cmp_ in dispatch_cmp.items():
+            worst = min(cmp_.values())
+            if worst < CONC_BLK_FLOOR:
+                failures.append(f"concurrent below blocking on {fam}: "
+                                f"{worst:.3f}")
+        frag_ratio = dispatch_cmp.get("fragmented", {}).get("time_sharing", 0.0)
+        if frag_ratio < args.frag_margin:
+            failures.append(f"fragmented concurrent/blocking {frag_ratio:.3f} "
+                            f"below margin {args.frag_margin:.2f}")
         missing = missing_keys(args.bench_json, REQUIRED_KEYS)
         if missing:
             failures.append(f"{args.bench_json} missing keys: {missing}")
@@ -174,14 +229,19 @@ def main() -> None:
             print("SMOKE FAIL: " + "; ".join(failures))
             sys.exit(1)
         print(f"smoke ok: rl_retrain/ts {ratio:.3f} on poisson "
-              f"(floor {args.ratio_floor:.2f}), {args.bench_json} keys present")
+              f"(floor {args.ratio_floor:.2f}), fragmented conc/blk "
+              f"{frag_ratio:.3f} (margin {args.frag_margin:.2f}), "
+              f"{args.bench_json} keys present")
         return
 
     out = args.out or "BENCH_online.json"
     with open(out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"wrote {out}: rl_retrain/ts " +
-          ", ".join(f"{t}={r:.3f}" for t, r in rl_vs_ts.items()))
+          ", ".join(f"{t}={r:.3f}" for t, r in rl_vs_ts.items()) +
+          "; conc/blk " +
+          ", ".join(f"{t}={r['time_sharing']:.3f}"
+                    for t, r in dispatch_cmp.items()))
 
 
 if __name__ == "__main__":

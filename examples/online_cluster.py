@@ -6,10 +6,15 @@
   3. serve the same trace with time sharing, the greedy packer, and the RL
      scheduler — the RL run periodically re-trains against the live profile
      repository (MISO-style) and hot-swaps the refreshed agent,
-  4. compare makespan-derived throughput, waits and turnaround, and show
-     the slice-occupancy timeline of the first RL dispatches.
+  4. compare makespan-derived throughput, waits, turnaround, and slice-level
+     packing (slice utilization, backfills), and show the slice-occupancy
+     timeline of the first RL dispatches.
 
-    PYTHONPATH=src python examples/online_cluster.py [--trace mmpp]
+Groups run concurrently on disjoint slice ranges (EASY backfill included);
+pick ``--trace fragmented`` to see right-sized 1-unit mice pack around
+full-pod jobs, or ``--blocking`` for the whole-pod PR-3 dispatch mode.
+
+    PYTHONPATH=src python examples/online_cluster.py [--trace fragmented]
 """
 import argparse
 import time
@@ -30,7 +35,10 @@ def main():
     ap.add_argument("--trace", choices=sorted(TRACE_FAMILIES), default="poisson")
     ap.add_argument("--load", type=float, default=1.25)
     ap.add_argument("--retrain-interval-min", type=float, default=30.0)
+    ap.add_argument("--blocking", action="store_true",
+                    help="PR-3 whole-pod block dispatch (no concurrency)")
     args = ap.parse_args()
+    mode = "blocking" if args.blocking else "concurrent"
 
     zoo = make_zoo()
     env_cfg = EnvConfig(window=args.window, c_max=4)
@@ -51,24 +59,26 @@ def main():
 
     results = {}
     results["time_sharing"] = ClusterSimulator(
-        TimeSharingPolicy(), window=args.window).run(trace)
+        TimeSharingPolicy(), window=args.window, mode=mode).run(trace)
     results["greedy_packer"] = ClusterSimulator(
-        GreedyPackerPolicy(), window=args.window).run(trace)
+        GreedyPackerPolicy(), window=args.window, mode=mode).run(trace)
     pol = RLDispatchPolicy(agent, env_cfg)
     retrainer = OnlineRetrainer(
         policy=pol, train_cfg=default_retrain_train_config(240),
         interval_s=args.retrain_interval_min * 60.0)
     results["rl+retrain"] = ClusterSimulator(
-        pol, window=args.window, tick_interval_s=retrainer.interval_s,
+        pol, window=args.window, mode=mode, tick_interval_s=retrainer.interval_s,
         on_tick=retrainer).run(trace)
 
     ts = results["time_sharing"].throughput
     print(f"\n{'policy':14s} {'throughput':>10s} {'vs_ts':>6s} "
-          f"{'makespan_h':>10s} {'mean_wait_m':>11s} {'p95_turn_m':>10s}")
+          f"{'makespan_h':>10s} {'mean_wait_m':>11s} {'p95_turn_m':>10s} "
+          f"{'slice_util':>10s} {'backfills':>9s}")
     for name, r in results.items():
         print(f"{name:14s} {r.throughput:10.3f} {r.throughput/ts:6.3f} "
               f"{r.makespan/3600:10.2f} {r.mean_wait/60:11.1f} "
-              f"{r.p95_turnaround/60:10.1f}")
+              f"{r.p95_turnaround/60:10.1f} {r.slice_utilization:10.3f} "
+              f"{r.backfills:9d}")
 
     print(f"\nre-training cycles: {len(retrainer.history)}")
     for h in retrainer.history:
@@ -76,9 +86,12 @@ def main():
               f"{h['class_counts']} train_tp={h['train_eval_throughput']:.3f}")
 
     print("\nfirst RL dispatches (slice occupancy timeline):")
-    for seg in results["rl+retrain"].timeline[:10]:
-        print(f"  [{seg.t0:8.0f}s -> {seg.t1:8.0f}s] {seg.jobs} job(s) on "
-              f"{seg.partition}")
+    for seg in sorted(results["rl+retrain"].timeline,
+                      key=lambda s: (s.t0, s.slices))[:10]:
+        units = ",".join(f"{st}-{st + w - 1}" for st, w in seg.slices)
+        bf = " (backfilled)" if seg.backfilled else ""
+        print(f"  [{seg.t0:8.0f}s -> {seg.t1:8.0f}s] units {units:9s} "
+              f"{seg.jobs} job(s) on {seg.partition}{bf}")
     print("online_cluster OK")
 
 

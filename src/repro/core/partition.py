@@ -85,6 +85,27 @@ class Partition:
         return "hier"
 
 
+VALID_WIDTHS = (1, 2, 4, 8)     # MIG-style power-of-two slice widths
+
+
+def _width_label(units: int) -> str:
+    """``1m`` / ``.5m`` / ``.25m`` / ``.125m`` — fraction-of-pod suffix."""
+    return "1m" if units == N_UNITS else f"{units / N_UNITS:g}m".lstrip("0")
+
+
+def slice_label(slices: tuple[Slice, ...]) -> str:
+    """Regenerate a label in the table's grammar for derived partitions
+    (width-fitted placements are not table entries, so they re-label)."""
+    parts = []
+    for s in slices:
+        w = _width_label(s.units)
+        if len(s.shares) == 1:
+            parts.append(f"[{{{s.shares[0]:g}}},{w}]")
+        else:
+            parts.append("[" + "+".join(f"({b:g})" for b in s.shares) + f",{w}]")
+    return "+".join(parts)
+
+
 def _mps(label, *shares) -> Partition:
     return Partition((Slice(N_UNITS, tuple(shares)),), label)
 
@@ -133,10 +154,52 @@ def enumerate_partitions(c_max: int = 4) -> list[Partition]:
     return [p for p in table if p.arity <= c_max]
 
 
-def solo_partition() -> Partition:
-    """The full-pod single-slot partition (time sharing's unit; the slot
-    unprofiled first-sight jobs run on in the online protocol)."""
-    return enumerate_partitions(1)[0]
+def solo_partition(units: int = N_UNITS) -> Partition:
+    """Single-slot partition on a ``units``-wide slice.
+
+    The full-pod default is time sharing's unit and the slot unprofiled
+    first-sight jobs run on in the online protocol; narrower widths are the
+    placement layer's *right-sized* solo slices (a job whose trace carries a
+    ``meta["units"]`` hint occupies only the slice it can actually use,
+    leaving the rest of the pod for concurrent groups)."""
+    if units == N_UNITS:
+        return enumerate_partitions(1)[0]
+    s = Slice(units, (1.0,))
+    return Partition((s,), slice_label((s,)))
+
+
+def aligned_offsets(width: int) -> tuple[int, ...]:
+    """Valid start offsets for a ``width``-unit slice: buddy alignment (a
+    power-of-two slice starts at a multiple of its width), the TPU-native
+    counterpart of MIG's fixed GPC-slice anchor points."""
+    assert width in VALID_WIDTHS, width
+    return tuple(range(0, N_UNITS, width))
+
+
+def find_offsets(partition: Partition, free) -> tuple[int, ...] | None:
+    """First-fit-decreasing placement of ``partition``'s slices onto the
+    ``free`` unit mask (length ``N_UNITS``, True = idle).
+
+    Each slice claims a contiguous aligned range (:func:`aligned_offsets`);
+    slices are placed widest-first so large slices are not blocked by the
+    order smaller ones would claim gaps in.  Returns per-slice start offsets
+    in *partition order*, or ``None`` when no first-fit placement exists —
+    deterministic, so simulations replay bit-identically."""
+    avail = list(free)
+    assert len(avail) == N_UNITS, len(avail)
+    order = sorted(range(len(partition.slices)),
+                   key=lambda i: -partition.slices[i].units)
+    starts: list[int | None] = [None] * len(partition.slices)
+    for i in order:
+        w = partition.slices[i].units
+        for off in aligned_offsets(w):
+            if all(avail[off:off + w]):
+                starts[i] = off
+                avail[off:off + w] = [False] * w
+                break
+        else:
+            return None
+    return tuple(starts)
 
 
 def partitions_by_arity(c_max: int = 4) -> dict[int, list[Partition]]:

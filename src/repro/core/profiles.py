@@ -22,7 +22,7 @@ import math
 import os
 from dataclasses import dataclass, field
 
-from repro.core.partition import CHIPS_PER_UNIT, N_UNITS
+from repro.core.partition import CHIPS_PER_UNIT, N_UNITS, VALID_WIDTHS
 from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_bytes_min, model_flops
 
 # fixed per-step overhead (dispatch); plus per-collective ring latency that
@@ -111,6 +111,27 @@ class JobProfile:
     @property
     def serial_frac(self) -> float:
         return self.serial_s / self.solo_step_time()
+
+    @property
+    def requested_units(self) -> int:
+        """Slice width the submission asks for (``meta["units"]``, default
+        full pod).  This is the placement hint honored by the online
+        dispatch layer — right-sized traces set it so unscalable jobs
+        occupy only the slice they can actually use."""
+        u = int(self.meta.get("units", N_UNITS))
+        return u if u in VALID_WIDTHS else N_UNITS
+
+    def right_size(self, tol: float = 1.25) -> int:
+        """Narrowest slice width whose solo step time stays within ``tol``
+        of the full-pod step time (MISO-style right-sizing).  US jobs
+        right-size to 1 unit at any tolerance (they run *faster* on small
+        slices — shorter collective rings), MI decode lands on 2-4 units at
+        looser tolerances, scalable CI training stays full-pod."""
+        full = self.step_time(N_UNITS)
+        for u in (1, 2, 4):
+            if self.step_time(u) <= tol * full:
+                return u
+        return N_UNITS
 
     @property
     def job_class(self) -> str:

@@ -26,6 +26,28 @@ Two storage layers share one ring-buffer contract (block-aligned
     weights all ones), which is what lets ``TrainConfig.per_alpha = 0``
     default to uniform-equivalent behavior.
 
+**Sum-tree invariants.**  The tree is a flat ``(2L,)`` array over
+``L = next_pow2(capacity)`` leaves: node ``i``'s children are ``2i`` and
+``2i + 1``, leaves occupy ``[L, 2L)``, and node 1 is the root holding the
+total priority mass.  Three invariants hold after every operation:
+
+  1. *Exact-sum*: every internal node equals the float32 sum of its two
+     children — maintained by recomputing each touched leaf's ancestor
+     path bottom-up (``_tree_ascend``), so a node is always written as the
+     exact ``children[0] + children[1]``, never nudged by a delta.  This
+     is why incremental updates stay **bit-identical** to a from-scratch
+     ``_tree_rebuild``: both compute the same sums from the same leaves,
+     only over different node subsets.  The retained ``_tree_rebuild`` is
+     the reference the parity test pins ``per_push``/``per_update``
+     against; it is not used in the hot path.
+  2. *Padding is zero*: leaves at or past ``capacity`` hold 0.0 and are
+     therefore unreachable by the proportional descent (a zero-mass
+     subtree is never entered), so the power-of-two padding cannot leak
+     phantom transitions.
+  3. *Non-negative mass*: leaf priorities are ``(|td| + eps)**alpha`` with
+     ``eps > 0``, so any stored transition has strictly positive mass and
+     the fixed ``log2(L)``-step descent terminates at a valid leaf.
+
 ``ReplayBuffer`` / ``PrioritizedReplayBuffer`` keep the same semantics in
 numpy (identical sum-tree layout) for the scalar reference loop, so parity
 tests can pin the functional core against them.

@@ -8,6 +8,21 @@ whose predicted co-run loses to time sharing is split back into solo runs
 (the paper's constraint-1 guard).  Jobs without a profile in the repository
 are excluded from co-scheduling and executed solo while being profiled
 (paper's online protocol).
+
+Two shared pieces sit between any planner and the cluster simulator:
+
+* :func:`submission_protocol` — the single first-sight implementation
+  (unprofiled binary -> solo run + repository insert) every dispatcher
+  wraps, so the profiling cost is identical across policies by
+  construction.
+* :func:`to_placements` — width-fits a planned :class:`Schedule` into
+  :class:`Placement`\\ s: dedicated (single-share) slices shrink to their
+  job's ``requested_units`` hint so right-sized jobs occupy only the slice
+  range they can use, which is what lets the simulator run independent
+  groups concurrently on disjoint slices and backfill small jobs into idle
+  gaps.  MPS-shared slices keep their planned width (the share semantics
+  assume the planned slice), and a job without a hint keeps the full
+  width — offline schedules are bit-identical through this function.
 """
 from __future__ import annotations
 
@@ -15,7 +30,7 @@ from dataclasses import dataclass
 
 from repro.core.agent import DQNAgent
 from repro.core.env import CoScheduleEnv, EnvConfig
-from repro.core.partition import solo_partition
+from repro.core.partition import Partition, Slice, slice_label, solo_partition
 from repro.core.perfmodel import corun_time, solo_run_time
 from repro.core.problem import Schedule
 from repro.core.profiles import JobProfile, ProfileRepository
@@ -66,6 +81,44 @@ def submission_protocol(repository: ProfileRepository,
         for g, p in zip(inner.groups, inner.partitions):
             sched.add(g, p)
     return sched
+
+
+@dataclass
+class Placement:
+    """One co-run group bound to the (possibly sub-pod) partition it will
+    occupy.  The *which slice units* decision is the simulator's (its
+    occupancy map first-fits the partition's slices onto free ranges);
+    the placement fixes *how wide* each slice is."""
+
+    group: list[JobProfile]
+    partition: Partition
+
+
+def to_placements(sched: Schedule) -> list[Placement]:
+    """Width-fit a planned Schedule into slice-level placements.
+
+    Dedicated (single-share) slices shrink to their job's
+    ``requested_units`` placement hint — never grow, and MPS-shared slices
+    are untouched.  Groups and slot order are preserved, so per-job finish
+    times still come from :func:`~repro.core.perfmodel.corun` on the fitted
+    partition.  Schedules over jobs without width hints pass through
+    unchanged (identical objects), which keeps full-pod dispatch
+    bit-compatible."""
+    out: list[Placement] = []
+    for g, p in zip(sched.groups, sched.partitions):
+        new_slices = list(p.slices)
+        changed = False
+        for pos, (si, s, _beta) in enumerate(p.slots):
+            if len(s.shares) != 1:
+                continue
+            req = g[pos].requested_units
+            if req < s.units:
+                new_slices[si] = Slice(req, s.shares)
+                changed = True
+        part = (Partition(tuple(new_slices), slice_label(tuple(new_slices)))
+                if changed else p)
+        out.append(Placement(list(g), part))
+    return out
 
 
 class RLScheduler:

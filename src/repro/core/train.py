@@ -33,6 +33,39 @@ initialization — the MISO-style periodic re-training entry point
 ``cfg.dqn``'s ε schedule governs the refresh, but the Q-function continues
 from where the previous cycle left off.
 
+**Scan-carry layout.**  One ``_Carry`` NamedTuple threads the entire
+training state through ``lax.scan`` (and is *donated* to the jitted
+segment, so the ~100 MB replay ring is updated in place rather than
+copied):
+
+    env / obs / mask             — live B-batched episode state: EnvState
+                                   pytree, (B, D) observations, (B, A)
+                                   action masks;
+    reset_env / reset_obs /      — per-env episode-start snapshots; when
+    reset_mask                     env ``b`` reports done, ``_bsel``
+                                   tree-selects row ``b`` back to its
+                                   reset copy inside the scan (episode
+                                   auto-reset without leaving the graph);
+    params / target / opt        — online Q-network, target network, and
+                                   optimizer state pytrees, updated by the
+                                   gated double-DQN step;
+    replay                       — ``ReplayState`` or (``per_alpha > 0``)
+                                   ``PrioritizedReplayState``; the static
+                                   choice selects the uniform or PER
+                                   engine at trace time;
+    key                          — PRNG key, split per scan step for
+                                   action noise and replay sampling;
+    env_steps / updates          — () i32 counters driving the ε/β
+                                   schedules and the target-sync cadence;
+    ep_ret                       — (B,) running episode returns, emitted
+                                   (masked by done) as the scan's per-step
+                                   output for history records.
+
+Because every mutable quantity lives in the carry, a segment is a pure
+function ``(carry, n_steps) -> (carry, (dones, returns))`` — the driver
+owns nothing but the Python-side history bookkeeping, and identical
+carries replay identically (the determinism test pins this).
+
 ``train_agent_scalar`` preserves the seed per-step Python loop verbatim —
 it is the semantic reference for the parity test and the baseline for
 ``benchmarks/train_throughput.py``.

@@ -8,22 +8,31 @@ Event model
 -----------
 :class:`~repro.online.simulator.ClusterSimulator` advances a single event
 heap of ``ARRIVE`` / ``TICK`` / ``FREE`` events.  Submissions queue FCFS;
-whenever the pod is idle, the head window (up to W submissions) is handed
-to a :class:`~repro.online.policies.DispatchPolicy` as ``(binary,
-profile)`` pairs.  First-sight binaries run solo while being profiled and
-enter the :class:`~repro.core.profiles.ProfileRepository`; profiled jobs
-are co-scheduled into hierarchically partitioned groups that execute back
-to back, each appending to the slice-occupancy timeline.  Per-job
-wait/turnaround and cluster makespan/throughput/utilization land in a
-:class:`~repro.online.simulator.SimResult`.  Everything is deterministic
-given the trace seed.
+whenever slice units are idle and the dispatched-group queue has drained,
+the head window (up to W submissions) is handed to a
+:class:`~repro.online.policies.DispatchPolicy` as ``(binary, profile)``
+pairs.  First-sight binaries run solo while being profiled and enter the
+:class:`~repro.core.profiles.ProfileRepository`; profiled jobs are
+co-scheduled into hierarchically partitioned groups.  The policy's
+width-fitted :class:`~repro.core.scheduler.Placement`\\ s are first-fitted
+onto disjoint aligned slice-unit ranges, so independent groups run
+**concurrently**; a blocked head reserves its earliest feasible start and
+an EASY-backfill scan lets small later groups jump into idle gaps without
+delaying it.  Each group's FREE event is keyed by its claimed slice
+ranges.  Per-job wait/turnaround, cluster makespan/throughput/utilization,
+and slice-level fragmentation metrics (idle-slice fraction, per-slice
+utilization timeline) land in a
+:class:`~repro.online.simulator.SimResult`; ``mode="blocking"`` recovers
+the PR-3 whole-pod block dispatch bit-compatibly.  Everything is
+deterministic given the trace seed.
 
 Traces ↔ paper workload mix
 ---------------------------
 :mod:`repro.online.traces` generates arrival processes (Poisson, bursty
-MMPP, diurnal, heavy-tailed job scales) whose per-arrival job draw follows
-the paper's §V-A2 queue recipes: ``mix="ci"|"mi"|"us"`` weights the
-dominant class at 50% (the CI/MI/US-dominant queue categories of Table V),
+MMPP, diurnal, heavy-tailed job scales, fragmentation-stressing
+right-sized slice requests) whose per-arrival job draw follows the paper's
+§V-A2 queue recipes: ``mix="ci"|"mi"|"us"`` weights the dominant class at
+50% (the CI/MI/US-dominant queue categories of Table V),
 ``mix="balanced"`` draws classes uniformly.  A trace is therefore the
 streaming analogue of the paper's static queue families.
 
@@ -44,8 +53,8 @@ from repro.online.simulator import (
     Arrival, ClusterSimulator, JobRecord, Segment, SimResult,
 )
 from repro.online.traces import (
-    TRACE_FAMILIES, diurnal_trace, heavy_tailed_trace, mmpp_trace,
-    poisson_trace,
+    TRACE_FAMILIES, diurnal_trace, fragmented_trace, heavy_tailed_trace,
+    mmpp_trace, poisson_trace,
 )
 
 __all__ = [
@@ -53,5 +62,5 @@ __all__ = [
     "JobRecord", "OnlineRetrainer", "PolicyStats", "RLDispatchPolicy",
     "Segment", "SimResult", "StaticPartitionPolicy", "TRACE_FAMILIES",
     "TimeSharingPolicy", "default_retrain_train_config", "diurnal_trace",
-    "heavy_tailed_trace", "mmpp_trace", "poisson_trace",
+    "fragmented_trace", "heavy_tailed_trace", "mmpp_trace", "poisson_trace",
 ]

@@ -33,7 +33,9 @@ from repro.core.partition import enumerate_partitions, solo_partition
 from repro.core.perfmodel import solo_run_time
 from repro.core.problem import Schedule
 from repro.core.profiles import JobProfile, ProfileRepository
-from repro.core.scheduler import RLScheduler, submission_protocol
+from repro.core.scheduler import (
+    Placement, RLScheduler, submission_protocol, to_placements,
+)
 
 
 @dataclass
@@ -74,6 +76,15 @@ class DispatchPolicy:
                                    window=self.plan_window,
                                    on_unprofiled=on_unprofiled,
                                    on_window=on_window)
+
+    def placements(self, submissions: list[tuple[str, JobProfile | None]]) -> list[Placement]:
+        """What the slice-level simulator consumes: the planned schedule
+        width-fitted into :class:`~repro.core.scheduler.Placement`\\ s
+        (dedicated slices shrink to each job's ``requested_units`` hint).
+        One shared implementation — every policy, including the delegated
+        RL protocol, goes through its own :meth:`dispatch` first, so the
+        first-sight profiling cost stays identical across policies."""
+        return to_placements(self.dispatch(submissions))
 
     def plan(self, queue: list[JobProfile]) -> Schedule:
         raise NotImplementedError

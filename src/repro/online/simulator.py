@@ -10,18 +10,43 @@ periodic ticks observe the repository state of the same instant:
 
     ARRIVE — a job submission joins the FCFS pending queue,
     TICK   — a periodic simulated-time hook (the re-training loop's clock),
-    FREE   — the pod finishes its current dispatch block.
+    FREE   — a dispatched group's slice-range claim expires.
 
-Whenever the pod is idle and jobs are pending, the simulator hands the FCFS
-head of the queue (up to ``window`` submissions, as ``(binary, profile)``
-pairs) to the dispatch policy, which returns a §IV-A :class:`Schedule` —
-co-run groups with hierarchical partitions.  Groups execute back to back on
-the pod; per-job completion times come from the phase-simulated
-:func:`~repro.core.perfmodel.corun` (jobs inside a group finish at different
-times, but the pod is released only when the whole block drains, matching
-the batch semantics of the offline formulation where a window's groups run
-sequentially).  Every dispatched group appends a :class:`Segment` to the
-occupancy timeline, so slice utilization over time is reconstructable.
+Slice-level occupancy (``mode="concurrent"``, the default)
+----------------------------------------------------------
+The pod is an occupancy map over its ``N_UNITS`` slice units, not a scalar
+busy flag.  Whenever slice units are idle and the dispatched-group queue is
+empty, the FCFS head of the pending queue (up to ``window`` submissions, as
+``(binary, profile)`` pairs) is handed to the policy, which returns
+:class:`~repro.core.scheduler.Placement`\\ s — co-run groups bound to
+(possibly sub-pod, width-fitted) hierarchical partitions.  Each placement's
+slices are then first-fitted onto disjoint aligned unit ranges
+(:func:`~repro.core.partition.find_offsets`), so independent groups run
+**concurrently** on disjoint slices; its FREE event is keyed by the claimed
+slice ranges and releases exactly those units when the group drains.
+
+When the head group does not fit the current free units, it reserves its
+earliest feasible start (computed by replaying the outstanding claims'
+expiries — no new work is admitted past a blocked head, so the reservation
+is exact) and a **backfill** scan lets later groups of the already-
+dispatched queue start immediately *iff* they fit the idle units now and
+their predicted makespan ends by the head's reserved start — EASY-style
+backfill, so jumping the queue can never delay the head.
+
+``mode="blocking"`` recovers the PR-3 whole-pod semantics bit-compatibly:
+one window's groups execute back to back on the full pod and the pod is
+released only when the whole block drains.  On traces without sub-pod
+width hints the two modes produce identical results (all placements are
+full-pod, so concurrency never materializes) — the regression tests pin
+this equivalence.
+
+Per-job completion times come from the phase-simulated
+:func:`~repro.core.perfmodel.corun` under the fitted partition.  Every
+dispatched group appends a :class:`Segment` (now carrying its claimed
+slice ranges and a backfill flag) to the occupancy timeline, and
+:class:`SimResult` exposes fragmentation metrics on top of it: per-slice
+busy time, slice-level utilization, and the idle-slice-time fraction —
+packing quality, not just makespan.
 
 The simulator itself draws no randomness: given one trace (see
 :mod:`repro.online.traces`) and one policy, two runs produce identical
@@ -36,8 +61,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.perfmodel import corun
+from repro.core.partition import N_UNITS, find_offsets
+from repro.core.perfmodel import CoRunResult, corun
 from repro.core.profiles import JobProfile
+from repro.core.scheduler import to_placements
 
 _ARRIVE, _TICK, _FREE = 0, 1, 2          # same-time resolution order
 
@@ -49,6 +76,8 @@ class Arrival:
     ``profile`` is the measurement the cluster *would* obtain by profiling
     the job during its first solo run — the policy only sees it through the
     repository protocol (first sight: solo + insert; afterwards: lookup).
+    A ``meta["units"]`` hint on the profile (set by right-sized traces) is
+    the slice width the submission requests from the placement layer.
     """
 
     t: float
@@ -58,21 +87,34 @@ class Arrival:
 
 @dataclass
 class Segment:
-    """One group's occupancy of the pod: [t0, t1) under ``partition``."""
+    """One group's occupancy: [t0, t1) under ``partition``.
+
+    ``slices`` holds the claimed ``(start, width)`` unit ranges (empty only
+    for legacy construction); ``backfilled`` marks groups that jumped a
+    blocked head into idle units via the EASY-backfill scan."""
 
     t0: float
     t1: float
     jobs: int
     partition: str
+    slices: tuple[tuple[int, int], ...] = ()
+    backfilled: bool = False
+
+    @property
+    def units(self) -> int:
+        return sum(w for _, w in self.slices)
 
 
 @dataclass
 class JobRecord:
     """Per-submission lifecycle: arrival -> dispatch -> finish.
 
-    ``dispatch`` is the instant the job's *group* starts executing (groups
-    of one dispatch block run sequentially), so ``wait`` covers all
-    queueing delay including in-block queueing behind earlier groups."""
+    ``dispatch`` is the instant the job's *group* starts executing (a
+    window's groups can start at different times under slice-level
+    dispatch), so ``wait`` covers all queueing delay including queueing
+    behind earlier groups of the same window.  ``units`` is the slice width
+    the job actually ran on; ``backfilled`` marks jobs whose group was
+    started by the backfill scan."""
 
     binary: str
     name: str
@@ -82,6 +124,8 @@ class JobRecord:
     finish: float = math.nan
     group_size: int = 0
     partition: str = ""
+    units: int = N_UNITS
+    backfilled: bool = False
 
     @property
     def wait(self) -> float:
@@ -99,10 +143,13 @@ class SimResult:
     policy: str
     window: int
     jobs: list[JobRecord]
+    mode: str = "concurrent"
     timeline: list[Segment] = field(default_factory=list)
     busy_time: float = 0.0
     dispatches: int = 0
     ticks: int = 0
+    backfills: int = 0
+    slice_busy_s: list[float] = field(default_factory=lambda: [0.0] * N_UNITS)
 
     @property
     def makespan(self) -> float:
@@ -125,8 +172,47 @@ class SimResult:
 
     @property
     def utilization(self) -> float:
+        """Fraction of the makespan during which *any* slice was busy."""
         m = self.makespan
         return self.busy_time / m if m > 0 else 0.0
+
+    # ---- fragmentation metrics (slice-level packing quality) --------------
+
+    @property
+    def unit_busy_s(self) -> float:
+        """Total claimed unit-seconds (Σ per-slice busy time)."""
+        return float(sum(self.slice_busy_s))
+
+    @property
+    def slice_utilization(self) -> float:
+        """Claimed unit-seconds / (N_UNITS x makespan): how much of the
+        pod's slice real estate the schedule actually occupied."""
+        m = self.makespan
+        return self.unit_busy_s / (N_UNITS * m) if m > 0 else 0.0
+
+    @property
+    def idle_slice_frac(self) -> float:
+        """Fraction of slice-time left idle over the makespan — the
+        fragmentation cost slice-level dispatch + backfill drives down."""
+        m = self.makespan
+        return 1.0 - self.slice_utilization if m > 0 else 0.0
+
+    @property
+    def per_slice_utilization(self) -> list[float]:
+        m = self.makespan
+        return [b / m if m > 0 else 0.0 for b in self.slice_busy_s]
+
+    def slice_timeline(self) -> list[list[tuple[float, float]]]:
+        """Per-unit busy intervals reconstructed from the segment timeline
+        (claims release at group drain, so segment spans *are* the claims)."""
+        out: list[list[tuple[float, float]]] = [[] for _ in range(N_UNITS)]
+        for seg in self.timeline:
+            for start, width in seg.slices:
+                for u in range(start, start + width):
+                    out[u].append((seg.t0, seg.t1))
+        for iv in out:
+            iv.sort()
+        return out
 
     @property
     def mean_wait(self) -> float:
@@ -145,11 +231,15 @@ class SimResult:
         """JSON-able digest for BENCH_online.json."""
         return {
             "policy": self.policy,
+            "mode": self.mode,
             "jobs": len(self.jobs),
             "makespan_s": self.makespan,
             "busy_s": self.busy_time,
             "throughput": self.throughput,
             "utilization": self.utilization,
+            "slice_utilization": self.slice_utilization,
+            "idle_slice_frac": self.idle_slice_frac,
+            "backfills": self.backfills,
             "mean_wait_s": self.mean_wait,
             "mean_turnaround_s": self.mean_turnaround,
             "p95_turnaround_s": self.p95_turnaround,
@@ -160,8 +250,26 @@ class SimResult:
         }
 
 
+@dataclass
+class _Run:
+    """A dispatched group awaiting (or holding) slice units."""
+
+    group: list[JobProfile]
+    partition: object                    # Partition (possibly width-fitted)
+    recs: list[JobRecord]
+    pred: CoRunResult                    # exact times under `partition`
+    window_id: int = 0                   # dispatch window this group came from
+
+
 class ClusterSimulator:
     """Event-driven pod: FCFS admission windows dispatched by a policy.
+
+    ``mode="concurrent"`` (default) places each dispatched group onto
+    disjoint slice-unit ranges so independent groups run side by side;
+    ``backfill=True`` additionally lets later groups of the dispatched
+    queue jump a blocked head into idle units when their predicted finish
+    cannot delay the head's reserved start.  ``mode="blocking"`` is the
+    PR-3 whole-pod block dispatch, kept bit-compatible for regression.
 
     ``on_tick(now, sim)`` fires every ``tick_interval_s`` of simulated time
     while work remains — the MISO-style re-training loop hangs off it (see
@@ -170,18 +278,30 @@ class ClusterSimulator:
     """
 
     def __init__(self, policy, window: int = 8,
-                 tick_interval_s: float | None = None, on_tick=None):
+                 tick_interval_s: float | None = None, on_tick=None,
+                 mode: str = "concurrent", backfill: bool = True):
         assert window >= 1
+        assert mode in ("concurrent", "blocking"), mode
         self.policy = policy
         self.window = window
         self.tick_interval_s = tick_interval_s
         self.on_tick = on_tick
+        self.mode = mode
+        self.backfill = backfill
         self.pending: deque = deque()
-        self.busy = False
+        self.ready: deque[_Run] = deque()
+        self.busy = False                        # blocking-mode pod flag
+        self._free = [True] * N_UNITS            # concurrent-mode unit map
+        self._claims: dict[int, tuple[tuple[tuple[int, int], ...], float]] = {}
+        self._cid = 0
+        self._n_busy_units = 0
+        self._busy_t0 = 0.0
+
+    # ------------------------------------------------------------------ run
 
     def run(self, trace: list[Arrival]) -> SimResult:
         res = SimResult(policy=getattr(self.policy, "name", "policy"),
-                        window=self.window, jobs=[])
+                        window=self.window, jobs=[], mode=self.mode)
         heap: list[tuple[float, int, int, object]] = []
         seq = 0
         # heap/pending carry the sorted-trace *index*, not the Arrival:
@@ -192,31 +312,40 @@ class ClusterSimulator:
                              arrival=a.t, solo_time=a.profile.solo_time())
                    for a in order]
         res.jobs = list(records)
+
+        def push(t, kind, payload):
+            nonlocal seq
+            heapq.heappush(heap, (t, kind, seq, payload))
+            seq += 1
+
         for i, a in enumerate(order):
-            heapq.heappush(heap, (a.t, _ARRIVE, seq, i))
-            seq += 1
+            push(a.t, _ARRIVE, i)
         if self.tick_interval_s and trace:
-            heapq.heappush(heap, (self.tick_interval_s, _TICK, seq, None))
-            seq += 1
+            push(self.tick_interval_s, _TICK, None)
 
         self.pending.clear()
+        self.ready.clear()
         self.busy = False
+        self._free = [True] * N_UNITS
+        self._claims.clear()
+        self._n_busy_units = 0
 
         def handle(now, kind, payload):
-            nonlocal seq
             if kind == _ARRIVE:
                 self.pending.append(payload)
             elif kind == _FREE:
-                self.busy = False
+                if self.mode == "blocking":
+                    self.busy = False
+                else:
+                    self._release(now, payload, res)
             else:  # _TICK — only while work remains (no retrain on a drained
                 # cluster), and stop rescheduling once the trace is served
-                if heap or self.pending or self.busy:
+                if (heap or self.pending or self.ready or self.busy
+                        or self._claims):
                     if self.on_tick is not None:
                         self.on_tick(now, self)
                     res.ticks += 1
-                    heapq.heappush(heap, (now + self.tick_interval_s, _TICK,
-                                          seq, None))
-                    seq += 1
+                    push(now + self.tick_interval_s, _TICK, None)
 
         while heap:
             now, kind, _, payload = heapq.heappop(heap)
@@ -227,37 +356,175 @@ class ClusterSimulator:
             while heap and heap[0][0] == now:
                 _, kind2, _, payload2 = heapq.heappop(heap)
                 handle(now, kind2, payload2)
-            if self.busy or not self.pending:
-                continue
-            # dispatch the FCFS head window through the policy
-            head = [self.pending.popleft()
-                    for _ in range(min(self.window, len(self.pending)))]
-            sched = self.policy.dispatch(
-                [(order[i].binary, order[i].profile) for i in head])
-            by_name: dict[str, deque] = defaultdict(deque)
-            for i in head:
-                by_name[order[i].profile.name].append(records[i])
-            t0 = now
-            for g, p in zip(sched.groups, sched.partitions):
-                block = corun(g, p)
-                for job, ft in zip(g, block.finish_times):
-                    rec = by_name[job.name].popleft()
-                    # dispatch = the group's actual start, not the block
-                    # hand-off: jobs queued behind earlier groups of the same
-                    # block are still *waiting*, and a policy that forms many
-                    # sequential groups must not hide that queueing delay
-                    rec.dispatch = t0
-                    rec.finish = t0 + ft
-                    rec.group_size = len(g)
-                    rec.partition = p.label
-                res.timeline.append(Segment(t0, t0 + block.makespan, len(g),
-                                            p.label))
-                t0 += block.makespan
-            leftover = [n for n, d in by_name.items() if d]
-            assert not leftover, f"policy dropped submissions: {leftover}"
-            res.busy_time += t0 - now
-            res.dispatches += 1
-            self.busy = True
-            heapq.heappush(heap, (t0, _FREE, seq, None))
-            seq += 1
+            if self.mode == "blocking":
+                self._dispatch_blocking(now, res, order, records, push)
+            else:
+                self._service(now, res, order, records, push)
+        assert not self._claims and not self.ready, "undrained claims/groups"
         return res
+
+    # ------------------------------------------------- blocking (PR-3) mode
+
+    def _dispatch_blocking(self, now, res, order, records, push) -> None:
+        """Whole-pod block dispatch — the PR-3 event model, verbatim."""
+        if self.busy or not self.pending:
+            return
+        head = [self.pending.popleft()
+                for _ in range(min(self.window, len(self.pending)))]
+        sched = self.policy.dispatch(
+            [(order[i].binary, order[i].profile) for i in head])
+        by_name: dict[str, deque] = defaultdict(deque)
+        for i in head:
+            by_name[order[i].profile.name].append(records[i])
+        t0 = now
+        for g, p in zip(sched.groups, sched.partitions):
+            block = corun(g, p)
+            for job, ft in zip(g, block.finish_times):
+                rec = by_name[job.name].popleft()
+                # dispatch = the group's actual start, not the block
+                # hand-off: jobs queued behind earlier groups of the same
+                # block are still *waiting*, and a policy that forms many
+                # sequential groups must not hide that queueing delay
+                rec.dispatch = t0
+                rec.finish = t0 + ft
+                rec.group_size = len(g)
+                rec.partition = p.label
+            res.timeline.append(Segment(t0, t0 + block.makespan, len(g),
+                                        p.label, slices=((0, N_UNITS),)))
+            for u in range(N_UNITS):
+                res.slice_busy_s[u] += block.makespan
+            t0 += block.makespan
+        leftover = [n for n, d in by_name.items() if d]
+        assert not leftover, f"policy dropped submissions: {leftover}"
+        res.busy_time += t0 - now
+        res.dispatches += 1
+        self.busy = True
+        push(t0, _FREE, None)
+
+    # --------------------------------------------- concurrent (slice) mode
+
+    def _service(self, now, res, order, records, push) -> None:
+        """Place dispatched groups onto free slice units.
+
+        Non-backfilled groups start strictly in dispatch order; a new
+        window is formed once the dispatched queue has drained (FCFS across
+        windows).  With backfill enabled, a *blocked* head additionally
+        admits one lookahead window while idle units exist, so small later
+        arrivals become backfill candidates — on full-pod-only traces no
+        units are ever free while the head is blocked, which is what keeps
+        this mode bit-compatible with blocking dispatch there."""
+        while True:
+            progress = False
+            # FCFS: place the head while it fits
+            while self.ready:
+                starts = find_offsets(self.ready[0].partition, self._free)
+                if starts is None:
+                    break
+                self._place(now, self.ready.popleft(), starts, res, push)
+                progress = True
+            if self.ready:
+                if self.backfill:
+                    # bounded EASY lookahead: at most one window past the
+                    # blocked head's own window may be admitted early
+                    if (self.pending and any(self._free)
+                            and self.ready[-1].window_id == self.ready[0].window_id):
+                        self._form_window(now, res, order, records)
+                        progress = True
+                    if len(self.ready) > 1:
+                        progress |= self._backfill_scan(now, res, push)
+            elif self.pending and any(self._free):
+                self._form_window(now, res, order, records)
+                progress = True
+            if not progress:
+                return
+
+    def _form_window(self, now, res, order, records) -> None:
+        head = [self.pending.popleft()
+                for _ in range(min(self.window, len(self.pending)))]
+        subs = [(order[i].binary, order[i].profile) for i in head]
+        fn = getattr(self.policy, "placements", None)
+        placements = (fn(subs) if fn is not None
+                      else to_placements(self.policy.dispatch(subs)))
+        by_name: dict[str, deque] = defaultdict(deque)
+        for i in head:
+            by_name[order[i].profile.name].append(records[i])
+        for pl in placements:
+            recs = [by_name[j.name].popleft() for j in pl.group]
+            self.ready.append(_Run(pl.group, pl.partition, recs,
+                                   corun(pl.group, pl.partition),
+                                   window_id=res.dispatches))
+        leftover = [n for n, d in by_name.items() if d]
+        assert not leftover, f"policy dropped submissions: {leftover}"
+        res.dispatches += 1
+
+    def _backfill_scan(self, now, res, push) -> bool:
+        """EASY backfill: later dispatched groups may start now iff they fit
+        the idle units and predictably finish by the blocked head's reserved
+        start.  Backfilled claims give their units back before the head's
+        reservation, so the head can never be delayed."""
+        t_res = self._earliest_fit(self.ready[0].partition)
+        placed = False
+        for run in list(self.ready)[1:]:
+            starts = find_offsets(run.partition, self._free)
+            if starts is None:
+                continue
+            if now + run.pred.makespan <= t_res + 1e-9:
+                self.ready.remove(run)
+                self._place(now, run, starts, res, push, backfilled=True)
+                res.backfills += 1
+                placed = True
+        return placed
+
+    def _earliest_fit(self, partition) -> float:
+        """Earliest time `partition` fits, replaying outstanding claim
+        expiries (exact: no new non-backfill work is admitted past a
+        blocked head, and backfill claims expire before this time)."""
+        expiries = sorted({t1 for _, t1 in self._claims.values()})
+        free = list(self._free)
+        for t in expiries:
+            for ranges, t1 in self._claims.values():
+                if t1 <= t:
+                    for start, width in ranges:
+                        free[start:start + width] = [True] * width
+            if find_offsets(partition, free) is not None:
+                return t
+        return expiries[-1] if expiries else 0.0
+
+    def _place(self, now, run: _Run, starts, res, push,
+               backfilled: bool = False) -> None:
+        ranges = tuple((st, s.units)
+                       for st, s in zip(starts, run.partition.slices))
+        width = 0
+        for st, w in ranges:
+            self._free[st:st + w] = [False] * w
+            width += w
+        if self._n_busy_units == 0:
+            self._busy_t0 = now
+        self._n_busy_units += width
+        t1 = now + run.pred.makespan
+        for rec, ft, (si, s, _b) in zip(run.recs, run.pred.finish_times,
+                                        run.partition.slots):
+            rec.dispatch = now
+            rec.finish = now + ft
+            rec.group_size = len(run.group)
+            rec.partition = run.partition.label
+            rec.units = s.units
+            rec.backfilled = backfilled
+        res.timeline.append(Segment(now, t1, len(run.group),
+                                    run.partition.label, slices=ranges,
+                                    backfilled=backfilled))
+        for st, w in ranges:
+            for u in range(st, st + w):
+                res.slice_busy_s[u] += run.pred.makespan
+        cid = self._cid
+        self._cid += 1
+        self._claims[cid] = (ranges, t1)
+        push(t1, _FREE, cid)
+
+    def _release(self, now, cid, res) -> None:
+        ranges, _t1 = self._claims.pop(cid)
+        for st, w in ranges:
+            self._free[st:st + w] = [True] * w
+            self._n_busy_units -= w
+        if self._n_busy_units == 0:
+            res.busy_time += now - self._busy_t0

@@ -9,7 +9,7 @@ directly onto the Table V workload categories:
     "ci"        — 50% CI, 25% MI, 25% US        (CI-dominant queues)
     "mi" / "us" — analogous dominant mixes
 
-Four arrival processes cover the multi-tenant dynamics MISO-style systems
+Five arrival processes cover the multi-tenant dynamics MISO-style systems
 are evaluated under:
 
     poisson_trace      — memoryless submissions at a constant rate,
@@ -20,7 +20,15 @@ are evaluated under:
                          Pareto-distributed: each arrival's step count is
                          multiplied by a power-of-two factor drawn from a
                          heavy tail, creating the elephant-and-mice duration
-                         mix real clusters see.
+                         mix real clusters see,
+    fragmented_trace   — Poisson arrivals carrying *right-sized slice
+                         requests* (``meta["units"]``): each submission asks
+                         for the narrowest MIG slice whose solo step time
+                         stays within a per-arrival tolerance of the
+                         full-pod time, mixing 1-slice mice with 4-slice
+                         and full-pod jobs — the fragmentation-stressing
+                         family slice-level dispatch and backfill are
+                         scored on.
 
 Rates are expressed as a ``load`` factor relative to the mean solo duration
 of the job pool: ``load=1.0`` submits work exactly as fast as pure time
@@ -163,9 +171,52 @@ def heavy_tailed_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
     return _assemble(times, scaled)
 
 
+def fragmented_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
+                     mix: str = "balanced", seed: int = 0,
+                     tols: tuple[float, ...] = (1.05, 1.35, 1.65)) -> list[Arrival]:
+    """Poisson arrivals with MISO-style right-sized slice requests.
+
+    Each arrival draws a tolerance from ``tols`` and requests the narrowest
+    slice width whose solo step time stays within that tolerance of the
+    full-pod step time (:meth:`JobProfile.right_size`): US jobs right-size
+    to 1 unit at any tolerance (short collective rings make them *faster*
+    on small slices), MI decode lands on 2-4 units at looser tolerances,
+    and scalable CI training stays full-pod.  Width-``w`` variants get
+    distinct names/binaries (``name@u{w}``) and carry ``meta["units"] = w``
+    — the placement hint the slice-level dispatch layer honors — so the
+    repository treats each right-sized shape as its own application.
+
+    The resulting mix of 1-slice mice among 4-slice and full-pod jobs is
+    exactly the fragmentation stress of the MIG-placement literature: big
+    jobs wait for wide aligned ranges while mice trickle into (or, without
+    backfill, pile up behind) the gaps.  Arrival times reuse the base
+    pool's rate, so nominal load stays comparable across trace families.
+    """
+    from repro.core.partition import N_UNITS
+
+    rng = np.random.default_rng(seed)
+    picks = _draw_jobs(jobs, n, mix, rng)
+    tol_idx = rng.integers(0, len(tols), size=n)
+    variants: dict[str, JobProfile] = {}
+    sized = []
+    for j, ti in zip(picks, tol_idx):
+        w = j.right_size(tols[ti])
+        if w >= N_UNITS:
+            sized.append(j)
+            continue
+        key = f"{j.name}@u{w}"
+        if key not in variants:
+            variants[key] = dataclasses.replace(
+                j, name=key, meta={**j.meta, "units": w})
+        sized.append(variants[key])
+    times = np.cumsum(rng.exponential(1.0 / _rate(jobs, load), size=n))
+    return _assemble(times, sized)
+
+
 TRACE_FAMILIES = {
     "poisson": poisson_trace,
     "mmpp": mmpp_trace,
     "diurnal": diurnal_trace,
     "heavy_tailed": heavy_tailed_trace,
+    "fragmented": fragmented_trace,
 }
