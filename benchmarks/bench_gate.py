@@ -10,6 +10,11 @@ ratio regressions):
     above ``RL_TS_FLOOR`` x time sharing;
   * concurrent dispatch never records below blocking-window dispatch, and
     strictly beats it on the fragmented family;
+  * the arrival-aware agent (profiles + live cluster state,
+    ``docs/observation.md``) records at or above ``ARRIVAL_FLOOR`` x the
+    profile-only agent on the fragmented family — the context features
+    must at least recover the packing behavior the dispatch layer supplies
+    by hand, and never regress it;
   * PER's recorded sample-efficiency comparison has not drifted: at the
     1000-episode budget, prioritized replay's mean eval throughput stays
     within ``PER_DRIFT`` of uniform replay's (the matched-update-work
@@ -27,6 +32,7 @@ import sys
 RL_TS_FLOOR = 0.97        # committed rl_retrain/time_sharing per family
 CONC_BLK_FLOOR = 0.999    # committed concurrent/blocking per family
 FRAG_MARGIN = 1.02        # fragmented family must strictly win
+ARRIVAL_FLOOR = 1.0       # committed rl_context/rl_profile_only, fragmented
 PER_DRIFT = 0.15          # |prioritized - uniform| / uniform at 1000 ep
 
 
@@ -55,6 +61,15 @@ def gate_online(bench: dict, failures: list[str]) -> None:
     if frag < FRAG_MARGIN:
         failures.append(f"online: fragmented concurrent/blocking = "
                         f"{frag:.3f} < margin {FRAG_MARGIN}")
+    aa = bench.get("arrival_aware") or {}
+    if not aa:
+        failures.append("online: arrival_aware section missing")
+    else:
+        ctx = aa.get("fragmented", {}).get("rl_context_vs_profile_only", 0.0)
+        if ctx < ARRIVAL_FLOOR:
+            failures.append(f"online: arrival-aware rl_context/profile_only "
+                            f"on fragmented = {ctx:.3f} < floor "
+                            f"{ARRIVAL_FLOOR}")
 
 
 def gate_train(bench: dict, failures: list[str]) -> None:

@@ -19,29 +19,52 @@ are bit-compatible there) and strictly above 1.0 on the fragmented family,
 where right-sized jobs pack disjoint slices and small groups backfill idle
 gaps.
 
+The ``arrival_aware`` section is the observation-mode comparison: a
+**context-trained** agent (profiles + live cluster state — busy-unit mask,
+queue ages, pending depth; see ``docs/observation.md``) vs the
+**profile-only** agent vs time sharing, frozen, on every trace family.
+The context agent is warm-started from the profile-only agent through
+``widen_dqn_params`` (identical Q-function at zero context), so the
+comparison isolates what the arrival-aware features add; the fragmented
+family is the headline — the agent should recover dispatch-layer packing
+gains from state alone.  ``benchmarks.bench_gate`` pins the committed
+``rl_context_vs_profile_only`` ratio there.
+
     PYTHONPATH=src python -m benchmarks.online_sim [--fast] \
         [--out BENCH_online.json]
+    PYTHONPATH=src python -m benchmarks.online_sim --section arrival_aware
+
+``--section arrival_aware`` recomputes only that section (re-training both
+agents deterministically from the committed run's settings) and merges it
+into the committed ``BENCH_online.json`` — the incremental path for
+observation-layer changes.
 
 ``--smoke`` is the CI guard (< 60 s): a tiny agent, short traces, RL with
-re-training vs time sharing, plus the dispatch-mode comparison; fails
-(exit 1) if the RL policy's throughput drops below ``--ratio-floor`` x
-time sharing on the Poisson trace, if concurrent dispatch falls below
-blocking on any smoke family, if it fails to *beat* blocking by
-``--frag-margin`` on the fragmented family, or if the committed
-``BENCH_online.json`` is missing required keys.  Smoke mode does not
-overwrite the committed trajectory unless ``--out`` is given.
+re-training vs time sharing, plus the dispatch-mode comparison and a
+context-agent serve check; fails (exit 1) if the RL policy's throughput
+drops below ``--ratio-floor`` x time sharing on the Poisson trace, if
+concurrent dispatch falls below blocking on any smoke family, if it fails
+to *beat* blocking by ``--frag-margin`` on the fragmented family, if the
+context-trained agent cannot serve the fragmented smoke trace, or if the
+committed ``BENCH_online.json`` is missing required keys.  Smoke mode does
+not overwrite the committed trajectory unless ``--out`` is given.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 import time
 
-from benchmarks.bench_gate import CONC_BLK_FLOOR, FRAG_MARGIN
+from benchmarks.bench_gate import ARRIVAL_FLOOR, CONC_BLK_FLOOR, FRAG_MARGIN
 from benchmarks.common import emit, missing_keys
-from repro.core import EnvConfig, TrainConfig, make_zoo, train_agent
+from repro.core import (
+    CoScheduleEnv, DQNAgent, EnvConfig, TrainConfig, make_zoo, train_agent,
+    widen_dqn_params,
+)
 from repro.core.agent import DQNConfig
+from repro.core.env import context_dim
 from repro.online import (
     ClusterSimulator, GreedyPackerPolicy, OnlineRetrainer, RLDispatchPolicy,
     StaticPartitionPolicy, TRACE_FAMILIES, TimeSharingPolicy,
@@ -49,7 +72,19 @@ from repro.online import (
 )
 
 REQUIRED_KEYS = ("window", "n_arrivals", "traces", "rl_vs_time_sharing",
-                 "dispatch_comparison", "note")
+                 "dispatch_comparison", "arrival_aware", "note")
+
+ARRIVAL_NOTE = (
+    "frozen-agent observation-mode comparison on identical traces: "
+    "rl_context observes profiles + live cluster state (busy-unit mask, "
+    "queue ages, pending depth — docs/observation.md) and was warm-started "
+    "from rl_profile_only via widen_dqn_params (identical Q at zero "
+    "context) then trained with per-episode sampled contexts and the "
+    "fit-shaping term; ratios are makespan-derived throughput as "
+    "everywhere else; ctx_seed seeds only the refresh's context draws and "
+    "exploration (the warm start pins the starting Q-function); the "
+    "fragmented family is gated by benchmarks.bench_gate "
+    "(rl_context >= ARRIVAL_FLOOR x rl_profile_only)")
 
 
 def _simulate(policy, trace, window, retrainer=None, mode="concurrent"):
@@ -64,6 +99,59 @@ def _simulate(policy, trace, window, retrainer=None, mode="concurrent"):
     if retrainer is not None:
         out["retrains"] = len(retrainer.history)
         out["retrain_history"] = retrainer.history
+    return out
+
+
+def _context_agent(zoo, env_cfg, base_agent, episodes, seed=0):
+    """Train the arrival-aware agent, warm-started from the profile-only one.
+
+    ``widen_dqn_params`` zero-pads the input layer (params, target, Adam
+    moments), so training starts from the exact profile-only Q-function and
+    only has to learn how the context block modulates it; exploration
+    restarts on a reduced ε schedule sized for adaptation, not rediscovery.
+    """
+    ctx_cfg = dataclasses.replace(env_cfg, obs_context=True)
+    extra = context_dim(ctx_cfg)
+    probe = CoScheduleEnv(ctx_cfg)
+    warm = DQNAgent(probe.state_dim, probe.n_actions, base_agent.cfg, seed=seed)
+    warm.params = widen_dqn_params(base_agent.params, extra)
+    warm.target_params = widen_dqn_params(base_agent.target_params, extra)
+    warm.opt = {"m": widen_dqn_params(base_agent.opt["m"], extra),
+                "v": widen_dqn_params(base_agent.opt["v"], extra),
+                "t": base_agent.opt["t"]}
+    t0 = time.perf_counter()
+    agent, hist = train_agent(
+        zoo, ctx_cfg,
+        TrainConfig(episodes=episodes, eval_every=max(50, episodes // 4),
+                    obs_context=True, seed=seed,
+                    dqn=DQNConfig(eps_start=0.5,
+                                  eps_decay_steps=episodes * 6)),
+        warm_start=warm)
+    emit("arrival_aware_train", (time.perf_counter() - t0) * 1e6 / episodes,
+         f"tp={hist[-1]['eval_throughput']:.3f}")
+    return agent, ctx_cfg
+
+
+def _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent, families,
+                   n, load, seed, window):
+    """Frozen observation-mode comparison, one entry per trace family."""
+    out: dict = {}
+    for i, fam in enumerate(families):
+        trace = TRACE_FAMILIES[fam](zoo, n=n, load=load, seed=seed + i)
+        ts = _simulate(TimeSharingPolicy(), trace, window)
+        rl = _simulate(RLDispatchPolicy(agent, env_cfg), trace, window)
+        rlc = _simulate(RLDispatchPolicy(ctx_agent, ctx_cfg), trace, window)
+        out[fam] = {
+            "rl_profile_only": rl,
+            "rl_context": rlc,
+            "time_sharing_throughput": ts["throughput"],
+            "rl_context_vs_profile_only": rlc["throughput"] / rl["throughput"],
+            "rl_context_vs_time_sharing": rlc["throughput"] / ts["throughput"],
+            "rl_profile_only_vs_time_sharing": rl["throughput"] / ts["throughput"],
+        }
+        emit(f"arrival_aware_{fam}", rlc["sim_wall_s"] * 1e6,
+             f"ctx/prof={out[fam]['rl_context_vs_profile_only']:.3f}")
+    out["note"] = ARRIVAL_NOTE
     return out
 
 
@@ -114,15 +202,62 @@ def main() -> None:
     ap.add_argument("--window", type=int, default=None)
     ap.add_argument("--arrivals", type=int, default=None)
     ap.add_argument("--episodes", type=int, default=None)
+    ap.add_argument("--ctx-episodes", type=int, default=None,
+                    help="training budget for the context agent "
+                         "(default: same as --episodes)")
+    ap.add_argument("--ctx-seed", type=int, default=2,
+                    help="training seed for the context agent's refresh "
+                         "(its own knob: the warm start pins the starting "
+                         "Q-function, so this only seeds context draws and "
+                         "exploration)")
     ap.add_argument("--load", type=float, default=1.25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--retrain-interval-min", type=float, default=None)
+    ap.add_argument("--section", choices=("arrival_aware",), default=None,
+                    help="recompute one section and merge it into the "
+                         "committed --bench-json instead of a full run")
     ap.add_argument("--bench-json", default="BENCH_online.json",
                     help="committed trajectory checked for keys in --smoke")
     ap.add_argument("--out", default=None,
                     help="where to write results (default BENCH_online.json; "
                          "smoke mode writes nothing unless given)")
     args, _ = ap.parse_known_args()
+
+    if args.section == "arrival_aware":
+        with open(args.bench_json) as f:
+            bench = json.load(f)
+        window = args.window or bench["window"]
+        n = args.arrivals or bench["n_arrivals"]
+        load = bench.get("load", args.load)
+        seed = bench.get("seed", args.seed)
+        episodes = args.episodes or bench["train_episodes"]
+        zoo = make_zoo(dryrun_dir=None)
+        env_cfg = EnvConfig(window=window, c_max=4)
+        print("name,us_per_call,derived")
+        # deterministic replication of the committed run's profile-only agent
+        agent, _ = train_agent(
+            zoo, env_cfg,
+            TrainConfig(episodes=episodes, eval_every=max(50, episodes // 4),
+                        seed=seed,
+                        dqn=DQNConfig(eps_decay_steps=episodes * 6)))
+        ctx_agent, ctx_cfg = _context_agent(
+            zoo, env_cfg, agent, args.ctx_episodes or episodes,
+            seed=args.ctx_seed)
+        section = _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent,
+                                 tuple(TRACE_FAMILIES), n, load, seed, window)
+        section["ctx_seed"] = args.ctx_seed
+        bench["arrival_aware"] = section
+        bench.setdefault("acceptance", {})[
+            "arrival_aware_fragmented_ctx_ge_profile_only"] = (
+            section["fragmented"]["rl_context_vs_profile_only"]
+            >= ARRIVAL_FLOOR)
+        out = args.out or args.bench_json
+        with open(out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"merged arrival_aware into {out}: ctx/profile-only " +
+              ", ".join(f"{t}={section[t]['rl_context_vs_profile_only']:.3f}"
+                        for t in TRACE_FAMILIES))
+        return
 
     if args.smoke:
         window = args.window or 6
@@ -143,9 +278,12 @@ def main() -> None:
     env_cfg = EnvConfig(window=window, c_max=4)
     print("name,us_per_call,derived")
     t0 = time.perf_counter()
+    # seed threaded so --section arrival_aware can replicate this agent
+    # bit-exactly from the committed run's recorded seed
     agent, hist = train_agent(
         zoo, env_cfg,
         TrainConfig(episodes=episodes, eval_every=max(50, episodes // 4),
+                    seed=args.seed,
                     dqn=DQNConfig(eps_decay_steps=episodes * 6)))
     emit("online_train_agent", (time.perf_counter() - t0) * 1e6 / episodes,
          f"tp={hist[-1]['eval_throughput']:.3f}")
@@ -162,6 +300,26 @@ def main() -> None:
         traces[fam] = _bench_trace(fam, trace, agent, env_cfg, window,
                                    retrain_cfg, baselines=not args.smoke)
 
+    # observation-mode comparison: context-trained vs profile-only, frozen
+    ctx_episodes = args.ctx_episodes or (100 if args.smoke else episodes)
+    ctx_agent, ctx_cfg = _context_agent(zoo, env_cfg, agent, ctx_episodes,
+                                        seed=args.ctx_seed)
+    arrival = None
+    ctx_smoke_tp = None
+    if args.smoke:
+        # plumbing guard only: the context agent must serve the
+        # fragmentation-stressing trace end to end (committed performance
+        # floors live in benchmarks.bench_gate)
+        i_frag = families.index("fragmented")
+        frag_trace = TRACE_FAMILIES["fragmented"](zoo, n=n, load=args.load,
+                                                  seed=args.seed + i_frag)
+        ctx_smoke_tp = _simulate(RLDispatchPolicy(ctx_agent, ctx_cfg),
+                                 frag_trace, window)["throughput"]
+        emit("arrival_aware_smoke", 0.0, f"ctx_tp={ctx_smoke_tp:.3f}")
+    else:
+        arrival = _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent,
+                                 families, n, args.load, args.seed, window)
+
     rl_vs_ts = {t: traces[t]["rl_retrain_vs_time_sharing"] for t in traces}
     dispatch_cmp = {t: traces[t]["concurrent_vs_blocking"] for t in traces}
     frag = traces.get("fragmented", {})
@@ -176,7 +334,12 @@ def main() -> None:
         "traces": traces,
         "rl_vs_time_sharing": rl_vs_ts,
         "dispatch_comparison": dispatch_cmp,
+        "arrival_aware": arrival,
         "acceptance": {
+            "arrival_aware_fragmented_ctx_ge_profile_only": (
+                arrival is not None
+                and arrival["fragmented"]["rl_context_vs_profile_only"]
+                >= ARRIVAL_FLOOR),
             "poisson_arrivals": traces.get("poisson", {}).get("arrivals", 0),
             "rl_retrain_beats_time_sharing_on_poisson":
                 rl_vs_ts.get("poisson", 0.0) > 1.0,
@@ -219,6 +382,9 @@ def main() -> None:
         if frag_ratio < args.frag_margin:
             failures.append(f"fragmented concurrent/blocking {frag_ratio:.3f} "
                             f"below margin {args.frag_margin:.2f}")
+        if not (ctx_smoke_tp and ctx_smoke_tp > 0):
+            failures.append(f"context agent failed to serve the fragmented "
+                            f"smoke trace (tp={ctx_smoke_tp})")
         missing = missing_keys(args.bench_json, REQUIRED_KEYS)
         if missing:
             failures.append(f"{args.bench_json} missing keys: {missing}")
@@ -231,6 +397,7 @@ def main() -> None:
         print(f"smoke ok: rl_retrain/ts {ratio:.3f} on poisson "
               f"(floor {args.ratio_floor:.2f}), fragmented conc/blk "
               f"{frag_ratio:.3f} (margin {args.frag_margin:.2f}), "
+              f"context agent serves fragmented (tp={ctx_smoke_tp:.3f}), "
               f"{args.bench_json} keys present")
         return
 
@@ -241,7 +408,10 @@ def main() -> None:
           ", ".join(f"{t}={r:.3f}" for t, r in rl_vs_ts.items()) +
           "; conc/blk " +
           ", ".join(f"{t}={r['time_sharing']:.3f}"
-                    for t, r in dispatch_cmp.items()))
+                    for t, r in dispatch_cmp.items()) +
+          "; ctx/prof " +
+          ", ".join(f"{t}={arrival[t]['rl_context_vs_profile_only']:.3f}"
+                    for t in families))
 
 
 if __name__ == "__main__":

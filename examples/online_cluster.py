@@ -13,6 +13,10 @@
 Groups run concurrently on disjoint slice ranges (EASY backfill included);
 pick ``--trace fragmented`` to see right-sized 1-unit mice pack around
 full-pod jobs, or ``--blocking`` for the whole-pod PR-3 dispatch mode.
+``--context`` trains the agent on the arrival-aware observation (profiles
++ busy-unit mask + queue ages + pending depth — docs/observation.md) and
+the simulator then feeds it the real cluster snapshot at every dispatch
+window.
 
     PYTHONPATH=src python examples/online_cluster.py [--trace fragmented]
 """
@@ -37,12 +41,18 @@ def main():
     ap.add_argument("--retrain-interval-min", type=float, default=30.0)
     ap.add_argument("--blocking", action="store_true",
                     help="PR-3 whole-pod block dispatch (no concurrency)")
+    ap.add_argument("--context", action="store_true",
+                    help="arrival-aware observation: train with sampled "
+                         "cluster-state contexts and serve with the "
+                         "simulator's real dispatch snapshots")
     args = ap.parse_args()
     mode = "blocking" if args.blocking else "concurrent"
 
     zoo = make_zoo()
-    env_cfg = EnvConfig(window=args.window, c_max=4)
-    print(f"zoo: {len(zoo)} jobs — offline training ({args.episodes} episodes)")
+    env_cfg = EnvConfig(window=args.window, c_max=4, obs_context=args.context)
+    feats = "profiles + cluster state" if args.context else "profiles only"
+    print(f"zoo: {len(zoo)} jobs — offline training ({args.episodes} episodes, "
+          f"observing {feats})")
     t0 = time.time()
     agent, hist = train_agent(
         zoo, env_cfg,

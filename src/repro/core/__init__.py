@@ -3,8 +3,12 @@ resource partitioning (Level-1 mesh slicing + Level-2 fractional sharing) and
 co-scheduling group selection. See DESIGN.md §2 for the GPU->TPU mapping."""
 from repro.core.agent import DQNAgent, DQNConfig, act_batch, beta_at, epsilon_at
 from repro.core.baselines import POLICIES, oracle, time_sharing
-from repro.core.env import CoScheduleEnv, EnvConfig, EnvState, VecCoScheduleEnv
+from repro.core.env import (
+    CoScheduleEnv, DispatchContext, EnvConfig, EnvState, ObsContext,
+    VecCoScheduleEnv, dispatch_obs_context, zero_context,
+)
 from repro.core.metrics import summarize
+from repro.core.network import widen_dqn_params
 from repro.core.partition import Partition, Slice, enumerate_partitions
 from repro.core.perfmodel import corun, corun_time, solo_run_time
 from repro.core.problem import Schedule, validate_schedule
@@ -21,14 +25,16 @@ from repro.core.train import (
 from repro.core.workloads import make_queue, make_zoo, paper_queues
 
 __all__ = [
-    "CoScheduleEnv", "DQNAgent", "DQNConfig", "EnvConfig", "EnvState",
-    "JobProfile", "POLICIES", "Partition", "PrioritizedReplayBuffer",
-    "PrioritizedReplayState", "ProfileRepository", "RLScheduler",
-    "ReplayBuffer", "ReplayState", "Schedule", "Slice", "TrainConfig",
-    "VecCoScheduleEnv", "act_batch", "analytic_profile", "beta_at", "corun",
-    "corun_time", "enumerate_partitions", "epsilon_at", "heldout_split",
-    "make_queue", "make_zoo", "oracle", "paper_queues", "per_init",
-    "per_push", "per_sample", "per_update", "replay_init", "replay_push",
+    "CoScheduleEnv", "DQNAgent", "DQNConfig", "DispatchContext", "EnvConfig",
+    "EnvState", "JobProfile", "ObsContext", "POLICIES", "Partition",
+    "PrioritizedReplayBuffer", "PrioritizedReplayState", "ProfileRepository",
+    "RLScheduler", "ReplayBuffer", "ReplayState", "Schedule", "Slice",
+    "TrainConfig", "VecCoScheduleEnv", "act_batch", "analytic_profile",
+    "beta_at", "corun", "corun_time", "dispatch_obs_context",
+    "enumerate_partitions", "epsilon_at", "heldout_split", "make_queue",
+    "make_zoo", "oracle", "paper_queues", "per_init", "per_push",
+    "per_sample", "per_update", "replay_init", "replay_push",
     "replay_sample", "solo_run_time", "summarize", "time_sharing",
     "train_agent", "train_agent_scalar", "validate_schedule",
+    "widen_dqn_params", "zero_context",
 ]

@@ -1,13 +1,27 @@
 """RL environment for co-scheduling + hierarchical partitioning (paper §IV-C).
 
 State: W slots x (f profile features + 5 status flags), flattened — exactly
-the paper's input layer ``W x (f+5)``.
+the paper's input layer ``W x (f+5)``.  With ``EnvConfig.obs_context=True``
+an **arrival-aware context block** is appended (see ``docs/observation.md``
+for the full spec): the pod's busy-unit occupancy mask (``N_UNITS``), the
+per-slot queueing age of each window job (``W``), and the normalized depth
+of the pending queue beyond this window (1) — the live cluster state the
+online dispatch layer observes at each window, so the policy can *learn*
+backfill-like behavior instead of inheriting it from the dispatcher.  A
+zeroed context (empty pod, fresh queue) makes the prefix bit-identical to
+the profile-only observation, and ``obs_context=False`` (default) changes
+nothing at all.
 Actions: W *select-job-i into the current group* + N_p *close the group with
 partition p* (the paper's A = W + N_p decomposition; assignment to partition
 slots follows selection order, covering the C! orderings).
 Rewards (paper Table VI):
     on close:  Σ_j r_i(j)  +  r_f = (SoloRunTime/CoRunTime - 1) x 100
     r_i = (SmAllocRatio*ComputeRatio + MemoryAllocRatio*MemoryRatio) * DurationRatio^2
+Under ``obs_context`` a close is additionally shaped by ``-ctx_fit_weight``
+when the chosen partition cannot first-fit the observed free units (the
+precomputed :func:`~repro.core.perfmodel_jax.build_fit_table` gather) —
+the signal that ties the context features to packing-aware decisions; it
+is exactly zero at zero context, preserving regression parity.
 Episode: schedule the whole window; terminal when all W jobs are grouped.
 
 The environment has two implementations:
@@ -25,6 +39,7 @@ The environment has two implementations:
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import NamedTuple
 
@@ -32,11 +47,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition import N_UNITS, Partition, enumerate_partitions
+from repro.core.partition import (
+    N_UNITS, Partition, aligned_offsets, enumerate_partitions, find_offsets,
+)
 from repro.core.perfmodel import corun_time, solo_run_time
 from repro.core.perfmodel_jax import (
-    PartitionTable, QueueArrays, build_partition_table, group_metrics,
-    group_reward, queue_arrays, stack_queues,
+    PartitionTable, QueueArrays, build_fit_table, build_partition_table,
+    group_metrics, group_reward, queue_arrays, stack_queues,
 )
 from repro.core.problem import Schedule
 from repro.core.profiles import FEATURES, JobProfile
@@ -51,6 +68,10 @@ class EnvConfig:
     r_f_scale: float = 100.0             # paper: x100
     r_i_weight: float = 0.2              # r_f carries the true objective
     invalid_penalty: float = -10.0       # masked anyway; safety net
+    obs_context: bool = False            # append the arrival-aware block
+    ctx_fit_weight: float = 10.0         # close-shaping when the partition
+                                         # can't fit the observed free units
+                                         # (active only under obs_context)
 
     def key(self) -> tuple:
         """Hashable identity (EnvConfig is mutable; used for engine caches).
@@ -60,13 +81,116 @@ class EnvConfig:
         return tuple(getattr(self, f.name) for f in dataclasses.fields(self))
 
 
+def context_dim(cfg: EnvConfig) -> int:
+    """Width of the appended context block: busy mask + per-slot ages + depth."""
+    return (N_UNITS + cfg.window + 1) if cfg.obs_context else 0
+
+
+def age_feature(age_s: float) -> float:
+    """Queueing age -> feature: log10 compression on the same 1e6-second
+    scale as the profile features' ``log_duration`` (docs/observation.md)."""
+    return math.log10(1.0 + max(age_s, 0.0)) / 6.0
+
+
+def depth_feature(depth: int, window: int) -> float:
+    """Pending-queue depth -> feature: saturating at 4 windows' worth."""
+    return min(depth / (4.0 * window), 1.0)
+
+
+@dataclass(frozen=True)
+class DispatchContext:
+    """Cluster-state snapshot the online dispatch layer hands the planner.
+
+    Built by :class:`~repro.online.simulator.ClusterSimulator` at every
+    dispatch window and threaded through ``submission_protocol`` down to
+    ``RLScheduler.schedule``; the environment normalizes it into the
+    observation's context block (:func:`dispatch_obs_context`).
+    """
+
+    free_units: tuple[bool, ...]         # (N_UNITS,) True = idle slice unit
+    ages_s: tuple[float, ...]            # per-submission wait so far, seconds
+    queue_depth: int = 0                 # pending submissions beyond this window
+    now_s: float = 0.0                   # simulated dispatch instant
+
+
+class ObsContext(NamedTuple):
+    """Normalized context block appended to the observation (f32 pytree).
+
+    The zero context — empty pod, no queued work, fresh arrivals — is the
+    parity anchor: with ``ObsContext`` all-zero the observation prefix
+    bit-matches the profile-only layout and the fit shaping is exactly 0.
+    ``busy_units`` is therefore stored busy-high (1 = claimed), so "all
+    zeros" means "everything free" rather than the pathological opposite.
+    """
+
+    busy_units: jnp.ndarray              # (N_UNITS,) f32 — 1 = unit claimed
+    ages: jnp.ndarray                    # (W,) f32 — age_feature per slot
+    queue_depth: jnp.ndarray             # () f32 — depth_feature
+
+
+def zero_context(window: int) -> ObsContext:
+    """The neutral (empty-cluster) context — the offline/parity default."""
+    return ObsContext(
+        busy_units=jnp.zeros((N_UNITS,), jnp.float32),
+        ages=jnp.zeros((window,), jnp.float32),
+        queue_depth=jnp.zeros((), jnp.float32),
+    )
+
+
+def dispatch_obs_context(ctx: DispatchContext, window: int) -> ObsContext:
+    """Normalize a simulator snapshot into the observation's context block."""
+    busy = np.asarray([0.0 if f else 1.0 for f in ctx.free_units], np.float32)
+    assert busy.shape == (N_UNITS,), ctx.free_units
+    ages = np.zeros((window,), np.float32)
+    for i, a in enumerate(ctx.ages_s[:window]):
+        ages[i] = age_feature(a)
+    return ObsContext(
+        busy_units=jnp.asarray(busy), ages=jnp.asarray(ages),
+        queue_depth=jnp.float32(depth_feature(ctx.queue_depth, window)),
+    )
+
+
+_N_CTX_MASKS = 64
+
+
+def _context_mask_table(n_masks: int = _N_CTX_MASKS, seed: int = 0) -> jnp.ndarray:
+    """(K, N_UNITS) f32 — plausible busy masks for training-time sampling.
+
+    Each row is a union of buddy-aligned block claims (the only shapes the
+    slice-level dispatcher ever produces) at a uniformly drawn fill target,
+    so offline training sees the occupancy distribution serve time will.
+    Row 0 is the all-free pod, anchoring the zero-context regime in the
+    training data.  Fixed seed: the table is part of the engine's
+    deterministic identity.
+    """
+    rng = np.random.default_rng(seed)
+    out = np.zeros((n_masks, N_UNITS), np.float32)
+    for i in range(1, n_masks):
+        target = rng.uniform()
+        busy = np.zeros(N_UNITS, bool)
+        for _ in range(16):
+            if busy.mean() >= target:
+                break
+            w = int(rng.choice((1, 2, 4, 8), p=(0.4, 0.3, 0.2, 0.1)))
+            off = int(rng.choice(aligned_offsets(w)))
+            if not busy[off:off + w].any():
+                busy[off:off + w] = True
+        out[i] = busy
+    return jnp.asarray(out)
+
+
 class EnvState(NamedTuple):
-    """Immutable episode state; ``queue`` is constant through the episode."""
+    """Immutable episode state; ``queue`` is constant through the episode.
+
+    ``ctx`` is the arrival-aware context the episode was reset with; it is
+    carried (and tree-mapped) even when ``obs_context=False``, where it is
+    all-zero and never read — one pytree shape for both modes."""
 
     queue: QueueArrays                   # per-queue precomputed job arrays
     scheduled: jnp.ndarray               # (W,) bool
     group_idx: jnp.ndarray               # (c_max,) i32, selection order, -1 pad
     group_size: jnp.ndarray              # () i32
+    ctx: ObsContext                      # arrival-aware context block
 
 
 class VecCoScheduleEnv:
@@ -84,12 +208,24 @@ class VecCoScheduleEnv:
         self.table: PartitionTable = build_partition_table(
             self.partitions, self.cfg.c_max)
         self.n_features = len(FEATURES)
-        self.state_dim = self.cfg.window * (self.n_features + N_FLAGS)
+        self.context_dim = context_dim(self.cfg)
+        self.state_dim = (self.cfg.window * (self.n_features + N_FLAGS)
+                          + self.context_dim)
         self.n_actions = self.cfg.window + len(self.partitions)
-        self.reset = jax.jit(self._reset)
+        if self.cfg.obs_context:
+            # partition-vs-busy-mask fit table (close shaping) + the sampled
+            # occupancy distribution offline training draws contexts from
+            self._fit_table = build_fit_table(self.partitions)
+            self._ctx_masks = _context_mask_table()
+            self._pow2 = jnp.asarray(2 ** np.arange(N_UNITS), jnp.int32)
+        self._obs_b = jax.vmap(self._obs)
+        self.reset = jax.jit(self._reset_zero)
+        self.reset_ctx = jax.jit(self._reset)
         self.step = jax.jit(self._step)
-        self.reset_batch = jax.jit(jax.vmap(self._reset))
+        self.reset_batch = jax.jit(jax.vmap(self._reset_zero))
+        self.reset_batch_ctx = jax.jit(jax.vmap(self._reset))
         self.step_batch = jax.jit(jax.vmap(self._step))
+        self.obs_batch = jax.jit(self._obs_b)
         self.close_metrics_batch = jax.jit(jax.vmap(self._close_metrics))
 
     # ----------------------------------------------------------- queue prep
@@ -100,14 +236,50 @@ class VecCoScheduleEnv:
         return stack_queues([self.queue_arrays(q) for q in queues])
 
     # ------------------------------------------------------- pure functions
-    def _reset(self, qa: QueueArrays) -> tuple[EnvState, jnp.ndarray, jnp.ndarray]:
+    def _reset(self, qa: QueueArrays,
+               ctx: ObsContext) -> tuple[EnvState, jnp.ndarray, jnp.ndarray]:
         state = EnvState(
             queue=qa,
             scheduled=jnp.zeros((self.cfg.window,), bool),
             group_idx=jnp.full((self.cfg.c_max,), -1, jnp.int32),
             group_size=jnp.int32(0),
+            ctx=ctx,
         )
         return state, self._obs(state), self._mask(state)
+
+    def _reset_zero(self, qa: QueueArrays):
+        """Reset with the neutral zero context — the profile-only default."""
+        return self._reset(qa, zero_context(self.cfg.window))
+
+    def sample_context(self, key: jax.Array, mean_d: jnp.ndarray,
+                       valid: jnp.ndarray) -> ObsContext:
+        """Batched training-time context draw (requires ``obs_context``).
+
+        ``mean_d`` (B,) is each queue's mean solo duration — the natural
+        scale for queueing-age draws — and ``valid`` (B, W) masks padding
+        slots to zero age.  Busy masks come from the precomputed aligned-
+        claim table, ages from an exponential wait model, and queue depth
+        from an exponential with mean one window — mirrors of the
+        normalizations in :func:`dispatch_obs_context` (the jnp forms of
+        :func:`age_feature` / :func:`depth_feature`), so offline training
+        and online serving read the same feature distributions.  Pure and
+        trace-friendly: the scanned engine resamples at episode auto-reset.
+        """
+        B, _ = valid.shape
+        k_m, k_a, k_d = jax.random.split(key, 3)
+        idx = jax.random.randint(k_m, (B,), 0, self._ctx_masks.shape[0])
+        # dtype pinned: under JAX_ENABLE_X64 the default draw would be f64
+        # and silently promote the whole observation out of f32
+        raw = (jax.random.exponential(k_a, valid.shape, dtype=jnp.float32)
+               * mean_d[:, None])
+        return ObsContext(
+            busy_units=self._ctx_masks[idx],
+            ages=jnp.where(valid, jnp.log10(1.0 + raw) / 6.0,
+                           jnp.float32(0.0)),
+            queue_depth=jnp.minimum(
+                jax.random.exponential(k_d, (B,), dtype=jnp.float32) / 4.0,
+                1.0),
+        )
 
     def _member(self, state: EnvState) -> jnp.ndarray:
         """(W,) bool — job i currently selected into the open group."""
@@ -126,7 +298,11 @@ class VecCoScheduleEnv:
             (~valid).astype(jnp.float32),
             jnp.where(valid, progress, 0.0),
         ], axis=1)
-        return jnp.concatenate([state.queue.features, flags], axis=1).reshape(-1)
+        flat = jnp.concatenate([state.queue.features, flags], axis=1).reshape(-1)
+        if not self.cfg.obs_context:
+            return flat
+        return jnp.concatenate([flat, state.ctx.busy_units, state.ctx.ages,
+                                state.ctx.queue_depth[None]])
 
     def _mask(self, state: EnvState) -> jnp.ndarray:
         member = self._member(state)
@@ -156,6 +332,16 @@ class VecCoScheduleEnv:
         r_close = group_reward(self.table, state.queue, state.group_idx,
                                state.group_size, p_idx,
                                self.cfg.r_i_weight, self.cfg.r_f_scale)
+        if self.cfg.obs_context and self.cfg.ctx_fit_weight > 0:
+            # arrival-aware shaping: closing onto a partition that cannot
+            # first-fit the observed free units costs ctx_fit_weight — the
+            # learned analogue of "don't plan a placement that must block".
+            # At zero context every partition fits, so this subtracts an
+            # exact 0.0 and the profile-only rewards are bit-preserved.
+            m_idx = jnp.sum(jnp.where(state.ctx.busy_units > 0.5,
+                                      self._pow2, 0), dtype=jnp.int32)
+            r_close = r_close - self.cfg.ctx_fit_weight * (
+                1.0 - self._fit_table[p_idx, m_idx])
         close_state = state._replace(
             scheduled=state.scheduled | self._member(state),
             group_idx=jnp.full((self.cfg.c_max,), -1, jnp.int32),
@@ -205,14 +391,24 @@ class CoScheduleEnv:
         self.cfg = cfg or EnvConfig()
         self.partitions: list[Partition] = enumerate_partitions(self.cfg.c_max)
         self.n_features = len(FEATURES)
-        self.state_dim = self.cfg.window * (self.n_features + N_FLAGS)
+        self.context_dim = context_dim(self.cfg)
+        self.state_dim = (self.cfg.window * (self.n_features + N_FLAGS)
+                          + self.context_dim)
         self.n_actions = self.cfg.window + len(self.partitions)
         self._queue: list[JobProfile] = []
+        self._ctx: DispatchContext | None = None
 
     # ------------------------------------------------------------------ API
-    def reset(self, queue: list[JobProfile]) -> tuple[np.ndarray, np.ndarray]:
+    def reset(self, queue: list[JobProfile],
+              context: DispatchContext | None = None) -> tuple[np.ndarray, np.ndarray]:
+        """``context`` is the dispatch-time cluster snapshot (ignored unless
+        ``cfg.obs_context``); ``None`` is the neutral zero context."""
         assert len(queue) <= self.cfg.window
+        if context is not None and self.cfg.obs_context:
+            assert len(context.ages_s) == len(queue), \
+                (len(context.ages_s), len(queue))
         self._queue = list(queue)
+        self._ctx = context
         self._scheduled = [False] * len(queue)
         self._in_group: list[int] = []           # selection-ordered indices
         self.schedule = Schedule()
@@ -266,7 +462,18 @@ class CoScheduleEnv:
             out[i, self.n_features + 1] = float(i in self._in_group)
             out[i, self.n_features + 2] = float(self._scheduled[i])
             out[i, self.n_features + 4] = progress
-        return out.reshape(-1)
+        flat = out.reshape(-1)
+        if not self.cfg.obs_context:
+            return flat
+        if self._ctx is None:
+            return np.concatenate([flat, np.zeros((self.context_dim,),
+                                                  np.float32)])
+        # one normalization implementation: the same conversion the
+        # vectorized serve path uses (busy, ages, depth — in that order)
+        oc = dispatch_obs_context(self._ctx, W)
+        return np.concatenate([flat, np.asarray(oc.busy_units),
+                               np.asarray(oc.ages),
+                               np.asarray(oc.queue_depth)[None]])
 
     # ------------------------------------------------------------- rewards
     def _close_reward(self, group: list[JobProfile], partition: Partition) -> float:
@@ -278,7 +485,14 @@ class CoScheduleEnv:
         ct = corun_time(group, partition)
         st = solo_run_time(group)
         rf = (st / ct - 1.0) * self.cfg.r_f_scale if ct > 0 else 0.0
-        return self.cfg.r_i_weight * ri + rf
+        reward = self.cfg.r_i_weight * ri + rf
+        if (self.cfg.obs_context and self.cfg.ctx_fit_weight > 0
+                and self._ctx is not None
+                and find_offsets(partition, list(self._ctx.free_units)) is None):
+            # mirror of the functional env's fit shaping (exact: same
+            # first-fit predicate the fit table was built from)
+            reward -= self.cfg.ctx_fit_weight
+        return reward
 
     def _window_means(self) -> dict:
         jobs = self._queue

@@ -1,9 +1,17 @@
 """Dueling double deep Q-network in pure JAX (paper §IV-D / Table VI).
 
-Architecture (paper Table VI): input W x (f+5); 3 fully-connected hidden
-layers 512/256/128, ReLU; dueling heads V (1) and A (n_actions);
-Q = V + A - mean(A)  [Wang et al. 2016]. Double-DQN targets use the online
-network's argmax with the target network's value [van Hasselt et al. 2016].
+Architecture (paper Table VI): input W x (f+5) — widened by the
+arrival-aware context block (busy-unit mask + per-slot ages + queue depth,
+see docs/observation.md) when the environment runs with
+``EnvConfig.obs_context``; 3 fully-connected hidden layers 512/256/128,
+ReLU; dueling heads V (1) and A (n_actions); Q = V + A - mean(A)
+[Wang et al. 2016]. Double-DQN targets use the online network's argmax
+with the target network's value [van Hasselt et al. 2016].
+
+``widen_dqn_params`` is the bridge between the two input widths: it
+zero-pads the input layer for the appended features, so a profile-only
+agent warm-starts a context-aware run while computing the identical
+Q-function at zero context.
 """
 from __future__ import annotations
 
@@ -41,3 +49,25 @@ def dqn_apply(params: dict, x: jnp.ndarray) -> jnp.ndarray:
 
 def masked_argmax(q: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(jnp.where(mask, q, -jnp.inf), axis=-1)
+
+
+def widen_dqn_params(params: dict, extra_in: int) -> dict:
+    """Zero-pad the input layer for ``extra_in`` *appended* observation dims.
+
+    New observation features are appended at the end of the flat state
+    vector (the context block's contract), so the matching new rows of
+    ``w0`` go at the end of its input axis and are zero — the widened
+    network computes the same Q-values whenever the appended features are
+    zero.  This is the warm-start path from a profile-only agent into an
+    arrival-aware one: at zero context the two agents are the same
+    function, and training only has to learn how context should *modulate*
+    an already-competent policy.  Works on any params-shaped tree whose
+    only input-anchored leaf is ``w0`` (online/target params and the Adam
+    moment trees alike).
+    """
+    assert extra_in >= 0, extra_in
+    out = dict(params)
+    w0 = params["w0"]
+    pad = jnp.zeros((extra_in, w0.shape[1]), w0.dtype)
+    out["w0"] = jnp.concatenate([w0, pad], axis=0)
+    return out

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition import N_UNITS, Partition
+from repro.core.partition import N_UNITS, Partition, find_offsets
 from repro.core.perfmodel import KAPPA_INTERFERENCE, SIGMA_QUANTUM
 from repro.core.profiles import FEATURES, JobProfile
 
@@ -126,6 +126,29 @@ def queue_arrays(queue: list[JobProfile], window: int) -> QueueArrays:
 def stack_queues(qas: list[QueueArrays]) -> QueueArrays:
     """Batch per-queue arrays along a new leading axis."""
     return jax.tree.map(lambda *xs: jnp.stack(xs), *qas)
+
+
+def build_fit_table(partitions: list[Partition]) -> jnp.ndarray:
+    """(P, 2**N_UNITS) f32 — does partition ``p`` first-fit busy mask ``m``?
+
+    ``fit[p, m] = 1.0`` iff :func:`~repro.core.partition.find_offsets` places
+    every slice of partition ``p`` onto the free units of mask ``m`` (bit u of
+    ``m`` set = unit u busy).  Precomputed once per ``EnvConfig`` so the
+    arrival-aware environment's close-group shaping — a penalty for choosing
+    a partition that cannot start on the *current* free-unit shape — is a
+    single in-graph gather (see ``EnvConfig.ctx_fit_weight``).  Fit is
+    evaluated on the planned slice widths; dispatch-time width narrowing
+    (``to_placements``) can only make a placement easier, so the penalty is
+    a conservative blocking signal.
+    """
+    P, M = len(partitions), 1 << N_UNITS
+    fits = np.zeros((P, M), np.float32)
+    for p_i, p in enumerate(partitions):
+        for m in range(M):
+            free = [not (m >> u) & 1 for u in range(N_UNITS)]
+            if find_offsets(p, free) is not None:
+                fits[p_i, m] = 1.0
+    return jnp.asarray(fits)
 
 
 # ---------------------------------------------------------------------------

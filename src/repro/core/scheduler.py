@@ -14,7 +14,10 @@ Two shared pieces sit between any planner and the cluster simulator:
 * :func:`submission_protocol` — the single first-sight implementation
   (unprofiled binary -> solo run + repository insert) every dispatcher
   wraps, so the profiling cost is identical across policies by
-  construction.
+  construction.  It also carries the dispatch-time
+  :class:`~repro.core.env.DispatchContext` (free-unit mask, per-submission
+  ages, pending depth) down to context-aware planners, re-chunked so each
+  planning window sees exactly its own submissions' ages.
 * :func:`to_placements` — width-fits a planned :class:`Schedule` into
   :class:`Placement`\\ s: dedicated (single-share) slices shrink to their
   job's ``requested_units`` hint so right-sized jobs occupy only the slice
@@ -29,7 +32,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.agent import DQNAgent
-from repro.core.env import CoScheduleEnv, EnvConfig
+from repro.core.env import CoScheduleEnv, DispatchContext, EnvConfig
 from repro.core.partition import Partition, Slice, slice_label, solo_partition
 from repro.core.perfmodel import corun_time, solo_run_time
 from repro.core.problem import Schedule
@@ -46,7 +49,8 @@ class SchedulerStats:
 def submission_protocol(repository: ProfileRepository,
                         submissions: list[tuple[str, JobProfile | None]],
                         plan, window: int | None = None,
-                        on_unprofiled=None, on_window=None) -> Schedule:
+                        on_unprofiled=None, on_window=None,
+                        context: DispatchContext | None = None) -> Schedule:
     """The §IV-B online submission protocol, shared by every dispatcher.
 
     Submissions are ``(binary_path, maybe-fresh-profile)`` pairs.  A binary
@@ -58,11 +62,20 @@ def submission_protocol(repository: ProfileRepository,
     ``RLScheduler.schedule_submissions`` and the online package's
     ``DispatchPolicy.dispatch`` are both thin wrappers over this function,
     so the first-sight cost is identical across policies by construction.
+
+    ``context`` is the dispatcher's cluster-state snapshot: its ``ages_s``
+    align positionally with ``submissions``.  When given, each chunk's
+    planner is called as ``plan(queue, context)`` with the ages filtered to
+    that chunk's profiled jobs and ``queue_depth`` grown by the profiled
+    submissions still waiting in later chunks of this same window (they
+    queue behind this plan exactly like pending arrivals do).  ``None``
+    preserves the historical ``plan(queue)`` call unchanged.
     """
     solo = solo_partition()
     sched = Schedule()
     profiled: list[JobProfile] = []
-    for path, fresh in submissions:
+    ages: list[float] = []
+    for k, (path, fresh) in enumerate(submissions):
         prof = repository.lookup(path)
         if prof is None:
             if on_unprofiled is not None:
@@ -72,12 +85,22 @@ def submission_protocol(repository: ProfileRepository,
                 sched.add([fresh], solo)
             continue
         profiled.append(prof)
+        if context is not None:
+            ages.append(context.ages_s[k] if k < len(context.ages_s) else 0.0)
     W = window or max(1, len(profiled))
     for lo in range(0, len(profiled), W):
         chunk = profiled[lo:lo + W]
         if on_window is not None:
             on_window(chunk)
-        inner = plan(chunk)
+        if context is None:
+            inner = plan(chunk)
+        else:
+            later = len(profiled) - (lo + len(chunk))
+            inner = plan(chunk, DispatchContext(
+                free_units=context.free_units,
+                ages_s=tuple(ages[lo:lo + len(chunk)]),
+                queue_depth=context.queue_depth + later,
+                now_s=context.now_s))
         for g, p in zip(inner.groups, inner.partitions):
             sched.add(g, p)
     return sched
@@ -131,9 +154,13 @@ class RLScheduler:
         self.repository = repository if repository is not None else ProfileRepository()
         self.stats = SchedulerStats()
 
-    def schedule(self, queue: list[JobProfile]) -> Schedule:
+    def schedule(self, queue: list[JobProfile],
+                 context: DispatchContext | None = None) -> Schedule:
+        """Greedy episode over ``queue``; ``context`` is the dispatch-time
+        cluster snapshot an ``obs_context`` environment folds into the
+        observation (ignored — zero block — otherwise)."""
         env = CoScheduleEnv(self.env_cfg)
-        state, mask = env.reset(queue)
+        state, mask = env.reset(queue, context)
         guard = 0
         while not env.done:
             action = self.agent.act(state, mask, greedy=True)
@@ -142,7 +169,8 @@ class RLScheduler:
             assert guard < 10 * self.env_cfg.window, "scheduler failed to terminate"
         return self._enforce_constraints(env.schedule)
 
-    def schedule_submissions(self, submissions: list[tuple[str, JobProfile | None]]) -> Schedule:
+    def schedule_submissions(self, submissions: list[tuple[str, JobProfile | None]],
+                             context: DispatchContext | None = None) -> Schedule:
         """:func:`submission_protocol` with the agent as planner.
 
         Unprofiled jobs run solo (full pod) and enter the repository; the
@@ -150,6 +178,8 @@ class RLScheduler:
         than the agent's window are chunked into successive window-sized RL
         episodes (each counted in ``stats.windows``) — the event-driven
         cluster simulator hands over whatever is pending, which can exceed W.
+        ``context`` (the simulator's dispatch snapshot) reaches each episode
+        re-chunked by :func:`submission_protocol`.
         """
         def on_unprofiled(path, fresh):
             self.stats.unprofiled_jobs += 1
@@ -160,7 +190,7 @@ class RLScheduler:
         return submission_protocol(self.repository, submissions,
                                    self.schedule, window=self.env_cfg.window,
                                    on_unprofiled=on_unprofiled,
-                                   on_window=on_window)
+                                   on_window=on_window, context=context)
 
     def _enforce_constraints(self, sched: Schedule) -> Schedule:
         solo = solo_partition()

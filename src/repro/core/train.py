@@ -87,6 +87,7 @@ no faster than the scalar loop — updates dominate; see BENCH_train.json's
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass, field
 from typing import NamedTuple
@@ -126,6 +127,9 @@ class TrainConfig:
     per_alpha: float = 0.0              # PER priority exponent; 0 = uniform
     per_beta0: float = 0.4              # initial IS-correction exponent
     per_eps: float = 1e-3               # priority floor added to |TD|
+    obs_context: bool = False           # arrival-aware context features:
+                                        # promotes env_cfg.obs_context and
+                                        # samples per-episode contexts in-scan
     dqn: DQNConfig = field(default_factory=DQNConfig)
 
 
@@ -222,11 +226,24 @@ def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
     alongside ε) inside the loss, and writes the new |TD|-derived priorities
     back into the sum-tree before the next update of the same scan step.
     ``per=None`` is the uniform engine, unchanged.
+
+    With ``venv.cfg.obs_context`` (a static trace-time branch) every episode
+    auto-reset draws a **fresh arrival-aware context** for that env — busy
+    mask from the aligned-claim table, ages/depth from the wait model
+    (``VecCoScheduleEnv.sample_context``) — so offline training sees the
+    occupancy distribution serve time will, one context per episode, all
+    inside the scanned rollout.  The reset observation is recomputed from
+    the re-contexted state; masks are context-independent.  Without the
+    flag the key stream and compiled program are byte-identical to PR 4.
     """
     B = batch_envs
+    ctx_mode = venv.cfg.obs_context
 
     def body(c: _Carry, _):
-        key, k_act, k_upd = jax.random.split(c.key, 3)
+        if ctx_mode:
+            key, k_act, k_upd, k_ctx = jax.random.split(c.key, 4)
+        else:
+            key, k_act, k_upd = jax.random.split(c.key, 3)
         env_steps = c.env_steps + B
         eps = epsilon_at(dqn_cfg, env_steps)
         a = act_batch(c.params, k_act, c.obs, c.mask, eps)
@@ -285,9 +302,26 @@ def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
                 lambda uc: uc,
                 (c.params, c.target, c.opt, c.updates, replay, k_upd))
         ep_all = c.ep_ret + r
+        if ctx_mode:
+            # per-episode context refresh: envs that finished an episode
+            # restart on a freshly sampled cluster state (the snapshot in
+            # reset_env keeps its zero/segment context; only the live row
+            # is re-contexted, so the carry layout is unchanged).  The
+            # profile prefix of a reset observation is context-independent,
+            # so splice the fresh context tail onto the cached prefix
+            # instead of rebuilding the whole observation every step.
+            fresh = venv.sample_context(k_ctx, c.reset_env.queue.mean_d,
+                                        c.reset_env.queue.valid)
+            r_env = c.reset_env._replace(ctx=fresh)
+            d0 = venv.state_dim - venv.context_dim
+            r_obs = jnp.concatenate(
+                [c.reset_obs[:, :d0], fresh.busy_units, fresh.ages,
+                 fresh.queue_depth[:, None]], axis=1)
+        else:
+            r_env, r_obs = c.reset_env, c.reset_obs
         carry = _Carry(
-            env=_bsel(done, c.reset_env, env2),
-            obs=jnp.where(done[:, None], c.reset_obs, obs2),
+            env=_bsel(done, r_env, env2),
+            obs=jnp.where(done[:, None], r_obs, obs2),
             mask=jnp.where(done[:, None], c.reset_mask, mask2),
             reset_env=c.reset_env, reset_obs=c.reset_obs, reset_mask=c.reset_mask,
             params=params, target=target, opt=opt, replay=replay, key=key,
@@ -369,9 +403,17 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     ``_force_per`` routes ``per_alpha == 0`` through the PER machinery
     anyway (uniform indices, unit weights) — the regression parity test
     uses it to pin that path bit-exactly to the uniform engine.
+    ``cfg.obs_context`` (or ``env_cfg.obs_context``) widens observations
+    with the arrival-aware context block and samples a fresh cluster-state
+    context per episode inside the scan; evaluation rollouts stay at the
+    neutral zero context, so ``eval_throughput`` remains comparable across
+    the two observation modes.
     """
     cfg = cfg or TrainConfig()
     env_cfg = env_cfg or EnvConfig()
+    if cfg.obs_context and not env_cfg.obs_context:
+        env_cfg = dataclasses.replace(env_cfg, obs_context=True)
+    use_ctx = env_cfg.obs_context
     B = cfg.batch_envs
     use_per = cfg.per_alpha > 0 or _force_per
     per = (cfg.per_alpha, cfg.per_beta0, cfg.per_eps) if use_per else None
@@ -427,6 +469,13 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     init = per_init if use_per else replay_init
     replay = init(capacity, venv.state_dim, venv.n_actions)
     key = jax.random.PRNGKey(cfg.seed)
+    # segment-start context draws use their own key rather than consuming
+    # from the main stream.  Note the *in-scan* streams still differ from a
+    # profile-only run: context mode splits the carry key 4 ways instead of
+    # 3, so per-step action/replay randomness is not comparable across the
+    # two observation modes under one seed (the compiled programs differ
+    # anyway — wider obs, extra sampling).
+    ctx_key = jax.random.PRNGKey(cfg.seed + 0x51C3) if use_ctx else None
     env_steps = jnp.int32(0)
     updates = jnp.int32(0)
     eval_every = max(1, cfg.eval_every)
@@ -438,6 +487,12 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
         env_q = rng.integers(0, len(train_queues), size=B)
         qa_batch = stack_queues([qa[i] for i in env_q])
         r_env, r_obs, r_mask = venv.reset_batch(qa_batch)
+        if use_ctx:
+            # segment-start contexts; later episodes resample at auto-reset
+            ctx_key, k0 = jax.random.split(ctx_key)
+            r_env = r_env._replace(ctx=venv.sample_context(
+                k0, r_env.queue.mean_d, r_env.queue.valid))
+            r_obs = venv.obs_batch(r_env)
         # distinct buffers for the live-env side: the jitted segment donates
         # its carry, and XLA rejects the same buffer donated twice
         live_env = jax.tree.map(jnp.copy, r_env)

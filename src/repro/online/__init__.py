@@ -36,6 +36,16 @@ right-sized slice requests) whose per-arrival job draw follows the paper's
 ``mix="balanced"`` draws classes uniformly.  A trace is therefore the
 streaming analogue of the paper's static queue families.
 
+Arrival-aware observations
+--------------------------
+Every dispatch window hands the policy a
+:class:`~repro.core.env.DispatchContext` — free-unit mask, per-submission
+ages, pending depth at the dispatch instant.  An RL policy whose
+environment has ``EnvConfig.obs_context`` set folds that snapshot into the
+agent's observation (the context block of ``docs/observation.md``), so the
+policy plans from *profiles + live cluster state*; all other policies, and
+context-blind agents, ignore it bit-compatibly.
+
 Re-training
 -----------
 :class:`~repro.online.retrain.OnlineRetrainer` hangs off the simulator's

@@ -8,6 +8,15 @@ co-scheduled by the policy's planner.  All policies therefore pay the same
 first-sight profiling cost — comparisons across policies on one trace are
 apples to apples.
 
+Every dispatch additionally receives the simulator's
+:class:`~repro.core.env.DispatchContext` — the free-unit occupancy mask,
+per-submission queueing ages, and pending-queue depth at the dispatch
+instant.  The base protocol accepts it uniformly so the simulator can pass
+it unconditionally; only the RL policy consumes it (an ``obs_context``
+agent folds it into its observation — the arrival-aware state of
+``docs/observation.md``), while the heuristic baselines plan from profiles
+alone, exactly as before.
+
     RLDispatchPolicy      — the trained agent via
                             ``RLScheduler.schedule_submissions`` (constraint
                             guard included); ``hot_swap`` lets the periodic
@@ -65,7 +74,13 @@ class DispatchPolicy:
         self.plan_window = plan_window
         self.stats = PolicyStats()
 
-    def dispatch(self, submissions: list[tuple[str, JobProfile | None]]) -> Schedule:
+    def dispatch(self, submissions: list[tuple[str, JobProfile | None]],
+                 context=None) -> Schedule:
+        """``context`` (a :class:`~repro.core.env.DispatchContext`) is
+        accepted by every policy so the simulator can pass its dispatch
+        snapshot unconditionally; the base planner contract
+        ``plan(queue)`` is context-blind, so it is *not* forwarded here —
+        the RL policy overrides this method to consume it."""
         def on_unprofiled(path, fresh):
             self.stats.unprofiled_jobs += 1
 
@@ -77,14 +92,15 @@ class DispatchPolicy:
                                    on_unprofiled=on_unprofiled,
                                    on_window=on_window)
 
-    def placements(self, submissions: list[tuple[str, JobProfile | None]]) -> list[Placement]:
+    def placements(self, submissions: list[tuple[str, JobProfile | None]],
+                   context=None) -> list[Placement]:
         """What the slice-level simulator consumes: the planned schedule
         width-fitted into :class:`~repro.core.scheduler.Placement`\\ s
         (dedicated slices shrink to each job's ``requested_units`` hint).
         One shared implementation — every policy, including the delegated
         RL protocol, goes through its own :meth:`dispatch` first, so the
         first-sight profiling cost stays identical across policies."""
-        return to_placements(self.dispatch(submissions))
+        return to_placements(self.dispatch(submissions, context=context))
 
     def plan(self, queue: list[JobProfile]) -> Schedule:
         raise NotImplementedError
@@ -166,7 +182,9 @@ class RLDispatchPolicy(DispatchPolicy):
     """The trained agent, online: delegates the whole protocol (including
     first-sight solo runs and the constraint guard) to
     :meth:`RLScheduler.schedule_submissions`; ``hot_swap`` installs freshly
-    re-trained agents between dispatches."""
+    re-trained agents between dispatches.  The only context-aware policy:
+    the dispatch snapshot flows into the agent's observation when its env
+    runs with ``obs_context`` (and is harmlessly ignored otherwise)."""
 
     name = "rl"
 
@@ -175,13 +193,14 @@ class RLDispatchPolicy(DispatchPolicy):
         super().__init__(repository)
         self.scheduler = RLScheduler(agent, env_cfg, self.repository)
 
-    def dispatch(self, submissions):
+    def dispatch(self, submissions, context=None):
         # keep PolicyStats live even though the protocol is delegated:
         # cross-policy analyses read .stats uniformly.  Derived from the
         # scheduler's own counter delta so there is exactly one protocol
         # implementation to stay in sync with.
         before = self.scheduler.stats.unprofiled_jobs
-        sched = self.scheduler.schedule_submissions(submissions)
+        sched = self.scheduler.schedule_submissions(submissions,
+                                                    context=context)
         fresh = self.scheduler.stats.unprofiled_jobs - before
         self.stats.unprofiled_jobs += fresh
         self.stats.planned_jobs += len(submissions) - fresh

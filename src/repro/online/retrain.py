@@ -16,6 +16,14 @@ applications and overfit the Q-function to them).  Queues are built with
 ``strict=False``, so a repository that does not yet span all three CI/MI/US
 classes still trains — recipes remap onto the classes observed.
 
+Arrival-aware serving agents re-train transparently: the retrainer derives
+its environment config from the serving policy (below), so an agent whose
+``EnvConfig.obs_context`` is set refreshes on the context-widened
+observation — ``train_agent`` samples per-episode cluster-state contexts
+inside the scanned rollout (``docs/observation.md``), and the hot-swapped
+agent keeps consuming the simulator's real dispatch snapshots.  Nothing in
+this module branches on the observation mode.
+
 Wall-clock cost note: each distinct ``TrainConfig``/``EnvConfig`` shape
 compiles its own engine; reusing one ``RetrainConfig`` across cycles means
 the first tick pays compilation and every later tick runs from the engine

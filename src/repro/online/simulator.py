@@ -40,6 +40,18 @@ width hints the two modes produce identical results (all placements are
 full-pod, so concurrency never materializes) — the regression tests pin
 this equivalence.
 
+Dispatch-time context
+---------------------
+Every window hand-off carries a :class:`~repro.core.env.DispatchContext`
+snapshot of the cluster at the dispatch instant: the live free-unit mask
+(the very list placements are first-fitted against), each head
+submission's age since arrival, and the pending-queue depth left behind.
+Policies are free to ignore it (the heuristic baselines do); an RL policy
+whose environment runs with ``EnvConfig.obs_context`` folds it into the
+agent's observation, closing the loop that lets the policy *learn*
+backfill-like behavior the dispatch layer otherwise supplies by hand —
+see ``docs/observation.md`` for the exact feature layout and invariants.
+
 Per-job completion times come from the phase-simulated
 :func:`~repro.core.perfmodel.corun` under the fitted partition.  Every
 dispatched group appends a :class:`Segment` (now carrying its claimed
@@ -61,6 +73,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.env import DispatchContext
 from repro.core.partition import N_UNITS, find_offsets
 from repro.core.perfmodel import CoRunResult, corun
 from repro.core.profiles import JobProfile
@@ -366,13 +379,17 @@ class ClusterSimulator:
     # ------------------------------------------------- blocking (PR-3) mode
 
     def _dispatch_blocking(self, now, res, order, records, push) -> None:
-        """Whole-pod block dispatch — the PR-3 event model, verbatim."""
+        """Whole-pod block dispatch — the PR-3 event model, verbatim (the
+        dispatch context reports the idle full pod, which it is whenever a
+        blocking dispatch fires)."""
         if self.busy or not self.pending:
             return
         head = [self.pending.popleft()
                 for _ in range(min(self.window, len(self.pending)))]
         sched = self.policy.dispatch(
-            [(order[i].binary, order[i].profile) for i in head])
+            [(order[i].binary, order[i].profile) for i in head],
+            context=self._dispatch_context(now, head, order,
+                                           free=(True,) * N_UNITS))
         by_name: dict[str, deque] = defaultdict(deque)
         for i in head:
             by_name[order[i].profile.name].append(records[i])
@@ -438,13 +455,27 @@ class ClusterSimulator:
             if not progress:
                 return
 
+    def _dispatch_context(self, now, head, order, free=None) -> DispatchContext:
+        """Cluster-state snapshot handed to the policy with each window:
+        the live free-unit mask (the same list ``find_offsets`` places
+        against), each head submission's age since arrival, and the depth
+        of the pending queue left behind — the arrival-aware observation
+        an ``obs_context`` agent folds into its state."""
+        return DispatchContext(
+            free_units=tuple(self._free) if free is None else free,
+            ages_s=tuple(now - order[i].t for i in head),
+            queue_depth=len(self.pending),
+            now_s=now)
+
     def _form_window(self, now, res, order, records) -> None:
         head = [self.pending.popleft()
                 for _ in range(min(self.window, len(self.pending)))]
         subs = [(order[i].binary, order[i].profile) for i in head]
+        ctx = self._dispatch_context(now, head, order)
         fn = getattr(self.policy, "placements", None)
-        placements = (fn(subs) if fn is not None
-                      else to_placements(self.policy.dispatch(subs)))
+        placements = (fn(subs, context=ctx) if fn is not None
+                      else to_placements(self.policy.dispatch(subs,
+                                                              context=ctx)))
         by_name: dict[str, deque] = defaultdict(deque)
         for i in head:
             by_name[order[i].profile.name].append(records[i])

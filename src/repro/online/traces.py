@@ -34,6 +34,14 @@ Rates are expressed as a ``load`` factor relative to the mean solo duration
 of the job pool: ``load=1.0`` submits work exactly as fast as pure time
 sharing could retire it, ``load>1`` saturates the pod so makespan-derived
 throughput measures scheduling quality rather than idle time.
+
+Trace families double as the *context regimes* of the arrival-aware
+observation (``docs/observation.md``): ``fragmented`` exercises the
+busy-unit mask (partial occupancies at almost every dispatch), ``mmpp`` and
+``diurnal`` swing the queue-depth and age features between lull and burst,
+and ``heavy_tailed`` stretches ages behind elephants — which is why the
+``arrival_aware`` benchmark section serves every family through both the
+profile-only and the context-trained agent.
 """
 from __future__ import annotations
 

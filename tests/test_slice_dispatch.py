@@ -267,6 +267,70 @@ def test_blocking_mode_segments_claim_full_pod():
     assert np.isclose(res.unit_busy_s, N_UNITS * res.busy_time)
 
 
+# --------------------------------------------- dispatch-time context snapshot
+
+class _RecordingPolicy(TimeSharingPolicy):
+    """Time sharing that records the DispatchContext of every window."""
+
+    def __init__(self):
+        super().__init__()
+        self.contexts = []
+
+    def placements(self, submissions, context=None):
+        self.contexts.append((context, [p for p, _ in submissions]))
+        return super().placements(submissions, context=context)
+
+
+def test_dispatch_context_matches_occupancy_and_ages():
+    """The snapshot handed to the policy obeys the occupancy-map contract:
+    every unit reported busy is covered by a claim segment spanning the
+    dispatch instant, ages equal now - arrival for the window's
+    submissions, and depth counts exactly the left-behind pending queue."""
+    trace = fragmented_trace(ZOO, n=40, load=1.3, seed=2)
+    pol = _RecordingPolicy()
+    res = ClusterSimulator(pol, window=6).run(trace)
+    assert pol.contexts and len(pol.contexts) == res.dispatches
+    # windows pop the pending queue FCFS (lookahead included), so the
+    # concatenated window submissions replay the time-sorted trace exactly
+    order = sorted(trace, key=lambda a: a.t)
+    k = 0
+    partial = 0
+    for ctx, bins in pol.contexts:
+        assert ctx is not None and len(ctx.free_units) == N_UNITS
+        busy = {u for u in range(N_UNITS) if not ctx.free_units[u]}
+        covered = {u for seg in res.timeline
+                   if seg.t0 <= ctx.now_s + 1e-9 and seg.t1 > ctx.now_s + 1e-9
+                   for u in _unit_set(seg)}
+        assert busy <= covered, (ctx.now_s, busy, covered)
+        assert len(ctx.ages_s) == len(bins)
+        for age, b in zip(ctx.ages_s, bins):
+            assert b == order[k].binary
+            assert age == pytest.approx(ctx.now_s - order[k].t)
+            assert age >= -1e-9
+            k += 1
+        assert ctx.queue_depth >= 0
+        if 0 < len(busy) < N_UNITS:
+            partial += 1
+    assert k == len(trace)
+    # the fragmented family must exercise genuinely partial occupancies
+    assert partial > 0
+
+
+def test_blocking_dispatch_context_reports_idle_pod():
+    trace = poisson_trace(ZOO, n=12, seed=1)
+
+    class _Rec(TimeSharingPolicy):
+        seen = []
+
+        def dispatch(self, submissions, context=None):
+            self.seen.append(context)
+            return super().dispatch(submissions, context=context)
+
+    pol = _Rec()
+    ClusterSimulator(pol, window=4, mode="blocking").run(trace)
+    assert pol.seen and all(all(c.free_units) for c in pol.seen)
+
+
 # ------------------------------------------------------ fragmented trace
 
 def test_fragmented_trace_mixes_slice_widths_coherently():
