@@ -30,14 +30,28 @@ family is the headline — the agent should recover dispatch-layer packing
 gains from state alone.  ``benchmarks.bench_gate`` pins the committed
 ``rl_context_vs_profile_only`` ratio there.
 
+The ``vectorized_sim`` section is the engine comparison: the in-graph
+vectorized simulator (``repro.online.vecsim``, one jitted
+``lax.while_loop`` per trace, ``vmap`` over a leading trace axis) vs the
+Python event heap on identical solo-placement traces — single-trace wall
+time both ways plus vmapped-sweep throughput (traces/sec at batch >= 64),
+whose ``speedup_vs_heap`` is floored by ``benchmarks.bench_gate``.  The
+``sim_wall`` block mirrors every policy×family cell's ``sim_wall_s`` so
+the Python-vs-vectorized trend stays visible in the committed trajectory,
+and ``--engine vectorized`` routes supported cells (solo-placement
+policies, concurrent mode, no retrainer) through the vectorized engine —
+each cell records which ``engine`` served it.
+
     PYTHONPATH=src python -m benchmarks.online_sim [--fast] \
-        [--out BENCH_online.json]
+        [--out BENCH_online.json] [--engine {heap,vectorized}]
     PYTHONPATH=src python -m benchmarks.online_sim --section arrival_aware
 
-``--section arrival_aware`` recomputes only that section (re-training both
-agents deterministically from the committed run's settings) and merges it
-into the committed ``BENCH_online.json`` — the incremental path for
-observation-layer changes.
+``--section <name>`` recomputes only that section (for ``arrival_aware``,
+re-training both agents deterministically from the committed run's
+settings; ``vectorized_sim`` re-measures both engines; ``sim_wall``
+derives from the committed ``traces`` cells) and merges it into the
+committed ``BENCH_online.json`` — the incremental path for
+observation-layer and engine changes.
 
 ``--smoke`` is the CI guard (< 60 s): a tiny agent, short traces, RL with
 re-training vs time sharing, plus the dispatch-mode comparison and a
@@ -57,7 +71,9 @@ import json
 import sys
 import time
 
-from benchmarks.bench_gate import ARRIVAL_FLOOR, CONC_BLK_FLOOR, FRAG_MARGIN
+from benchmarks.bench_gate import (
+    ARRIVAL_FLOOR, CONC_BLK_FLOOR, FRAG_MARGIN, VECSIM_SPEEDUP_FLOOR,
+)
 from benchmarks.common import emit, missing_keys
 from repro.core import (
     CoScheduleEnv, DQNAgent, EnvConfig, TrainConfig, make_zoo, train_agent,
@@ -68,11 +84,12 @@ from repro.core.env import context_dim
 from repro.online import (
     ClusterSimulator, GreedyPackerPolicy, OnlineRetrainer, RLDispatchPolicy,
     StaticPartitionPolicy, TRACE_FAMILIES, TimeSharingPolicy,
-    default_retrain_train_config,
+    VectorizedClusterSimulator, default_retrain_train_config,
 )
 
 REQUIRED_KEYS = ("window", "n_arrivals", "traces", "rl_vs_time_sharing",
-                 "dispatch_comparison", "arrival_aware", "note")
+                 "dispatch_comparison", "arrival_aware", "sim_wall",
+                 "vectorized_sim", "note")
 
 ARRIVAL_NOTE = (
     "frozen-agent observation-mode comparison on identical traces: "
@@ -87,19 +104,112 @@ ARRIVAL_NOTE = (
     "(rl_context >= ARRIVAL_FLOOR x rl_profile_only)")
 
 
-def _simulate(policy, trace, window, retrainer=None, mode="concurrent"):
+def _simulate(policy, trace, window, retrainer=None, mode="concurrent",
+              engine="heap"):
+    # the vectorized engine serves solo-placement plans in concurrent mode
+    # with no periodic tick; everything else stays on the Python heap
+    use_vec = (engine == "vectorized" and retrainer is None
+               and mode == "concurrent"
+               and VectorizedClusterSimulator.supports(policy))
     t0 = time.perf_counter()
-    sim = ClusterSimulator(
-        policy, window=window, mode=mode,
-        tick_interval_s=retrainer.interval_s if retrainer else None,
-        on_tick=retrainer)
-    res = sim.run(trace)
+    if use_vec:
+        res = VectorizedClusterSimulator(
+            policy, window=window,
+            capacity=max(128, 2 * len(trace))).run(trace)
+    else:
+        sim = ClusterSimulator(
+            policy, window=window, mode=mode,
+            tick_interval_s=retrainer.interval_s if retrainer else None,
+            on_tick=retrainer)
+        res = sim.run(trace)
     out = res.summary()
     out["sim_wall_s"] = time.perf_counter() - t0
+    out["engine"] = "vectorized" if use_vec else "heap"
     if retrainer is not None:
         out["retrains"] = len(retrainer.history)
         out["retrain_history"] = retrainer.history
     return out
+
+
+def _sim_wall_block(traces: dict) -> dict:
+    """Per policy×family ``sim_wall_s`` lifted out of the traces section."""
+    return {fam: {pol: cell["sim_wall_s"]
+                  for pol, cell in fam_out.items()
+                  if isinstance(cell, dict) and "sim_wall_s" in cell}
+            for fam, fam_out in traces.items()}
+
+
+def _vectorized_sim(zoo, window, n, load, seed, batch=64, capacity=128):
+    """Engine comparison: heap vs vectorized, single trace + vmapped sweep.
+
+    Same solo-placement workload both ways (time sharing, concurrent mode,
+    ``batch`` seed-varied Poisson traces).  The heap's traces/sec comes
+    from serving the first few traces one at a time; the vectorized
+    engine's from one warm vmapped ``sweep`` call over the whole batch
+    (compile time reported separately — it amortizes across sweeps).
+    """
+    traces = [TRACE_FAMILIES["poisson"](zoo, n=n, load=load, seed=seed + i)
+              for i in range(batch)]
+    n_heap = min(8, batch)
+    t0 = time.perf_counter()
+    heap_res = [ClusterSimulator(TimeSharingPolicy(), window=window).run(tr)
+                for tr in traces[:n_heap]]
+    heap_per_trace = (time.perf_counter() - t0) / n_heap
+    vec = VectorizedClusterSimulator(TimeSharingPolicy(), window=window,
+                                     capacity=capacity)
+    t0 = time.perf_counter()
+    vec_res = vec.run(traces[0])
+    vec_compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vec.run(traces[0])
+    vec_per_trace = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vec.sweep(traces)
+    sweep_compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    summ = vec.sweep(traces)
+    sweep_wall = time.perf_counter() - t0
+    traces_per_s = batch / sweep_wall
+    heap_traces_per_s = 1.0 / heap_per_trace
+    # parity spot check rides along so the committed numbers carry proof
+    # the two engines measured the same system
+    h0, v0 = heap_res[0], vec_res
+    section = {
+        "family": "poisson", "window": window, "n_arrivals": n,
+        "load": load, "seed": seed, "capacity": capacity,
+        "single_trace": {
+            "heap_wall_s": heap_per_trace,
+            "vectorized_wall_s": vec_per_trace,
+            "vectorized_compile_s": vec_compile_s,
+        },
+        "sweep": {
+            "batch": batch,
+            "wall_s": sweep_wall,
+            "compile_s": sweep_compile_s,
+            "traces_per_s": traces_per_s,
+            "heap_traces_per_s": heap_traces_per_s,
+            "speedup_vs_heap": traces_per_s / heap_traces_per_s,
+        },
+        "parity": {
+            "heap_makespan_s": h0.makespan,
+            "vectorized_makespan_s": v0.makespan,
+            "heap_p99_wait_s": h0.p99_wait,
+            "vectorized_p99_wait_s": v0.p99_wait,
+            "sweep_mean_makespan_s": float(summ.makespan.mean()),
+        },
+        "note": ("heap_traces_per_s serves traces one at a time on the "
+                 "Python event heap; traces_per_s is one warm vmapped "
+                 "sweep call over the whole batch (compile_s amortizes "
+                 "across sweeps and is excluded, matching how the engine "
+                 "is used for fleet-scale evaluation); speedup_vs_heap is "
+                 "their ratio, floored by benchmarks.bench_gate; parity "
+                 "keys show both engines measured the same system "
+                 "(decision-level equality is asserted in "
+                 "tests/test_vecsim.py)"),
+    }
+    emit("vectorized_sim", sweep_wall * 1e6 / batch,
+         f"speedup={section['sweep']['speedup_vs_heap']:.2f}x")
+    return section
 
 
 def _context_agent(zoo, env_cfg, base_agent, episodes, seed=0):
@@ -133,12 +243,12 @@ def _context_agent(zoo, env_cfg, base_agent, episodes, seed=0):
 
 
 def _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent, families,
-                   n, load, seed, window):
+                   n, load, seed, window, engine="heap"):
     """Frozen observation-mode comparison, one entry per trace family."""
     out: dict = {}
     for i, fam in enumerate(families):
         trace = TRACE_FAMILIES[fam](zoo, n=n, load=load, seed=seed + i)
-        ts = _simulate(TimeSharingPolicy(), trace, window)
+        ts = _simulate(TimeSharingPolicy(), trace, window, engine=engine)
         rl = _simulate(RLDispatchPolicy(agent, env_cfg), trace, window)
         rlc = _simulate(RLDispatchPolicy(ctx_agent, ctx_cfg), trace, window)
         out[fam] = {
@@ -156,18 +266,22 @@ def _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent, families,
 
 
 def _bench_trace(tname, trace, agent, env_cfg, window, retrain_cfg,
-                 baselines: bool):
+                 baselines: bool, engine="heap"):
     """All policies on one trace; fresh repositories so profiling restarts."""
     out: dict = {"arrivals": len(trace), "span_s": trace[-1].t}
-    out["time_sharing"] = _simulate(TimeSharingPolicy(), trace, window)
+    out["time_sharing"] = _simulate(TimeSharingPolicy(), trace, window,
+                                    engine=engine)
     # dispatch-mode comparison: same frozen policies, blocking pod
     out["time_sharing_blocking"] = _simulate(TimeSharingPolicy(), trace,
                                              window, mode="blocking")
     if baselines:
-        out["greedy_packer"] = _simulate(GreedyPackerPolicy(), trace, window)
+        out["greedy_packer"] = _simulate(GreedyPackerPolicy(), trace, window,
+                                         engine=engine)
         out["mig_mps_default"] = _simulate(
-            StaticPartitionPolicy("mig_mps_default"), trace, window)
-        out["rl"] = _simulate(RLDispatchPolicy(agent, env_cfg), trace, window)
+            StaticPartitionPolicy("mig_mps_default"), trace, window,
+            engine=engine)
+        out["rl"] = _simulate(RLDispatchPolicy(agent, env_cfg), trace, window,
+                              engine=engine)
         out["rl_blocking"] = _simulate(RLDispatchPolicy(agent, env_cfg),
                                        trace, window, mode="blocking")
     pol = RLDispatchPolicy(agent, env_cfg)
@@ -213,7 +327,19 @@ def main() -> None:
     ap.add_argument("--load", type=float, default=1.25)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--retrain-interval-min", type=float, default=None)
-    ap.add_argument("--section", choices=("arrival_aware",), default=None,
+    ap.add_argument("--engine", choices=("heap", "vectorized"),
+                    default="heap",
+                    help="simulator engine for policy×family cells; "
+                         "'vectorized' routes supported cells "
+                         "(solo-placement, concurrent, no retrainer) "
+                         "through repro.online.vecsim and leaves the rest "
+                         "on the heap — each cell records which engine "
+                         "served it")
+    ap.add_argument("--sweep-batch", type=int, default=64,
+                    help="vmapped batch size for the vectorized_sim sweep")
+    ap.add_argument("--section",
+                    choices=("arrival_aware", "vectorized_sim", "sim_wall"),
+                    default=None,
                     help="recompute one section and merge it into the "
                          "committed --bench-json instead of a full run")
     ap.add_argument("--bench-json", default="BENCH_online.json",
@@ -222,6 +348,43 @@ def main() -> None:
                     help="where to write results (default BENCH_online.json; "
                          "smoke mode writes nothing unless given)")
     args, _ = ap.parse_known_args()
+
+    if args.section == "sim_wall":
+        # pure derivation from the committed traces cells — no simulation
+        with open(args.bench_json) as f:
+            bench = json.load(f)
+        bench["sim_wall"] = _sim_wall_block(bench["traces"])
+        out = args.out or args.bench_json
+        with open(out, "w") as f:
+            json.dump(bench, f, indent=1)
+        cells = sum(len(v) for v in bench["sim_wall"].values())
+        print(f"merged sim_wall into {out}: {cells} policy×family cells")
+        return
+
+    if args.section == "vectorized_sim":
+        with open(args.bench_json) as f:
+            bench = json.load(f)
+        window = args.window or bench["window"]
+        n = args.arrivals or bench["n_arrivals"]
+        load = bench.get("load", args.load)
+        seed = bench.get("seed", args.seed)
+        zoo = make_zoo(dryrun_dir=None)
+        print("name,us_per_call,derived")
+        section = _vectorized_sim(zoo, window, n, load, seed,
+                                  batch=args.sweep_batch)
+        bench["vectorized_sim"] = section
+        bench.setdefault("acceptance", {})[
+            "vectorized_sweep_speedup_ge_floor"] = (
+            section["sweep"]["speedup_vs_heap"] >= VECSIM_SPEEDUP_FLOOR)
+        out = args.out or args.bench_json
+        with open(out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"merged vectorized_sim into {out}: "
+              f"{section['sweep']['speedup_vs_heap']:.2f}x over heap at "
+              f"batch {section['sweep']['batch']} "
+              f"({section['sweep']['traces_per_s']:.0f} traces/s, floor "
+              f"{VECSIM_SPEEDUP_FLOOR:.1f}x)")
+        return
 
     if args.section == "arrival_aware":
         with open(args.bench_json) as f:
@@ -298,7 +461,8 @@ def main() -> None:
         trace = TRACE_FAMILIES[fam](zoo, n=n, load=args.load,
                                     seed=args.seed + i)
         traces[fam] = _bench_trace(fam, trace, agent, env_cfg, window,
-                                   retrain_cfg, baselines=not args.smoke)
+                                   retrain_cfg, baselines=not args.smoke,
+                                   engine=args.engine)
 
     # observation-mode comparison: context-trained vs profile-only, frozen
     ctx_episodes = args.ctx_episodes or (100 if args.smoke else episodes)
@@ -318,7 +482,13 @@ def main() -> None:
         emit("arrival_aware_smoke", 0.0, f"ctx_tp={ctx_smoke_tp:.3f}")
     else:
         arrival = _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent,
-                                 families, n, args.load, args.seed, window)
+                                 families, n, args.load, args.seed, window,
+                                 engine=args.engine)
+
+    # engine comparison rides the full run (smoke keeps its <60 s budget;
+    # CI exercises the sweep path via tests/test_vecsim.py instead)
+    vec_section = None if args.smoke else _vectorized_sim(
+        zoo, window, n, args.load, args.seed, batch=args.sweep_batch)
 
     rl_vs_ts = {t: traces[t]["rl_retrain_vs_time_sharing"] for t in traces}
     dispatch_cmp = {t: traces[t]["concurrent_vs_blocking"] for t in traces}
@@ -329,12 +499,15 @@ def main() -> None:
         "load": args.load,
         "seed": args.seed,
         "train_episodes": episodes,
+        "engine": args.engine,
         "retrain": {"interval_min": interval_min,
                     "episodes": retrain_episodes},
         "traces": traces,
         "rl_vs_time_sharing": rl_vs_ts,
         "dispatch_comparison": dispatch_cmp,
         "arrival_aware": arrival,
+        "sim_wall": _sim_wall_block(traces),
+        "vectorized_sim": vec_section,
         "acceptance": {
             "arrival_aware_fragmented_ctx_ge_profile_only": (
                 arrival is not None
@@ -351,6 +524,10 @@ def main() -> None:
                          {}).get("time_sharing", 0.0) > 1.0,
             "fragmented_backfills":
                 frag.get("time_sharing", {}).get("backfills", 0),
+            "vectorized_sweep_speedup_ge_floor": (
+                vec_section is not None
+                and vec_section["sweep"]["speedup_vs_heap"]
+                >= VECSIM_SPEEDUP_FLOOR),
         },
         "note": ("throughput = total solo work / makespan (time sharing ~1.0 "
                  "on a saturated pod); *_vs_time_sharing are ratios of that "

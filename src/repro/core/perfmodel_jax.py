@@ -24,8 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition import N_UNITS, Partition, find_offsets
-from repro.core.perfmodel import KAPPA_INTERFERENCE, SIGMA_QUANTUM
+from repro.core.partition import N_UNITS, Partition, find_offsets, solo_partition
+from repro.core.perfmodel import KAPPA_INTERFERENCE, SIGMA_QUANTUM, corun
 from repro.core.profiles import FEATURES, JobProfile
 
 UNIT_SIZES = (1, 2, 4, 8)            # valid slice widths (powers of two)
@@ -287,6 +287,24 @@ def group_metrics(table: PartitionTable, qa: QueueArrays,
     dr = qa.solo[j] / jnp.maximum(qa.mean_d, 1e-9)
     ri = (sm_alloc * cr + mem_alloc * mr) * dr ** 2
     return makespan, solo, jnp.sum(jnp.where(slot_ok, ri, 0.0))
+
+
+def solo_duration_table(jobs: list[JobProfile]) -> np.ndarray:
+    """``(J, len(UNIT_SIZES))`` float64 solo makespans per (job, width).
+
+    Host-side, through the float64 reference model: entry ``[j, u]`` is
+    ``corun([job_j], solo_partition(UNIT_SIZES[u])).makespan`` — bit-equal
+    to the heap simulator's per-group ``corun`` predictions for solo
+    placements (a single job's fixed point converges in one iteration, so
+    this is exactly ``steps * step_time(width)``).  The vectorized engine
+    precomputes this table and casts once to float32, which is what makes
+    its discrete decisions identical to the heap's.
+    """
+    out = np.zeros((len(jobs), len(UNIT_SIZES)), np.float64)
+    for i, job in enumerate(jobs):
+        for u, w in enumerate(UNIT_SIZES):
+            out[i, u] = corun([job], solo_partition(w)).makespan
+    return out
 
 
 def group_reward(table: PartitionTable, qa: QueueArrays,

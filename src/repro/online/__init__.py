@@ -66,11 +66,13 @@ from repro.online.traces import (
     TRACE_FAMILIES, diurnal_trace, fragmented_trace, heavy_tailed_trace,
     mmpp_trace, poisson_trace,
 )
+from repro.online.vecsim import SweepSummary, VectorizedClusterSimulator
 
 __all__ = [
     "Arrival", "ClusterSimulator", "DispatchPolicy", "GreedyPackerPolicy",
     "JobRecord", "OnlineRetrainer", "PolicyStats", "RLDispatchPolicy",
-    "Segment", "SimResult", "StaticPartitionPolicy", "TRACE_FAMILIES",
-    "TimeSharingPolicy", "default_retrain_train_config", "diurnal_trace",
-    "fragmented_trace", "heavy_tailed_trace", "mmpp_trace", "poisson_trace",
+    "Segment", "SimResult", "StaticPartitionPolicy", "SweepSummary",
+    "TRACE_FAMILIES", "TimeSharingPolicy", "VectorizedClusterSimulator",
+    "default_retrain_train_config", "diurnal_trace", "fragmented_trace",
+    "heavy_tailed_trace", "mmpp_trace", "poisson_trace",
 ]

@@ -236,6 +236,17 @@ class SimResult:
         return float(np.mean([j.turnaround for j in self.jobs])) if self.jobs else 0.0
 
     @property
+    def p50_wait(self) -> float:
+        return (float(np.percentile([j.wait for j in self.jobs], 50))
+                if self.jobs else 0.0)
+
+    @property
+    def p99_wait(self) -> float:
+        """Tail wait — the fleet-scale headline metric (see ROADMAP)."""
+        return (float(np.percentile([j.wait for j in self.jobs], 99))
+                if self.jobs else 0.0)
+
+    @property
     def p95_turnaround(self) -> float:
         return (float(np.percentile([j.turnaround for j in self.jobs], 95))
                 if self.jobs else 0.0)
@@ -254,6 +265,8 @@ class SimResult:
             "idle_slice_frac": self.idle_slice_frac,
             "backfills": self.backfills,
             "mean_wait_s": self.mean_wait,
+            "p50_wait_s": self.p50_wait,
+            "p99_wait_s": self.p99_wait,
             "mean_turnaround_s": self.mean_turnaround,
             "p95_turnaround_s": self.p95_turnaround,
             "dispatches": self.dispatches,

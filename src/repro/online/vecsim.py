@@ -1,0 +1,695 @@
+"""In-graph vectorized cluster simulator: the event heap as pytree arrays.
+
+The Python :class:`~repro.online.simulator.ClusterSimulator` is a per-event
+Python loop — exact, but one trace at a time.  This module applies the same
+transformation PR 1 applied to the training loop (scalar Python loop ->
+donated ``lax.scan``/``while_loop`` over fixed-shape pytree state) to the
+*simulator* itself, so a whole batch of traces runs in one device call
+under ``vmap`` (and across host devices under ``pmap`` — the
+``--xla_force_host_platform_device_count`` idiom gives cheap CPU
+parallelism in CI).
+
+Event-table layout (the heap, flattened)
+----------------------------------------
+The heap's three event kinds become bounded array lanes with active masks;
+"pop the heap" becomes an argmin:
+
+* **ARRIVE** — the trace itself *is* the event table: arrival times are a
+  sorted ``(capacity,)`` lane and two cursors replace the FCFS pending
+  deque (``pend_lo``..``pend_hi`` index the admitted-but-undispatched
+  span).  The next arrival event is ``t[pend_hi]``.
+* **FREE** — outstanding slice claims live in ``N_UNITS`` fixed slots
+  (each claim holds >= 1 of the 8 units, so 8 slots can never overflow):
+  expiry time, claimed-unit mask, active flag.  The next free event is the
+  masked min over expiries.
+* **TICK** — not represented: re-training is a host-side callback, so the
+  heap engine remains the only path with ``on_tick`` (documented below).
+
+One event step takes ``now = min(next arrival, next expiry)``, drains
+*every* event with ``t <= now`` (the heap's coincident-event drain), then
+runs the same service fixpoint the Python ``_service`` loop runs: place
+the FCFS head while it first-fits, admit one bounded lookahead window past
+a blocked head, EASY-backfill later groups that provably finish before the
+head's earliest feasible start (replayed claim expiries, in-graph).  The
+per-unit occupancy map is an ``(N_UNITS,)`` mask and first-fit
+aligned-buddy placement is a masked scan over the 8 candidate offsets.
+A full trace is one ``lax.while_loop`` (each step retires >= 1 event, so
+``2 * capacity + 4`` bounds it); ``vmap`` over a leading trace axis
+evaluates hundreds of scenarios per call.
+
+Scope and the plan seam
+-----------------------
+The engine executes **solo-placement plans**: every submission becomes its
+own single-slice group at its ``requested_units`` width, through the same
+first-sight protocol the heap runs (unprofiled binaries are scheduled
+ahead of the planned remainder of their window, and enter the in-graph
+profiled bitmap).  That is exactly :class:`~repro.online.policies.\
+TimeSharingPolicy` through ``to_placements`` — the baseline the paper
+normalizes against and the policy the fragmentation/backfill layer is
+scored on.  Group durations are *precomputed* per (job, width) by the
+float64 reference model (:func:`~repro.core.perfmodel_jax.\
+solo_duration_table`, bit-equal to the heap's per-group ``corun``
+predictions for solo placements), so the two engines make identical
+discrete decisions and differ only by float32 rounding of the clock.
+Grouped plans — the RL agent's greedy episode as a pure ``dqn_apply``
+function over the PR-5 observation layout — ride on the same
+window-formation seam (``_form_window`` is the single place a plan is
+materialized into group slots) and are the ROADMAP follow-on.
+
+Parity guarantee
+----------------
+For any concurrent-mode trace, :class:`VectorizedClusterSimulator` and the
+Python heap produce matching :class:`~repro.online.simulator.SimResult`
+job records: **identical decisions** (placement order, slice ranges,
+units, backfill flags, window/dispatch counts) and times equal up to
+float32 resolution of the clock (the heap is the float64 reference,
+exactly as ``train_agent_scalar`` is for the training engine).
+``tests/test_vecsim.py`` pins this on randomized traces.
+
+Capacity limits raise eagerly: a trace longer than ``capacity`` raises
+``ValueError`` before the device call, and the engine carries an error
+lane (ready-ring / event-step overflow) that the wrapper turns into
+``RuntimeError`` — never silent truncation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import N_UNITS, solo_partition
+from repro.core.perfmodel_jax import UNIT_SIZES, solo_duration_table
+from repro.online.policies import TimeSharingPolicy
+from repro.online.simulator import Arrival, JobRecord, Segment, SimResult
+
+_INF = jnp.float32(jnp.inf)
+_BIG_SEQ = jnp.int32(2**30)
+_UNIT_IDX = jnp.arange(N_UNITS, dtype=jnp.int32)
+
+# constant aligned-buddy fit tensors, indexed by width-index into
+# UNIT_SIZES: _COVERED[u, s, :] = units a width-u slice at offset s spans;
+# _ALIGNED[u, s] = offset s is buddy-aligned and in range.  Precomputing
+# these keeps the per-iteration fit query a gather + reduce instead of
+# rebuilding an 8x8 mask from a traced width.
+_COVERED = jnp.asarray(np.stack([
+    (np.arange(N_UNITS)[None, :] >= np.arange(N_UNITS)[:, None])
+    & (np.arange(N_UNITS)[None, :] < np.arange(N_UNITS)[:, None] + w)
+    for w in UNIT_SIZES]))                    # (U, 8, 8) bool
+_ALIGNED = jnp.asarray(np.stack([
+    (np.arange(N_UNITS) % w == 0) & (np.arange(N_UNITS) + w <= N_UNITS)
+    for w in UNIT_SIZES]))                    # (U, 8) bool
+
+# error lanes (bitwise-OR'd): the wrapper raises RuntimeError on any
+ERR_READY_OVERFLOW = 1          # ready ring out of slots (cannot happen at
+                                # R = 2*window + 2; kept as an eager guard)
+ERR_EVENT_OVERFLOW = 2          # while_loop exceeded 2*capacity+4 events
+
+
+class TraceArrays(NamedTuple):
+    """One compiled trace: sorted arrival lanes, padded to ``capacity``."""
+
+    t: jnp.ndarray               # (A,) f32 — sorted arrival times
+    job: jnp.ndarray             # (A,) i32 — row into the job table
+    n: jnp.ndarray               # ()   i32 — live arrivals (rest padding)
+
+
+class JobTable(NamedTuple):
+    """Distinct-job lanes shared by every trace of a sweep."""
+
+    width: jnp.ndarray           # (J,) i32 — requested slice width (units)
+    widx: jnp.ndarray            # (J,) i32 — index into UNIT_SIZES
+    dur: jnp.ndarray             # (J,) f32 — solo makespan at that width
+                                 #           (float64 corun, cast once)
+    solo8: jnp.ndarray           # (J,) f32 — full-pod solo time (throughput)
+
+
+class _State(NamedTuple):
+    """The whole simulation as fixed-shape lanes (A = capacity, R = ring)."""
+
+    now: jnp.ndarray             # () f32
+    pend_lo: jnp.ndarray         # () i32 — first undispatched admitted arrival
+    pend_hi: jnp.ndarray         # () i32 — first un-admitted arrival
+    profiled: jnp.ndarray        # (J,) bool — repository bitmap (first sight)
+    free: jnp.ndarray            # (N_UNITS,) bool — idle slice units
+    # ready ring: dispatched groups waiting for units (FCFS by seq)
+    r_active: jnp.ndarray        # (R,) bool
+    r_seq: jnp.ndarray           # (R,) i32 — global FCFS order
+    r_win: jnp.ndarray           # (R,) i32 — dispatch window id
+    r_grp: jnp.ndarray           # (R,) i32 — row into the group log
+    next_seq: jnp.ndarray        # () i32
+    # claim table: outstanding FREE events
+    c_active: jnp.ndarray        # (N_UNITS,) bool
+    c_t1: jnp.ndarray            # (N_UNITS,) f32 — expiry
+    c_mask: jnp.ndarray          # (N_UNITS, N_UNITS) bool — claimed units
+    # busy-span accounting (union over units, like the heap)
+    n_busy: jnp.ndarray          # () i32
+    busy_t0: jnp.ndarray         # () f32
+    busy_time: jnp.ndarray       # () f32
+    slice_busy: jnp.ndarray      # (N_UNITS,) f32
+    # counters
+    dispatches: jnp.ndarray      # () i32
+    backfills: jnp.ndarray       # () i32
+    n_groups: jnp.ndarray        # () i32
+    place_seq: jnp.ndarray       # () i32 — placement order (timeline)
+    steps: jnp.ndarray           # () i32 — event steps retired
+    err: jnp.ndarray             # () i32 — ERR_* lanes
+    # group log (one row per dispatched solo group; <= A rows).  Kept to
+    # the minimum the host cannot rederive — width/duration live in the
+    # job table via g_job, and placement seq/start/backfill pack into one
+    # int lane — because every lane here is a (batch, A) while-loop carry.
+    g_arr: jnp.ndarray           # (A,) i32 — arrival index (A = unused)
+    g_job: jnp.ndarray           # (A,) i32 — row into the job table
+    g_t0: jnp.ndarray            # (A,) f32 — placement time
+    g_pack: jnp.ndarray          # (A,) i32 — (pseq << 4)|(start << 1)|bf
+
+
+class SweepSummary(NamedTuple):
+    """Per-trace metrics of a vmapped sweep (leading batch axis)."""
+
+    makespan: jnp.ndarray
+    throughput: jnp.ndarray
+    mean_wait: jnp.ndarray
+    p50_wait: jnp.ndarray
+    p99_wait: jnp.ndarray
+    mean_turnaround: jnp.ndarray
+    p95_turnaround: jnp.ndarray
+    utilization: jnp.ndarray
+    slice_utilization: jnp.ndarray
+    backfills: jnp.ndarray
+    dispatches: jnp.ndarray
+    err: jnp.ndarray
+
+
+# --------------------------------------------------------------- primitives
+
+def _fit_table(free):
+    """Per-width first-fit table on ``free``: ``(U, N_UNITS)`` bool.
+
+    The masked mirror of :func:`~repro.core.partition.find_offsets` for a
+    single slice (solo plans place exactly one): candidate starts are the
+    8 unit offsets, valid iff buddy-aligned (``start % width == 0``) and
+    every covered unit is idle.  Row ``u`` answers every fit query for
+    width ``UNIT_SIZES[u]`` this iteration; first-fit = argmax.
+    """
+    return _ALIGNED & jnp.all(free[None, None, :] | ~_COVERED, axis=2)
+
+
+def _claim_units(start, width):
+    return (_UNIT_IDX >= start) & (_UNIT_IDX < start + width)
+
+
+def _head(st: _State):
+    """FCFS head of the ready ring: min seq among active slots."""
+    seqs = jnp.where(st.r_active, st.r_seq, _BIG_SEQ)
+    return jnp.argmin(seqs).astype(jnp.int32), jnp.any(st.r_active)
+
+
+def _percentile(x, valid, q):
+    """Masked ``np.percentile(x[valid], q)`` (linear interpolation)."""
+    n = jnp.sum(valid)
+    s = jnp.sort(jnp.where(valid, x, _INF))
+    pos = jnp.float32(q / 100.0) * jnp.maximum(n - 1, 0).astype(jnp.float32)
+    lo = jnp.floor(pos).astype(jnp.int32)
+    hi = jnp.minimum(lo + 1, jnp.maximum(n - 1, 0))
+    frac = pos - lo.astype(jnp.float32)
+    lo = jnp.clip(lo, 0, x.shape[0] - 1)
+    hi = jnp.clip(hi, 0, x.shape[0] - 1)
+    out = s[lo] * (1.0 - frac) + s[hi] * frac
+    return jnp.where(n > 0, out, jnp.float32(0.0))
+
+
+# ------------------------------------------------------------ state updates
+#
+# Every update below is *predicated* on a ``do`` flag instead of wrapped in
+# ``lax.cond``: under ``vmap`` a batched cond lowers to a select that runs
+# BOTH branches for the whole batch, so masked single-path updates (scatter
+# to an out-of-bounds row with ``mode="drop"`` when ``do`` is False) are
+# what keep the lockstep body small.
+
+def _place(st: _State, jobs: JobTable, slot, start, backfilled, do) -> _State:
+    """Claim the first-fit range for ready slot ``slot`` (heap ``_place``),
+    iff ``do``."""
+    g = st.r_grp[slot]
+    j = st.g_job[g]
+    w = jobs.width[j]
+    dur = jobs.dur[j]
+    mask = _claim_units(start, w) & do
+    doi = jnp.where(do, jnp.int32(1), jnp.int32(0))
+    A = st.g_arr.shape[0]
+    gt = jnp.where(do, g, A)                 # drop target when masked off
+    ct = jnp.where(do, jnp.argmin(st.c_active).astype(jnp.int32), N_UNITS)
+    rt = jnp.where(do, slot, st.r_active.shape[0])
+    pack = ((st.place_seq << 4) | (start << 1)
+            | jnp.where(backfilled, jnp.int32(1), jnp.int32(0)))
+    return st._replace(
+        free=st.free & ~mask,
+        busy_t0=jnp.where(do & (st.n_busy == 0), st.now, st.busy_t0),
+        n_busy=st.n_busy + doi * w,
+        c_active=st.c_active.at[ct].set(True, mode="drop"),
+        c_t1=st.c_t1.at[ct].set(st.now + dur, mode="drop"),
+        c_mask=st.c_mask.at[ct].set(mask, mode="drop"),
+        slice_busy=st.slice_busy + jnp.where(mask, dur, 0.0),
+        g_t0=st.g_t0.at[gt].set(st.now, mode="drop"),
+        g_pack=st.g_pack.at[gt].set(pack, mode="drop"),
+        place_seq=st.place_seq + doi,
+        r_active=st.r_active.at[rt].set(False, mode="drop"),
+        backfills=st.backfills + jnp.where(do & backfilled, jnp.int32(1),
+                                           jnp.int32(0)),
+    )
+
+
+def _earliest_fit(st: _State, widx):
+    """Earliest time a width-``UNIT_SIZES[widx]`` slice fits, replaying
+    claim expiries — the in-graph mirror of the heap's ``_earliest_fit``
+    reservation.  Candidate times are the claim expiries themselves;
+    "first fit" is the min over fitting candidates, so no sort is needed
+    (availability at time t depends only on which claims expired by t)."""
+    # freed[i] = unit availability once every claim expiring by c_t1[i]
+    # has released; fits[i] = the head width first-fits there
+    rel = (st.c_active[None, :] & st.c_active[:, None]
+           & (st.c_t1[None, :] <= st.c_t1[:, None]))
+    freed = st.free[None, :] | jnp.any(rel[:, :, None] & st.c_mask[None],
+                                       axis=1)
+    fits = st.c_active & jnp.any(
+        _ALIGNED[widx][None, :]
+        & jnp.all(freed[:, None, :] | ~_COVERED[widx][None], axis=2), axis=1)
+    first = jnp.min(jnp.where(fits, st.c_t1, _INF))
+    last = jnp.max(jnp.where(st.c_active, st.c_t1, -_INF))
+    return jnp.where(jnp.any(fits), first,
+                     jnp.where(jnp.any(st.c_active), last, jnp.float32(0.0)))
+
+
+def _make_form_window(trace: TraceArrays, jobs: JobTable, window: int):
+    """Build the window-formation step (the plan seam): pop <= ``window``
+    pending submissions, run the first-sight protocol over the profiled
+    bitmap, and materialize the solo plan — first-sight groups ahead of
+    the planned remainder, both in submission order, exactly the schedule
+    order ``submission_protocol`` + ``to_placements`` produce."""
+
+    def form_window(st: _State, do) -> _State:
+        A = trace.t.shape[0]
+        J = st.profiled.shape[0]
+        k = jnp.where(do, jnp.minimum(jnp.int32(window),
+                                      st.pend_hi - st.pend_lo), jnp.int32(0))
+        i_w = jnp.arange(window, dtype=jnp.int32)
+        on = i_w < k
+        arr = jnp.clip(st.pend_lo + i_w, 0, A - 1)
+        jrow = trace.job[arr]
+
+        # first-sight marking, loop-free: a submission profiles iff its
+        # binary is new to the repository AND it is the first occurrence
+        # inside this window (duplicates see their predecessor's insert)
+        earlier_same = ((jrow[None, :] == jrow[:, None])
+                        & (i_w[None, :] < i_w[:, None]) & on[None, :])
+        fs = on & ~jnp.any(earlier_same, axis=1) & ~st.profiled[jrow]
+        profiled = st.profiled.at[jnp.where(on, jrow, J)].set(
+            True, mode="drop")
+
+        # placement order: first-sight solos first, then the planned
+        # remainder — each in submission order (stable two-pass ranks)
+        n_fs = jnp.sum(fs, dtype=jnp.int32)
+        rank_fs = jnp.cumsum(fs, dtype=jnp.int32) - 1
+        rank_pl = jnp.cumsum(~fs & on, dtype=jnp.int32) - 1
+        pos = jnp.where(fs, rank_fs, n_fs + rank_pl)
+
+        # group log rows n_groups .. n_groups+k-1, ordered by `pos`
+        grow = jnp.where(on, st.n_groups + pos, A)
+
+        # append k ready slots in group order: group q claims the q-th
+        # inactive ring slot in index order (seq follows placement order)
+        free_rank = jnp.cumsum(~st.r_active, dtype=jnp.int32) - 1
+        q = jnp.where(~st.r_active & (free_rank < k), free_rank,
+                      jnp.int32(-1))
+        sel = q >= 0
+        err = st.err | jnp.where(
+            jnp.sum(~st.r_active, dtype=jnp.int32) < k,
+            jnp.int32(ERR_READY_OVERFLOW), jnp.int32(0))
+
+        return st._replace(
+            profiled=profiled,
+            g_arr=st.g_arr.at[grow].set(arr, mode="drop"),
+            g_job=st.g_job.at[grow].set(jrow, mode="drop"),
+            r_active=st.r_active | sel,
+            r_seq=jnp.where(sel, st.next_seq + q, st.r_seq),
+            r_win=jnp.where(sel, st.dispatches, st.r_win),
+            r_grp=jnp.where(sel, st.n_groups + q, st.r_grp),
+            err=err, next_seq=st.next_seq + k, n_groups=st.n_groups + k,
+            pend_lo=st.pend_lo + k,
+            dispatches=st.dispatches + jnp.where(do, jnp.int32(1),
+                                                 jnp.int32(0)))
+
+    return form_window
+
+
+# -------------------------------------------------------------- trace runs
+
+def _build_run(window: int, backfill: bool, capacity: int):
+    """The jitted single-trace engine: ONE flat ``lax.while_loop``.
+
+    Each iteration performs exactly one micro-action of the heap's
+    event/service interleaving — place the FCFS head if it fits, else
+    (blocked head) admit the bounded EASY lookahead window, place the
+    lowest-seq eligible backfill candidate, form a window onto an idle
+    pod, or (no service progress) advance the clock to the next event and
+    drain everything coincident with it.  Flat-with-masked-updates is the
+    shape ``vmap`` wants: a batched nested ``while_loop`` runs every level
+    to the slowest lane's trip count (multiplicative lockstep), while a
+    single loop pays only the max of per-lane totals.
+
+    One-candidate-per-iteration backfill is *exactly* the heap's
+    multi-placement scan: a claim added by a backfill placement expires by
+    ``t_res`` and occupies units that were free when the scan started, so
+    replaying expiries after it yields the same ``t_res``, and a candidate
+    skipped for lack of space stays unplaceable once ``free`` shrinks —
+    re-scanning from the lowest seq is the same sequence of placements.
+    """
+    max_steps = 2 * capacity + 4
+
+    def run(trace: TraceArrays, jobs: JobTable) -> _State:
+        form_window = _make_form_window(trace, jobs, window)
+        A = capacity
+        R = 2 * window + 2
+        J = jobs.width.shape[0]
+        f32, i32 = jnp.float32, jnp.int32
+        st = _State(
+            now=f32(0.0), pend_lo=i32(0), pend_hi=i32(0),
+            profiled=jnp.zeros(J, dtype=bool),
+            free=jnp.ones(N_UNITS, dtype=bool),
+            r_active=jnp.zeros(R, dtype=bool),
+            r_seq=jnp.zeros(R, i32), r_win=jnp.zeros(R, i32),
+            r_grp=jnp.zeros(R, i32), next_seq=i32(0),
+            c_active=jnp.zeros(N_UNITS, dtype=bool),
+            c_t1=jnp.zeros(N_UNITS, f32),
+            c_mask=jnp.zeros((N_UNITS, N_UNITS), dtype=bool),
+            n_busy=i32(0), busy_t0=f32(0.0), busy_time=f32(0.0),
+            slice_busy=jnp.zeros(N_UNITS, f32),
+            dispatches=i32(0), backfills=i32(0), n_groups=i32(0),
+            place_seq=i32(0), steps=i32(0), err=i32(0),
+            g_arr=jnp.full(A, A, i32), g_job=jnp.zeros(A, i32),
+            g_t0=jnp.zeros(A, f32), g_pack=jnp.zeros(A, i32),
+        )
+
+        def live(st: _State):
+            return ((st.pend_hi < trace.n) | jnp.any(st.c_active)
+                    | (st.pend_lo < st.pend_hi) | jnp.any(st.r_active))
+
+        def body(st: _State) -> _State:
+            # The four service rules are mutually exclusive by their gates
+            # (rule 1 needs a fitting head; 2-3 a blocked head; 4 no head),
+            # so one merged form_window and one merged _place execute
+            # whichever rule fired — halving the per-iteration scatter
+            # count vs. one call per rule.
+            # --- rule 1: place the FCFS head if it first-fits
+            head, head_exists = _head(st)
+            hwidx = jobs.widx[st.g_job[st.r_grp[head]]]
+            ftab = _fit_table(st.free)
+            fh = ftab[hwidx]
+            start = jnp.argmax(fh).astype(jnp.int32)
+            place_head = head_exists & jnp.any(fh)
+            blocked = head_exists & ~place_head
+            pending = st.pend_hi > st.pend_lo
+            anyfree = jnp.any(st.free)
+            # rule 4 — the heap's `elif`: idle pod, no ready head
+            can_form = ~head_exists & pending & anyfree
+            slot, sstart, do_bf = head, start, jnp.bool_(False)
+            if backfill:
+                # rule 2 — bounded EASY lookahead: a blocked head admits at
+                # most one window past its own (all ready share its window)
+                max_win = jnp.max(jnp.where(st.r_active, st.r_win,
+                                            jnp.int32(-1)))
+                can_look = (blocked & pending & anyfree
+                            & (max_win == st.r_win[head]))
+            else:
+                can_look = jnp.bool_(False)
+            st = form_window(st, can_look | can_form)
+            if backfill:
+                # rule 3 — EASY backfill: lowest-seq non-head candidate
+                # that fits now and drains by the head's reserved start
+                # (free is untouched on the blocked path, so `ftab` holds)
+                can_scan = blocked & (jnp.sum(st.r_active,
+                                              dtype=jnp.int32) > 1)
+                t_res = _earliest_fit(st, hwidx)
+                jr = st.g_job[st.r_grp]
+                fr = ftab[jobs.widx[jr]]                  # (R, N_UNITS)
+                starts = jnp.argmax(fr, axis=1).astype(jnp.int32)
+                oks = jnp.any(fr, axis=1)
+                durs = jobs.dur[jr]
+                elig = (st.r_active & oks
+                        & (jnp.arange(R, dtype=jnp.int32) != head)
+                        & (st.now + durs <= t_res + 1e-9) & can_scan)
+                cand = jnp.argmin(jnp.where(elig, st.r_seq,
+                                            _BIG_SEQ)).astype(jnp.int32)
+                do_bf = can_scan & jnp.any(elig)
+                slot = jnp.where(place_head, head, cand)
+                sstart = jnp.where(place_head, start, starts[cand])
+            st = _place(st, jobs, slot, sstart, do_bf, place_head | do_bf)
+            progress = place_head | can_look | do_bf | can_form
+
+            # --- no service progress: advance the clock one event batch
+            adv = ~progress
+            t_arr = jnp.where(st.pend_hi < trace.n,
+                              trace.t[jnp.clip(st.pend_hi, 0, A - 1)], _INF)
+            t_free = jnp.min(jnp.where(st.c_active, st.c_t1, _INF))
+            now = jnp.where(adv, jnp.minimum(t_arr, t_free), st.now)
+            # drain every coincident event: admit all arrivals with t<=now.
+            # The trace is sorted and everything <= the old clock is already
+            # admitted, so the new cursor is just the count of t <= now
+            # (padding lanes are +inf and never admit).
+            pend_hi = jnp.where(
+                adv, jnp.sum(trace.t <= now, dtype=jnp.int32), st.pend_hi)
+            # ... and release every claim with t1 <= now
+            rel = adv & st.c_active & (st.c_t1 <= now)
+            freed = jnp.any(rel[:, None] & st.c_mask, axis=0)
+            w_rel = jnp.sum(jnp.where(rel[:, None], st.c_mask, False),
+                            dtype=jnp.int32)
+            n_busy = st.n_busy - w_rel
+            busy_time = st.busy_time + jnp.where(
+                (n_busy == 0) & (w_rel > 0), now - st.busy_t0, 0.0)
+            steps = st.steps + jnp.where(adv, jnp.int32(1), jnp.int32(0))
+            return st._replace(
+                now=now, pend_hi=pend_hi, free=st.free | freed,
+                c_active=st.c_active & ~rel, n_busy=n_busy,
+                busy_time=busy_time, steps=steps,
+                err=st.err | jnp.where(steps > max_steps,
+                                       jnp.int32(ERR_EVENT_OVERFLOW),
+                                       jnp.int32(0)))
+
+        return jax.lax.while_loop(lambda s: live(s) & (s.err == 0), body, st)
+
+    return run
+
+
+def _records(st: _State, trace: TraceArrays, jobs: JobTable):
+    """Per-arrival dispatch/finish lanes scattered from the group log."""
+    A = trace.t.shape[0]
+    dur = jobs.dur[st.g_job]                  # junk on unused rows; dropped
+    dispatch = jnp.zeros(A, jnp.float32).at[st.g_arr].set(
+        st.g_t0, mode="drop")
+    finish = jnp.zeros(A, jnp.float32).at[st.g_arr].set(
+        st.g_t0 + dur, mode="drop")
+    return dispatch, finish
+
+
+def _summary(st: _State, trace: TraceArrays, jobs: JobTable) -> SweepSummary:
+    A = trace.t.shape[0]
+    valid = jnp.arange(A) < trace.n
+    dispatch, finish = _records(st, trace, jobs)
+    wait = dispatch - trace.t
+    turnaround = finish - trace.t
+    makespan = jnp.max(jnp.where(valid, finish, 0.0))
+    solo = jnp.sum(jnp.where(valid, jobs.solo8[trace.job], 0.0))
+    nz = makespan > 0
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return SweepSummary(
+        makespan=makespan,
+        throughput=jnp.where(nz, solo / makespan, 0.0),
+        mean_wait=jnp.sum(jnp.where(valid, wait, 0.0)) / n,
+        p50_wait=_percentile(wait, valid, 50.0),
+        p99_wait=_percentile(wait, valid, 99.0),
+        mean_turnaround=jnp.sum(jnp.where(valid, turnaround, 0.0)) / n,
+        p95_turnaround=_percentile(turnaround, valid, 95.0),
+        utilization=jnp.where(nz, st.busy_time / makespan, 0.0),
+        slice_utilization=jnp.where(
+            nz, jnp.sum(st.slice_busy) / (N_UNITS * makespan), 0.0),
+        backfills=st.backfills,
+        dispatches=st.dispatches,
+        err=st.err,
+    )
+
+
+# ------------------------------------------------------------ host wrapper
+
+def compile_trace(trace: list[Arrival], capacity: int,
+                  names: dict[str, int] | None = None,
+                  jobs: list | None = None) -> tuple[TraceArrays, list]:
+    """Sort + pad one trace into :class:`TraceArrays`.
+
+    ``names``/``jobs`` accumulate the distinct-job table across traces of a
+    sweep (keyed by profile name, 1:1 with the repository's binary key), so
+    a whole batch shares one :class:`JobTable`.  Returns the sorted
+    arrival list alongside (the wrapper builds ``JobRecord``\\ s from it).
+    """
+    if len(trace) > capacity:
+        raise ValueError(
+            f"trace has {len(trace)} arrivals > capacity {capacity}; "
+            f"the event table is fixed-size — raise `capacity`")
+    order = sorted(trace, key=lambda a: a.t)
+    names = {} if names is None else names
+    jobs = [] if jobs is None else jobs
+    rows = []
+    for a in order:
+        r = names.setdefault(a.profile.name, len(names))
+        if r == len(jobs):
+            jobs.append(a.profile)
+        rows.append(r)
+    t = np.full(capacity, np.inf, np.float32)
+    t[:len(order)] = [a.t for a in order]
+    job = np.zeros(capacity, np.int32)
+    job[:len(rows)] = rows
+    return TraceArrays(t=jnp.asarray(t), job=jnp.asarray(job),
+                       n=jnp.int32(len(order))), order
+
+
+def build_job_table(jobs: list) -> JobTable:
+    """Float64 per-job solo durations at the requested width, cast once —
+    the heap's per-group ``corun`` predictions for solo placements."""
+    table = solo_duration_table(jobs)                 # (J, U) float64
+    width = np.array([j.requested_units for j in jobs], np.int32)
+    widx = np.searchsorted(np.asarray(UNIT_SIZES), width).astype(np.int32)
+    dur = table[np.arange(len(jobs)), widx]
+    solo8 = np.array([j.solo_time() for j in jobs], np.float64)
+    return JobTable(width=jnp.asarray(width), widx=jnp.asarray(widx),
+                    dur=jnp.asarray(dur, jnp.float32),
+                    solo8=jnp.asarray(solo8, jnp.float32))
+
+
+class VectorizedClusterSimulator:
+    """Drop-in vectorized engine for solo-placement policies.
+
+    ``run(trace)`` returns a :class:`~repro.online.simulator.SimResult`
+    built from the device lanes (records in sorted-trace order, timeline
+    in placement order — the same shapes the heap produces), so every
+    downstream consumer (summaries, percentiles, benchmarks) is shared.
+    ``sweep(traces)`` evaluates a batch in one vmapped call (sharded over
+    host devices via ``pmap`` when ``devices`` is given) and returns
+    per-trace :class:`SweepSummary` lanes.
+
+    ``policy`` must be a :class:`~repro.online.policies.TimeSharingPolicy`
+    (or ``None``, same semantics): the engine materializes that plan
+    in-graph.  Use :meth:`supports` to route other policies to the heap.
+    No ``on_tick``/re-training (host callbacks cannot run in-graph) and no
+    ``mode="blocking"`` — the heap remains the only path for both.
+    """
+
+    def __init__(self, policy=None, window: int = 8, backfill: bool = True,
+                 capacity: int = 256):
+        if not self.supports(policy):
+            raise ValueError(
+                f"vectorized engine serves solo-placement plans "
+                f"(TimeSharingPolicy); got {type(policy).__name__}")
+        assert window >= 1
+        self.policy = policy if policy is not None else TimeSharingPolicy()
+        self.window = window
+        self.backfill = backfill
+        self.capacity = capacity
+        self._run1 = jax.jit(_build_run(window, backfill, capacity))
+        self._sweepfn = jax.jit(jax.vmap(
+            lambda tr, jt: _summary(
+                _build_run(window, backfill, capacity)(tr, jt), tr, jt),
+            in_axes=(0, None)))
+
+    @staticmethod
+    def supports(policy) -> bool:
+        """Policies this engine serves with decision-level heap parity."""
+        return policy is None or isinstance(policy, TimeSharingPolicy)
+
+    # ---------------------------------------------------------------- run
+
+    def run(self, trace: list[Arrival]) -> SimResult:
+        res = SimResult(policy=getattr(self.policy, "name", "time_sharing"),
+                        window=self.window, jobs=[], mode="concurrent")
+        if not trace:
+            return res
+        jobs: list = []
+        tr, order = compile_trace(trace, self.capacity, jobs=jobs)
+        jt = build_job_table(jobs)
+        st = jax.block_until_ready(self._run1(tr, jt))
+        self._check_err(int(st.err))
+
+        g_n = int(st.n_groups)
+        g_arr = np.asarray(st.g_arr)[:g_n]
+        g_t0 = np.asarray(st.g_t0)[:g_n]
+        g_job = np.asarray(st.g_job)[:g_n]
+        g_dur = np.asarray(jt.dur)[g_job]
+        g_w = np.asarray(jt.width)[g_job]
+        pack = np.asarray(st.g_pack)[:g_n]
+        g_pseq, g_start, g_bf = pack >> 4, (pack >> 1) & 7, (pack & 1) == 1
+        labels = {w: solo_partition(int(w)).label for w in set(g_w.tolist())}
+
+        records = [JobRecord(binary=a.binary, name=a.profile.name,
+                             arrival=a.t, solo_time=a.profile.solo_time())
+                   for a in order]
+        for g in range(g_n):
+            rec = records[int(g_arr[g])]
+            rec.dispatch = float(g_t0[g])
+            rec.finish = float(g_t0[g] + g_dur[g])
+            rec.group_size = 1
+            rec.partition = labels[int(g_w[g])]
+            rec.units = int(g_w[g])
+            rec.backfilled = bool(g_bf[g])
+        res.jobs = records
+        for g in np.argsort(g_pseq):
+            res.timeline.append(Segment(
+                t0=float(g_t0[g]), t1=float(g_t0[g] + g_dur[g]), jobs=1,
+                partition=labels[int(g_w[g])],
+                slices=((int(g_start[g]), int(g_w[g])),),
+                backfilled=bool(g_bf[g])))
+        res.busy_time = float(st.busy_time)
+        res.dispatches = int(st.dispatches)
+        res.backfills = int(st.backfills)
+        res.slice_busy_s = [float(x) for x in np.asarray(st.slice_busy)]
+        return res
+
+    # -------------------------------------------------------------- sweep
+
+    def sweep(self, traces: list[list[Arrival]],
+              devices: list | None = None) -> SweepSummary:
+        """Evaluate ``traces`` in one device call (one compiled program).
+
+        With ``devices`` (>= 2 and batch divisible), the batch axis is
+        sharded across host devices via ``pmap`` — the CPU-CI parallelism
+        of ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+        """
+        if not traces:
+            raise ValueError("empty sweep")
+        names: dict[str, int] = {}
+        jobs: list = []
+        compiled = [compile_trace(t, self.capacity, names, jobs)[0]
+                    for t in traces]
+        jt = build_job_table(jobs)
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *compiled)
+        n_dev = len(devices) if devices else 1
+        if n_dev > 1 and len(traces) % n_dev == 0:
+            shard = jax.tree.map(
+                lambda x: x.reshape((n_dev, len(traces) // n_dev)
+                                    + x.shape[1:]), batch)
+            pfn = jax.pmap(lambda tr: self._sweepfn(tr, jt),
+                           devices=devices)
+            out = jax.block_until_ready(pfn(shard))
+            out = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), out)
+        else:
+            out = jax.block_until_ready(self._sweepfn(batch, jt))
+        self._check_err(int(np.max(np.asarray(out.err))))
+        return out
+
+    @staticmethod
+    def _check_err(err: int) -> None:
+        if err & ERR_READY_OVERFLOW:
+            raise RuntimeError("vectorized engine: ready ring overflow")
+        if err & ERR_EVENT_OVERFLOW:
+            raise RuntimeError("vectorized engine: event-step budget "
+                               "exceeded (stuck trace?)")
+        if err:
+            raise RuntimeError(f"vectorized engine: error lanes {err:#x}")
