@@ -21,7 +21,14 @@ ratio regressions):
     comparison of PR 2);
   * the vectorized engine's recorded vmapped sweep (``vectorized_sim``)
     stays at or above ``VECSIM_SPEEDUP_FLOOR`` x the Python heap's
-    traces/sec at batch >= 64.
+    traces/sec at batch >= 64;
+  * the fleet grid (``fleet_scale``) is recorded at or above
+    ``FLEET_MIN_ARRIVALS`` arrivals, the best router's p99 wait on the
+    fragmented heterogeneous fleet stays at or above ``FLEET_P99_FLOOR``
+    x hash routing's (smart placement must not lose to the stateless
+    baseline), and the recorded ``single_pod_parity`` check — the
+    ``pods=(8,)`` fleet bit-matching the committed single-pod cells —
+    holds on every family.
 
 A *missing* optional section is a warning, not a failure: the trajectory
 is grown incrementally via ``online_sim --section <name>`` merges, and a
@@ -44,6 +51,8 @@ ARRIVAL_FLOOR = 1.0       # committed rl_context/rl_profile_only, fragmented
 PER_DRIFT = 0.15          # |prioritized - uniform| / uniform at 1000 ep
 VECSIM_SPEEDUP_FLOOR = 5.0  # committed vmapped-sweep traces/sec vs heap
 VECSIM_MIN_BATCH = 64     # sweep batch the speedup must be recorded at
+FLEET_P99_FLOOR = 1.0     # best router p99 vs hash, fragmented fleet
+FLEET_MIN_ARRIVALS = 10_000  # committed fleet grid scale (p50/p99 regime)
 
 
 def _load(path: str, failures: list[str]) -> dict | None:
@@ -101,6 +110,29 @@ def gate_online(bench: dict, failures: list[str],
             failures.append(f"online: vectorized sweep speedup vs heap = "
                             f"{speedup:.2f}x < floor "
                             f"{VECSIM_SPEEDUP_FLOOR:.1f}x")
+    fleet = bench.get("fleet_scale") or {}
+    if not fleet:
+        _warn_missing("online: fleet_scale", warnings)
+    else:
+        n_arr = fleet.get("n_arrivals", 0)
+        if n_arr < FLEET_MIN_ARRIVALS:
+            failures.append(f"online: fleet_scale recorded at {n_arr} "
+                            f"arrivals < {FLEET_MIN_ARRIVALS}")
+        frag = fleet.get("families", {}).get("fragmented", {})
+        ratios = frag.get("ratios", {})
+        best = max((r.get("time_sharing", 0.0) for r in ratios.values()),
+                   default=0.0)
+        if best < FLEET_P99_FLOOR:
+            failures.append(f"online: best router p99 vs hash on the "
+                            f"fragmented fleet = {best:.3f}x < floor "
+                            f"{FLEET_P99_FLOOR:.2f}x")
+        parity = fleet.get("single_pod_parity") or {}
+        if not parity:
+            failures.append("online: fleet_scale.single_pod_parity missing")
+        for fam, ok in parity.items():
+            if not ok:
+                failures.append(f"online: pods=(8,) fleet diverges from the "
+                                f"committed single-pod {fam} cell")
 
 
 def gate_train(bench: dict, failures: list[str],

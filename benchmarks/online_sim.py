@@ -72,7 +72,8 @@ import sys
 import time
 
 from benchmarks.bench_gate import (
-    ARRIVAL_FLOOR, CONC_BLK_FLOOR, FRAG_MARGIN, VECSIM_SPEEDUP_FLOOR,
+    ARRIVAL_FLOOR, CONC_BLK_FLOOR, FLEET_MIN_ARRIVALS, FLEET_P99_FLOOR,
+    FRAG_MARGIN, VECSIM_SPEEDUP_FLOOR,
 )
 from benchmarks.common import emit, missing_keys
 from repro.core import (
@@ -81,15 +82,54 @@ from repro.core import (
 )
 from repro.core.agent import DQNConfig
 from repro.core.env import context_dim
+from repro.core.partition import N_UNITS
 from repro.online import (
     ClusterSimulator, GreedyPackerPolicy, OnlineRetrainer, RLDispatchPolicy,
-    StaticPartitionPolicy, TRACE_FAMILIES, TimeSharingPolicy,
-    VectorizedClusterSimulator, default_retrain_train_config,
+    SimConfig, StaticPartitionPolicy, TRACE_FAMILIES, TimeSharingPolicy,
+    VectorizedClusterSimulator, VectorizedFleetSimulator,
+    default_retrain_train_config,
 )
 
 REQUIRED_KEYS = ("window", "n_arrivals", "traces", "rl_vs_time_sharing",
                  "dispatch_comparison", "arrival_aware", "sim_wall",
-                 "vectorized_sim", "note")
+                 "vectorized_sim", "fleet_scale", "note")
+
+# fleet-scale grid: trace family -> pod widths (heterogeneous 4/8 fleets
+# stress width eligibility and the frag router; uniform 8s isolate pure
+# load balancing).  Arrival rates are capacity-scaled so `load` keeps its
+# single-pod meaning across fleet shapes.
+FLEET_FAMILIES = {"poisson": (8, 8, 8, 8), "fragmented": (8, 8, 4, 4)}
+FLEET_ROUTERS = ("hash", "least_loaded", "frag")
+FLEET_LOAD = 0.85
+
+FLEET_NOTE = (
+    "routers x {time_sharing, rl(frozen profile-only agent)} on capacity-"
+    "scaled traces (load keeps its single-pod meaning: 1.0 saturates the "
+    "whole fleet); headline metric is p50/p99 wait — tail latency, not "
+    "makespan, is what routing moves at fleet scale; *_vs_hash_p99 > 1 "
+    "means the router beats tenant-affine hashing (hash is lumpy over a "
+    "small tenant pool, so load-aware routers win big at high load); "
+    "vectorized_100k serves 10^5 arrivals through the vmapped pod-axis "
+    "engine (hash routing is trace-computable, so the fleet splits into "
+    "independent per-pod lanes); single_pod_parity re-runs each committed "
+    "traces family under SimConfig(pods=(8,)) and requires key-by-key "
+    "exact equality with the committed single-pod cells — the fleet "
+    "refactor must not move the legacy numbers")
+
+
+def _hash_split_max(trace, pods, seed=0) -> int:
+    """Largest per-pod sub-stream under hash routing — sizes the
+    vectorized fleet's per-lane capacity."""
+    from repro.online.router import FleetView, PodView, make_router
+    router = make_router("hash", seed)
+    view = FleetView(pods=tuple(
+        PodView(idx=i, width=w, free=(True,) * w, pending=0, ready=0,
+                queue_units=0, busy_units=0) for i, w in enumerate(pods)))
+    counts: dict[int, int] = {}
+    for a in trace:
+        p = router.route(a, view)
+        counts[p] = counts.get(p, 0) + 1
+    return max(counts.values())
 
 ARRIVAL_NOTE = (
     "frozen-agent observation-mode comparison on identical traces: "
@@ -137,6 +177,97 @@ def _sim_wall_block(traces: dict) -> dict:
                   for pol, cell in fam_out.items()
                   if isinstance(cell, dict) and "sim_wall_s" in cell}
             for fam, fam_out in traces.items()}
+
+
+def _fleet_cell(policy, trace, window, pods, router, seed=0):
+    t0 = time.perf_counter()
+    cfg = SimConfig(window=window, pods=pods, router=router,
+                    router_seed=seed)
+    res = ClusterSimulator(policy, cfg).run(trace)
+    out = res.summary()
+    out["sim_wall_s"] = time.perf_counter() - t0
+    out["engine"] = "heap"
+    return out
+
+
+def _fleet_scale(zoo, agent, env_cfg, window, n, seed,
+                 load=FLEET_LOAD, n_vec=100_000):
+    """The fleet-scale grid: routers x policies per family, the 10^5
+    vectorized cell, and per-family p99 ratios vs hash routing."""
+    families: dict = {}
+    for i, (fam, pods) in enumerate(FLEET_FAMILIES.items()):
+        cap = sum(pods) / N_UNITS
+        trace = TRACE_FAMILIES[fam](zoo, n=n, load=load, seed=seed + i,
+                                    capacity=cap)
+        cells: dict = {}
+        for router in FLEET_ROUTERS:
+            cells[router] = {
+                "time_sharing": _fleet_cell(TimeSharingPolicy(), trace,
+                                            window, pods, router, seed),
+                "rl": _fleet_cell(RLDispatchPolicy(agent, env_cfg), trace,
+                                  window, pods, router, seed),
+            }
+            emit(f"fleet_{fam}_{router}",
+                 cells[router]["rl"]["sim_wall_s"] * 1e6 / n,
+                 f"ts_p99={cells[router]['time_sharing']['p99_wait_s']:.0f}s")
+        ratios = {
+            f"{r}_vs_hash_p99": {
+                pol: (cells["hash"][pol]["p99_wait_s"]
+                      / max(cells[r][pol]["p99_wait_s"], 1e-9))
+                for pol in ("time_sharing", "rl")}
+            for r in FLEET_ROUTERS if r != "hash"}
+        families[fam] = {"pods": list(pods), "cells": cells,
+                         "ratios": ratios}
+    vec_cell = None
+    if n_vec:
+        pods = FLEET_FAMILIES["poisson"]
+        cap = sum(pods) / N_UNITS
+        trace = TRACE_FAMILIES["poisson"](zoo, n=n_vec, load=load,
+                                          seed=seed, capacity=cap)
+        capacity = int(1.02 * _hash_split_max(trace, pods, seed)) + 8
+        t0 = time.perf_counter()
+        vec = VectorizedFleetSimulator(
+            TimeSharingPolicy(),
+            SimConfig(window=window, pods=pods, router="hash",
+                      router_seed=seed),
+            capacity=capacity)
+        vec_cell = vec.run(trace).summary()
+        vec_cell["sim_wall_s"] = time.perf_counter() - t0
+        vec_cell["engine"] = "vectorized"
+        vec_cell["n_arrivals"] = n_vec
+        vec_cell["family"] = "poisson"
+        vec_cell["lane_capacity"] = capacity
+        emit("fleet_vectorized_100k", vec_cell["sim_wall_s"] * 1e6 / n_vec,
+             f"p99={vec_cell['p99_wait_s']:.0f}s")
+    return {
+        "n_arrivals": n, "load": load, "seed": seed, "window": window,
+        "routers": list(FLEET_ROUTERS),
+        "families": families,
+        "vectorized_100k": vec_cell,
+        "note": FLEET_NOTE,
+    }
+
+
+def _single_pod_parity(zoo, bench) -> dict:
+    """Re-run each committed traces family on a ``pods=(8,)`` fleet and
+    require exact key-by-key equality with the committed single-pod
+    ``time_sharing`` cells (floats through JSON round-trip exactly)."""
+    out: dict = {}
+    n, load = bench["n_arrivals"], bench["load"]
+    seed, window = bench["seed"], bench["window"]
+    skip = {"sim_wall_s", "engine", "schema", "n_pods", "pods", "router",
+            "refits", "p50_wait_s", "p99_wait_s"}
+    for i, fam in enumerate(bench["traces"]):
+        cell = bench["traces"][fam].get("time_sharing")
+        if not isinstance(cell, dict):
+            continue
+        trace = TRACE_FAMILIES[fam](zoo, n=n, load=load, seed=seed + i)
+        fresh = ClusterSimulator(
+            TimeSharingPolicy(),
+            SimConfig(window=window, pods=(N_UNITS,))).run(trace).summary()
+        keys = [k for k in cell if k not in skip]
+        out[fam] = all(fresh.get(k) == cell[k] for k in keys)
+    return out
 
 
 def _vectorized_sim(zoo, window, n, load, seed, batch=64, capacity=128):
@@ -338,7 +469,8 @@ def main() -> None:
     ap.add_argument("--sweep-batch", type=int, default=64,
                     help="vmapped batch size for the vectorized_sim sweep")
     ap.add_argument("--section",
-                    choices=("arrival_aware", "vectorized_sim", "sim_wall"),
+                    choices=("arrival_aware", "vectorized_sim", "sim_wall",
+                             "fleet_scale"),
                     default=None,
                     help="recompute one section and merge it into the "
                          "committed --bench-json instead of a full run")
@@ -359,6 +491,41 @@ def main() -> None:
             json.dump(bench, f, indent=1)
         cells = sum(len(v) for v in bench["sim_wall"].values())
         print(f"merged sim_wall into {out}: {cells} policy×family cells")
+        return
+
+    if args.section == "fleet_scale":
+        with open(args.bench_json) as f:
+            bench = json.load(f)
+        window = args.window or bench["window"]
+        n = args.arrivals or 10_000
+        seed = bench.get("seed", args.seed)
+        episodes = args.episodes or bench["train_episodes"]
+        zoo = make_zoo(dryrun_dir=None)
+        env_cfg = EnvConfig(window=window, c_max=4)
+        print("name,us_per_call,derived")
+        # deterministic replication of the committed run's profile-only
+        # agent (same replication path as --section arrival_aware)
+        agent, _ = train_agent(
+            zoo, env_cfg,
+            TrainConfig(episodes=episodes, eval_every=max(50, episodes // 4),
+                        seed=seed,
+                        dqn=DQNConfig(eps_decay_steps=episodes * 6)))
+        section = _fleet_scale(zoo, agent, env_cfg, window, n, seed)
+        section["single_pod_parity"] = _single_pod_parity(zoo, bench)
+        bench["fleet_scale"] = section
+        frag = section["families"]["fragmented"]["ratios"]
+        best = max(frag[k]["time_sharing"] for k in frag)
+        acc = bench.setdefault("acceptance", {})
+        acc["fleet_best_router_beats_hash_on_fragmented"] = (
+            best >= FLEET_P99_FLOOR)
+        acc["fleet_single_pod_parity"] = all(
+            section["single_pod_parity"].values())
+        out = args.out or args.bench_json
+        with open(out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"merged fleet_scale into {out}: best/hash p99 on fragmented "
+              f"= {best:.2f}x (floor {FLEET_P99_FLOOR:.1f}), parity "
+              f"{section['single_pod_parity']}")
         return
 
     if args.section == "vectorized_sim":
@@ -470,6 +637,7 @@ def main() -> None:
                                         seed=args.ctx_seed)
     arrival = None
     ctx_smoke_tp = None
+    fleet_smoke = None
     if args.smoke:
         # plumbing guard only: the context agent must serve the
         # fragmentation-stressing trace end to end (committed performance
@@ -480,6 +648,35 @@ def main() -> None:
         ctx_smoke_tp = _simulate(RLDispatchPolicy(ctx_agent, ctx_cfg),
                                  frag_trace, window)["throughput"]
         emit("arrival_aware_smoke", 0.0, f"ctx_tp={ctx_smoke_tp:.3f}")
+        # fleet plumbing guard: every router serves a heterogeneous
+        # (8, 4) fleet end to end with pod-local claims, and the
+        # vectorized fleet engine matches the heap on the hash cell
+        fleet_trace = TRACE_FAMILIES["fragmented"](
+            zoo, n=n, load=args.load, seed=args.seed, capacity=1.5)
+        pods = (N_UNITS, 4)
+        served, p99 = True, {}
+        for router_name in FLEET_ROUTERS:
+            fres = ClusterSimulator(
+                TimeSharingPolicy(),
+                SimConfig(window=window, pods=pods,
+                          router=router_name)).run(fleet_trace)
+            served &= all(s + w <= fres.pods[seg.pod]
+                          for seg in fres.timeline for s, w in seg.slices)
+            served &= all(r.finish == r.finish for r in fres.jobs)  # no NaN
+            p99[router_name] = fres.p99_wait
+        vres = VectorizedFleetSimulator(
+            TimeSharingPolicy(),
+            SimConfig(window=window, pods=pods, router="hash"),
+            capacity=max(64, 2 * n)).run(fleet_trace)
+        tol = max(1e-3 * max(p99["hash"], 1.0), 1e-2)
+        fleet_smoke = {
+            "pods": list(pods), "p99_wait_s": p99, "served": served,
+            "vec_heap_p99_gap_s": abs(vres.p99_wait - p99["hash"]),
+            "vec_parity": abs(vres.p99_wait - p99["hash"]) <= tol,
+        }
+        emit("fleet_smoke", 0.0,
+             f"p99_hash={p99['hash']:.1f}s "
+             f"gap={fleet_smoke['vec_heap_p99_gap_s']:.4f}s")
     else:
         arrival = _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent,
                                  families, n, args.load, args.seed, window,
@@ -489,6 +686,12 @@ def main() -> None:
     # CI exercises the sweep path via tests/test_vecsim.py instead)
     vec_section = None if args.smoke else _vectorized_sim(
         zoo, window, n, args.load, args.seed, batch=args.sweep_batch)
+
+    # fleet-scale grid rides the full run too (frozen profile-only agent)
+    fleet = None if args.smoke else _fleet_scale(
+        zoo, agent, env_cfg, window,
+        2_000 if args.fast else 10_000, args.seed,
+        n_vec=0 if args.fast else 100_000)
 
     rl_vs_ts = {t: traces[t]["rl_retrain_vs_time_sharing"] for t in traces}
     dispatch_cmp = {t: traces[t]["concurrent_vs_blocking"] for t in traces}
@@ -508,6 +711,7 @@ def main() -> None:
         "arrival_aware": arrival,
         "sim_wall": _sim_wall_block(traces),
         "vectorized_sim": vec_section,
+        "fleet_scale": fleet,
         "acceptance": {
             "arrival_aware_fragmented_ctx_ge_profile_only": (
                 arrival is not None
@@ -544,6 +748,15 @@ def main() -> None:
                  "summary are claimed-unit-seconds over N_UNITS x makespan"),
     }
 
+    if fleet is not None:
+        fleet["single_pod_parity"] = _single_pod_parity(zoo, result)
+        frag_r = fleet["families"]["fragmented"]["ratios"]
+        best = max(frag_r[k]["time_sharing"] for k in frag_r)
+        result["acceptance"]["fleet_best_router_beats_hash_on_fragmented"] = (
+            best >= FLEET_P99_FLOOR)
+        result["acceptance"]["fleet_single_pod_parity"] = all(
+            fleet["single_pod_parity"].values())
+
     if args.smoke:
         failures = []
         ratio = rl_vs_ts.get("poisson", 0.0)
@@ -562,6 +775,15 @@ def main() -> None:
         if not (ctx_smoke_tp and ctx_smoke_tp > 0):
             failures.append(f"context agent failed to serve the fragmented "
                             f"smoke trace (tp={ctx_smoke_tp})")
+        if fleet_smoke is not None:
+            if not fleet_smoke["served"]:
+                failures.append("fleet smoke: a router produced cross-pod "
+                                "or unserved work on the (8, 4) fleet")
+            if not fleet_smoke["vec_parity"]:
+                failures.append(
+                    f"fleet smoke: vectorized fleet p99 diverges from heap "
+                    f"by {fleet_smoke['vec_heap_p99_gap_s']:.4f}s on the "
+                    f"hash cell")
         missing = missing_keys(args.bench_json, REQUIRED_KEYS)
         if missing:
             failures.append(f"{args.bench_json} missing keys: {missing}")
@@ -575,6 +797,8 @@ def main() -> None:
               f"(floor {args.ratio_floor:.2f}), fragmented conc/blk "
               f"{frag_ratio:.3f} (margin {args.frag_margin:.2f}), "
               f"context agent serves fragmented (tp={ctx_smoke_tp:.3f}), "
+              f"fleet (8,4) served by all routers (vec/heap p99 gap "
+              f"{fleet_smoke['vec_heap_p99_gap_s']:.4f}s), "
               f"{args.bench_json} keys present")
         return
 

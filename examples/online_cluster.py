@@ -16,7 +16,11 @@ full-pod jobs, or ``--blocking`` for the whole-pod PR-3 dispatch mode.
 ``--context`` trains the agent on the arrival-aware observation (profiles
 + busy-unit mask + queue ages + pending depth — docs/observation.md) and
 the simulator then feeds it the real cluster snapshot at every dispatch
-window.
+window.  ``--pods 8,8,4,4 --router frag`` serves the trace on a
+heterogeneous four-pod fleet instead of one pod — each arrival is routed
+to a pod at its arrival instant, then dispatched by the unchanged
+per-pod path (``--pods 8`` is the single-pod default, bit-compatible
+with earlier PRs).
 
     PYTHONPATH=src python examples/online_cluster.py [--trace fragmented]
 """
@@ -27,7 +31,8 @@ from repro.core import EnvConfig, TrainConfig, make_zoo, train_agent
 from repro.core.agent import DQNConfig
 from repro.online import (
     ClusterSimulator, GreedyPackerPolicy, OnlineRetrainer, RLDispatchPolicy,
-    TRACE_FAMILIES, TimeSharingPolicy, default_retrain_train_config,
+    ROUTERS, SimConfig, TRACE_FAMILIES, TimeSharingPolicy,
+    default_retrain_train_config,
 )
 
 
@@ -45,8 +50,15 @@ def main():
                     help="arrival-aware observation: train with sampled "
                          "cluster-state contexts and serve with the "
                          "simulator's real dispatch snapshots")
+    ap.add_argument("--pods", default="8",
+                    help="comma-separated slice widths, one per pod "
+                         "(e.g. 8,8,4,4); the default single 8 is the "
+                         "classic one-pod cluster")
+    ap.add_argument("--router", choices=sorted(ROUTERS), default="hash",
+                    help="fleet router assigning each arrival a pod")
     args = ap.parse_args()
     mode = "blocking" if args.blocking else "concurrent"
+    pods = tuple(int(w) for w in args.pods.split(","))
 
     zoo = make_zoo()
     env_cfg = EnvConfig(window=args.window, c_max=4, obs_context=args.context)
@@ -62,32 +74,37 @@ def main():
           f"{hist[-1]['eval_throughput']:.3f} "
           f"heldout_tp={hist[-1]['heldout_throughput']:.3f}")
 
+    fleet_cap = sum(pods) / max(pods)       # full-pod equivalents
     trace = TRACE_FAMILIES[args.trace](zoo, n=args.arrivals, load=args.load,
-                                       seed=0)
+                                       seed=0, capacity=fleet_cap)
     print(f"\ntrace '{args.trace}': {len(trace)} arrivals over "
-          f"{trace[-1].t/3600:.2f} simulated hours (load {args.load})")
+          f"{trace[-1].t/3600:.2f} simulated hours (load {args.load}, "
+          f"fleet {pods} via '{args.router}' router)")
+
+    def cfg(tick=None):
+        return SimConfig(window=args.window, mode=mode, pods=pods,
+                         router=args.router, tick_interval_s=tick)
 
     results = {}
     results["time_sharing"] = ClusterSimulator(
-        TimeSharingPolicy(), window=args.window, mode=mode).run(trace)
+        TimeSharingPolicy(), cfg()).run(trace)
     results["greedy_packer"] = ClusterSimulator(
-        GreedyPackerPolicy(), window=args.window, mode=mode).run(trace)
+        GreedyPackerPolicy(), cfg()).run(trace)
     pol = RLDispatchPolicy(agent, env_cfg)
     retrainer = OnlineRetrainer(
         policy=pol, train_cfg=default_retrain_train_config(240),
         interval_s=args.retrain_interval_min * 60.0)
     results["rl+retrain"] = ClusterSimulator(
-        pol, window=args.window, mode=mode, tick_interval_s=retrainer.interval_s,
-        on_tick=retrainer).run(trace)
+        pol, cfg(tick=retrainer.interval_s), on_tick=retrainer).run(trace)
 
     ts = results["time_sharing"].throughput
     print(f"\n{'policy':14s} {'throughput':>10s} {'vs_ts':>6s} "
-          f"{'makespan_h':>10s} {'mean_wait_m':>11s} {'p95_turn_m':>10s} "
+          f"{'makespan_h':>10s} {'mean_wait_m':>11s} {'p99_wait_m':>10s} "
           f"{'slice_util':>10s} {'backfills':>9s}")
     for name, r in results.items():
         print(f"{name:14s} {r.throughput:10.3f} {r.throughput/ts:6.3f} "
               f"{r.makespan/3600:10.2f} {r.mean_wait/60:11.1f} "
-              f"{r.p95_turnaround/60:10.1f} {r.slice_utilization:10.3f} "
+              f"{r.p99_wait/60:10.1f} {r.slice_utilization:10.3f} "
               f"{r.backfills:9d}")
 
     print(f"\nre-training cycles: {len(retrainer.history)}")
@@ -97,10 +114,12 @@ def main():
 
     print("\nfirst RL dispatches (slice occupancy timeline):")
     for seg in sorted(results["rl+retrain"].timeline,
-                      key=lambda s: (s.t0, s.slices))[:10]:
+                      key=lambda s: (s.t0, s.pod, s.slices))[:10]:
         units = ",".join(f"{st}-{st + w - 1}" for st, w in seg.slices)
+        where = f"pod{seg.pod} units {units:9s}" if len(pods) > 1 \
+            else f"units {units:9s}"
         bf = " (backfilled)" if seg.backfilled else ""
-        print(f"  [{seg.t0:8.0f}s -> {seg.t1:8.0f}s] units {units:9s} "
+        print(f"  [{seg.t0:8.0f}s -> {seg.t1:8.0f}s] {where} "
               f"{seg.jobs} job(s) on {seg.partition}{bf}")
     print("online_cluster OK")
 

@@ -26,6 +26,20 @@ utilization timeline) land in a
 the PR-3 whole-pod block dispatch bit-compatibly.  Everything is
 deterministic given the trace seed.
 
+Fleet serving
+-------------
+:class:`~repro.online.simulator.SimConfig` scales the same event model to
+an N-pod fleet with heterogeneous slice widths: a
+:class:`~repro.online.router.Router` (hash / least-loaded /
+fragmentation-scored) assigns each arrival a pod at its arrival instant,
+and the whole dispatch path above runs per pod — claims never span pods.
+``SimConfig(pods=(8,),...)`` (the default) is the single-pod cluster of
+earlier PRs, bit-compatible with it.  The hash-routed fleet also runs on
+the vectorized engine
+(:class:`~repro.online.vecsim.VectorizedFleetSimulator`) as one vmapped
+pod axis — hash routing is trace-computable, so the fleet decomposes into
+independent per-pod lanes.
+
 Traces ↔ paper workload mix
 ---------------------------
 :mod:`repro.online.traces` generates arrival processes (Poisson, bursty
@@ -59,20 +73,29 @@ from repro.online.policies import (
     StaticPartitionPolicy, TimeSharingPolicy,
 )
 from repro.online.retrain import OnlineRetrainer, default_retrain_train_config
+from repro.online.router import (
+    FleetView, FragRouter, HashRouter, LeastLoadedRouter, PodView, ROUTERS,
+    Router, make_router,
+)
 from repro.online.simulator import (
-    Arrival, ClusterSimulator, JobRecord, Segment, SimResult,
+    Arrival, ClusterSimulator, JobRecord, Segment, SimConfig, SimResult,
 )
 from repro.online.traces import (
     TRACE_FAMILIES, diurnal_trace, fragmented_trace, heavy_tailed_trace,
     mmpp_trace, poisson_trace,
 )
-from repro.online.vecsim import SweepSummary, VectorizedClusterSimulator
+from repro.online.vecsim import (
+    SweepSummary, VectorizedClusterSimulator, VectorizedFleetSimulator,
+)
 
 __all__ = [
-    "Arrival", "ClusterSimulator", "DispatchPolicy", "GreedyPackerPolicy",
-    "JobRecord", "OnlineRetrainer", "PolicyStats", "RLDispatchPolicy",
-    "Segment", "SimResult", "StaticPartitionPolicy", "SweepSummary",
-    "TRACE_FAMILIES", "TimeSharingPolicy", "VectorizedClusterSimulator",
-    "default_retrain_train_config", "diurnal_trace", "fragmented_trace",
-    "heavy_tailed_trace", "mmpp_trace", "poisson_trace",
+    "Arrival", "ClusterSimulator", "DispatchPolicy", "FleetView",
+    "FragRouter", "GreedyPackerPolicy", "HashRouter", "JobRecord",
+    "LeastLoadedRouter", "OnlineRetrainer", "PodView", "PolicyStats",
+    "ROUTERS", "RLDispatchPolicy", "Router", "Segment", "SimConfig",
+    "SimResult", "StaticPartitionPolicy", "SweepSummary", "TRACE_FAMILIES",
+    "TimeSharingPolicy", "VectorizedClusterSimulator",
+    "VectorizedFleetSimulator", "default_retrain_train_config",
+    "diurnal_trace", "fragmented_trace", "heavy_tailed_trace", "make_router",
+    "mmpp_trace", "poisson_trace",
 ]

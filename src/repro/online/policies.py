@@ -34,6 +34,7 @@ alone, exactly as before.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 from repro.core.baselines import POLICIES, _best_for_group, time_sharing
@@ -43,7 +44,8 @@ from repro.core.perfmodel import solo_run_time
 from repro.core.problem import Schedule
 from repro.core.profiles import JobProfile, ProfileRepository
 from repro.core.scheduler import (
-    Placement, RLScheduler, submission_protocol, to_placements,
+    DispatchDecision, Placement, RLScheduler, submission_protocol,
+    to_placements,
 )
 
 
@@ -56,10 +58,19 @@ class PolicyStats:
 class DispatchPolicy:
     """Repository protocol + a planner hook (:meth:`plan`) for subclasses.
 
-    :meth:`dispatch` runs the shared
-    :func:`~repro.core.scheduler.submission_protocol` (first sight: solo +
-    insert; afterwards: plan) with this policy's planner, so every policy
-    pays the identical first-sight profiling cost the RL scheduler does.
+    :meth:`decide` is the **single dispatch entry point**: it runs the
+    shared :func:`~repro.core.scheduler.submission_protocol` (first sight:
+    solo + insert; afterwards: plan) with this policy's planner — so every
+    policy pays the identical first-sight profiling cost the RL scheduler
+    does — and returns one
+    :class:`~repro.core.scheduler.DispatchDecision` carrying the planned
+    schedule, the width-fitted placements the slice-level simulator
+    consumes, and this window's first-sight/planned counts.  The
+    historical ``dispatch()`` / ``placements()`` methods survive as thin
+    deprecation shims over the same protocol; subclasses that still
+    override them (the pre-decide extension points) are honored —
+    :meth:`decide` detects the override and routes through it.
+
     ``plan_window`` caps how many profiled jobs reach one :meth:`plan` call
     (chunked like the RL window); ``None`` plans the whole batch at once.
     """
@@ -73,14 +84,38 @@ class DispatchPolicy:
         self.repository = repository if repository is not None else ProfileRepository()
         self.plan_window = plan_window
         self.stats = PolicyStats()
+        self._last_schedule: Schedule | None = None
 
-    def dispatch(self, submissions: list[tuple[str, JobProfile | None]],
-                 context=None) -> Schedule:
-        """``context`` (a :class:`~repro.core.env.DispatchContext`) is
-        accepted by every policy so the simulator can pass its dispatch
-        snapshot unconditionally; the base planner contract
-        ``plan(queue)`` is context-blind, so it is *not* forwarded here —
-        the RL policy overrides this method to consume it."""
+    # ------------------------------------------------ the one entry point
+
+    def decide(self, submissions: list[tuple[str, JobProfile | None]],
+               context=None) -> DispatchDecision:
+        """Plan one dispatch window.  ``context`` (a
+        :class:`~repro.core.env.DispatchContext`) is accepted by every
+        policy so the simulator can pass its snapshot unconditionally;
+        the base planner contract ``plan(queue)`` is context-blind, so it
+        is *not* forwarded — the RL delegate consumes it."""
+        before = (self.stats.unprofiled_jobs, self.stats.planned_jobs)
+        cls = type(self)
+        if cls.dispatch is not DispatchPolicy.dispatch:
+            # legacy subclass extension point: honor the override (its
+            # super() chain lands back in the shim below)
+            sched = self.dispatch(submissions, context=context)
+            pls = to_placements(sched)
+        elif cls.placements is not DispatchPolicy.placements:
+            self._last_schedule = None
+            pls = self.placements(submissions, context=context)
+            sched = self._last_schedule
+        else:
+            sched = self._plan_schedule(submissions, context=context)
+            pls = to_placements(sched)
+        return DispatchDecision(
+            schedule=sched, placements=tuple(pls),
+            first_sight=self.stats.unprofiled_jobs - before[0],
+            planned=self.stats.planned_jobs - before[1])
+
+    def _plan_schedule(self, submissions, context=None) -> Schedule:
+        """The shared protocol body (the RL policy swaps in its delegate)."""
         def on_unprofiled(path, fresh):
             self.stats.unprofiled_jobs += 1
 
@@ -92,14 +127,26 @@ class DispatchPolicy:
                                    on_unprofiled=on_unprofiled,
                                    on_window=on_window)
 
+    # ------------------------------------------------- deprecation shims
+
+    def dispatch(self, submissions: list[tuple[str, JobProfile | None]],
+                 context=None) -> Schedule:
+        """Deprecated: ``decide(...).schedule`` replaces this."""
+        warnings.warn(
+            "DispatchPolicy.dispatch() is deprecated; use "
+            "decide(submissions, context).schedule",
+            DeprecationWarning, stacklevel=2)
+        sched = self._plan_schedule(submissions, context=context)
+        self._last_schedule = sched
+        return sched
+
     def placements(self, submissions: list[tuple[str, JobProfile | None]],
                    context=None) -> list[Placement]:
-        """What the slice-level simulator consumes: the planned schedule
-        width-fitted into :class:`~repro.core.scheduler.Placement`\\ s
-        (dedicated slices shrink to each job's ``requested_units`` hint).
-        One shared implementation — every policy, including the delegated
-        RL protocol, goes through its own :meth:`dispatch` first, so the
-        first-sight profiling cost stays identical across policies."""
+        """Deprecated: ``decide(...).placements`` replaces this."""
+        warnings.warn(
+            "DispatchPolicy.placements() is deprecated; use "
+            "decide(submissions, context).placements",
+            DeprecationWarning, stacklevel=2)
         return to_placements(self.dispatch(submissions, context=context))
 
     def plan(self, queue: list[JobProfile]) -> Schedule:
@@ -193,7 +240,7 @@ class RLDispatchPolicy(DispatchPolicy):
         super().__init__(repository)
         self.scheduler = RLScheduler(agent, env_cfg, self.repository)
 
-    def dispatch(self, submissions, context=None):
+    def _plan_schedule(self, submissions, context=None):
         # keep PolicyStats live even though the protocol is delegated:
         # cross-policy analyses read .stats uniformly.  Derived from the
         # scheduler's own counter delta so there is exactly one protocol

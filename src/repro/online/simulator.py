@@ -1,29 +1,53 @@
 """Deterministic discrete-event cluster simulator (paper §IV-B, online phase).
 
-Models one pod serving a stream of job submissions over *simulated* time.
-Three event kinds drive the clock, popped from a single heap in
-``(time, kind, seq)`` order; *all* events sharing a timestamp are drained
-before any dispatch decision, so simultaneous events resolve
+Models a fleet of pods serving a stream of job submissions over
+*simulated* time.  Three event kinds drive the clock, popped from a single
+heap in ``(time, kind, seq)`` order; *all* events sharing a timestamp are
+drained before any dispatch decision, so simultaneous events resolve
 deterministically — coincident arrivals (batch submissions, tied burst
-times) all reach the pending queue and can share one dispatch window, and
-periodic ticks observe the repository state of the same instant:
+times) all reach their pending queues and can share one dispatch window,
+and periodic ticks observe the repository state of the same instant:
 
-    ARRIVE — a job submission joins the FCFS pending queue,
+    ARRIVE — a job submission is routed to a pod's FCFS pending queue,
     TICK   — a periodic simulated-time hook (the re-training loop's clock),
     FREE   — a dispatched group's slice-range claim expires.
 
+Fleet topology and routing
+--------------------------
+:class:`SimConfig` fixes the fleet shape: ``pods`` is a tuple of per-pod
+slice widths (heterogeneous 4/8-unit fleets are the interesting case; the
+default ``(N_UNITS,)`` is the single-pod cluster of PRs 3–6, bit-compatible
+with them).  At the instant a submission arrives, the configured
+:class:`~repro.online.router.Router` (hash / least-loaded /
+fragmentation-scored) assigns it a pod from an immutable
+:class:`~repro.online.router.FleetView` snapshot; everything downstream —
+FCFS windows, the first-sight protocol, slice-level first-fit, EASY
+backfill — runs per pod, exactly the single-pod path.  Claims never span
+pods, and a routed job never migrates.  Pod widths narrower than
+``N_UNITS`` are modeled as a full-width occupancy map whose upper units
+are permanently busy, so the placement arithmetic (buddy alignment,
+reservation replay) is shared verbatim; the router's width eligibility
+(a job requesting ``w`` units only routes to pods at least ``w`` wide)
+keeps heterogeneous fleets deadlock-free, and a placement the per-pod
+policy planned wider than the pod (e.g. an 8-unit MPS pair on a 4-unit
+pod) is decomposed back into right-sized solo placements — counted in
+``SimResult.refits``.
+
 Slice-level occupancy (``mode="concurrent"``, the default)
 ----------------------------------------------------------
-The pod is an occupancy map over its ``N_UNITS`` slice units, not a scalar
-busy flag.  Whenever slice units are idle and the dispatched-group queue is
-empty, the FCFS head of the pending queue (up to ``window`` submissions, as
-``(binary, profile)`` pairs) is handed to the policy, which returns
+Each pod is an occupancy map over its slice units, not a scalar busy
+flag.  Whenever slice units are idle and the pod's dispatched-group queue
+is empty, the FCFS head of its pending queue (up to ``window``
+submissions, as ``(binary, profile)`` pairs) is handed to the policy via
+:meth:`~repro.online.policies.DispatchPolicy.decide`, which returns a
+:class:`~repro.core.scheduler.DispatchDecision` carrying
 :class:`~repro.core.scheduler.Placement`\\ s — co-run groups bound to
-(possibly sub-pod, width-fitted) hierarchical partitions.  Each placement's
-slices are then first-fitted onto disjoint aligned unit ranges
-(:func:`~repro.core.partition.find_offsets`), so independent groups run
-**concurrently** on disjoint slices; its FREE event is keyed by the claimed
-slice ranges and releases exactly those units when the group drains.
+(possibly sub-pod, width-fitted) hierarchical partitions.  Each
+placement's slices are then first-fitted onto disjoint aligned unit
+ranges (:func:`~repro.core.partition.find_offsets`), so independent
+groups run **concurrently** on disjoint slices; its FREE event is keyed
+by the claimed slice ranges and releases exactly those units when the
+group drains.
 
 When the head group does not fit the current free units, it reserves its
 earliest feasible start (computed by replaying the outstanding claims'
@@ -33,36 +57,39 @@ dispatched queue start immediately *iff* they fit the idle units now and
 their predicted makespan ends by the head's reserved start — EASY-style
 backfill, so jumping the queue can never delay the head.
 
-``mode="blocking"`` recovers the PR-3 whole-pod semantics bit-compatibly:
-one window's groups execute back to back on the full pod and the pod is
-released only when the whole block drains.  On traces without sub-pod
-width hints the two modes produce identical results (all placements are
-full-pod, so concurrency never materializes) — the regression tests pin
-this equivalence.
+``mode="blocking"`` recovers the PR-3 whole-pod semantics bit-compatibly
+(it requires a fleet of full-width pods): one window's groups execute
+back to back on the full pod and the pod is released only when the whole
+block drains.  On traces without sub-pod width hints the two modes
+produce identical results (all placements are full-pod, so concurrency
+never materializes) — the regression tests pin this equivalence.
 
 Dispatch-time context
 ---------------------
 Every window hand-off carries a :class:`~repro.core.env.DispatchContext`
-snapshot of the cluster at the dispatch instant: the live free-unit mask
-(the very list placements are first-fitted against), each head
-submission's age since arrival, and the pending-queue depth left behind.
-Policies are free to ignore it (the heuristic baselines do); an RL policy
-whose environment runs with ``EnvConfig.obs_context`` folds it into the
+snapshot of the serving pod at the dispatch instant: the live free-unit
+mask (the very list placements are first-fitted against — a narrow pod
+reports its missing upper units as busy), each head submission's age
+since arrival, and the pending-queue depth left behind.  Policies are
+free to ignore it (the heuristic baselines do); an RL policy whose
+environment runs with ``EnvConfig.obs_context`` folds it into the
 agent's observation, closing the loop that lets the policy *learn*
 backfill-like behavior the dispatch layer otherwise supplies by hand —
 see ``docs/observation.md`` for the exact feature layout and invariants.
 
 Per-job completion times come from the phase-simulated
 :func:`~repro.core.perfmodel.corun` under the fitted partition.  Every
-dispatched group appends a :class:`Segment` (now carrying its claimed
-slice ranges and a backfill flag) to the occupancy timeline, and
+dispatched group appends a :class:`Segment` (carrying its pod, claimed
+slice ranges, and a backfill flag) to the occupancy timeline, and
 :class:`SimResult` exposes fragmentation metrics on top of it: per-slice
-busy time, slice-level utilization, and the idle-slice-time fraction —
-packing quality, not just makespan.
+busy time across the fleet-wide unit axis, slice-level utilization, and
+the idle-slice-time fraction — packing quality, not just makespan — plus
+the wait percentiles (p50/p99) that are the fleet-scale headline.
 
 The simulator itself draws no randomness: given one trace (see
 :mod:`repro.online.traces`) and one policy, two runs produce identical
-:class:`SimResult`\\ s — determinism lives entirely in the trace seed.
+:class:`SimResult`\\ s — determinism lives entirely in the trace seed and
+the router seed.
 """
 from __future__ import annotations
 
@@ -74,12 +101,55 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.env import DispatchContext
-from repro.core.partition import N_UNITS, find_offsets
+from repro.core.partition import N_UNITS, VALID_WIDTHS, find_offsets, solo_partition
 from repro.core.perfmodel import CoRunResult, corun
 from repro.core.profiles import JobProfile
-from repro.core.scheduler import to_placements
+from repro.core.scheduler import DispatchDecision, Placement, to_placements
+from repro.online.router import FleetView, PodView, Router, make_router
 
 _ARRIVE, _TICK, _FREE = 0, 1, 2          # same-time resolution order
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Frozen simulation configuration — the whole ``ClusterSimulator``
+    parameter surface, including the fleet topology.
+
+    ``pods`` is the tuple of per-pod slice widths (each a MIG-valid
+    power-of-two; the widest must be ``N_UNITS`` so unhinted full-pod
+    submissions always have an eligible pod).  ``router``/``router_seed``
+    select the arrival router (:mod:`repro.online.router`) — irrelevant,
+    but still recorded, for single-pod fleets.  ``mode="blocking"``
+    (the PR-3 whole-pod dispatch) requires a uniform full-width fleet."""
+
+    window: int = 8
+    mode: str = "concurrent"
+    backfill: bool = True
+    tick_interval_s: float | None = None
+    pods: tuple[int, ...] = (N_UNITS,)
+    router: str = "hash"
+    router_seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "pods", tuple(self.pods))
+        assert self.window >= 1
+        assert self.mode in ("concurrent", "blocking"), self.mode
+        assert self.pods, "fleet needs at least one pod"
+        for w in self.pods:
+            assert w in VALID_WIDTHS, f"invalid pod width {w}"
+        assert max(self.pods) == N_UNITS, \
+            "widest pod must be full-width (unhinted jobs request N_UNITS)"
+        if self.mode == "blocking":
+            assert all(w == N_UNITS for w in self.pods), \
+                "blocking mode models whole-pod dispatch: widths must be N_UNITS"
+
+    @property
+    def n_pods(self) -> int:
+        return len(self.pods)
+
+    @property
+    def total_units(self) -> int:
+        return sum(self.pods)
 
 
 @dataclass(frozen=True)
@@ -90,7 +160,8 @@ class Arrival:
     the job during its first solo run — the policy only sees it through the
     repository protocol (first sight: solo + insert; afterwards: lookup).
     A ``meta["units"]`` hint on the profile (set by right-sized traces) is
-    the slice width the submission requests from the placement layer.
+    the slice width the submission requests from the placement layer —
+    and the width the fleet router's eligibility rule keys on.
     """
 
     t: float
@@ -100,11 +171,12 @@ class Arrival:
 
 @dataclass
 class Segment:
-    """One group's occupancy: [t0, t1) under ``partition``.
+    """One group's occupancy: [t0, t1) under ``partition`` on pod ``pod``.
 
-    ``slices`` holds the claimed ``(start, width)`` unit ranges (empty only
-    for legacy construction); ``backfilled`` marks groups that jumped a
-    blocked head into idle units via the EASY-backfill scan."""
+    ``slices`` holds the claimed ``(start, width)`` unit ranges in
+    pod-local units (empty only for legacy construction); ``backfilled``
+    marks groups that jumped a blocked head into idle units via the
+    EASY-backfill scan."""
 
     t0: float
     t1: float
@@ -112,6 +184,7 @@ class Segment:
     partition: str
     slices: tuple[tuple[int, int], ...] = ()
     backfilled: bool = False
+    pod: int = 0
 
     @property
     def units(self) -> int:
@@ -120,14 +193,15 @@ class Segment:
 
 @dataclass
 class JobRecord:
-    """Per-submission lifecycle: arrival -> dispatch -> finish.
+    """Per-submission lifecycle: arrival -> route -> dispatch -> finish.
 
     ``dispatch`` is the instant the job's *group* starts executing (a
     window's groups can start at different times under slice-level
     dispatch), so ``wait`` covers all queueing delay including queueing
     behind earlier groups of the same window.  ``units`` is the slice width
-    the job actually ran on; ``backfilled`` marks jobs whose group was
-    started by the backfill scan."""
+    the job actually ran on; ``pod`` the fleet pod the router assigned it;
+    ``backfilled`` marks jobs whose group was started by the backfill
+    scan."""
 
     binary: str
     name: str
@@ -139,6 +213,7 @@ class JobRecord:
     partition: str = ""
     units: int = N_UNITS
     backfilled: bool = False
+    pod: int = 0
 
     @property
     def wait(self) -> float:
@@ -151,7 +226,12 @@ class JobRecord:
 
 @dataclass
 class SimResult:
-    """Cluster-level outcome of one (trace, policy) simulation."""
+    """Fleet-level outcome of one (trace, policy) simulation.
+
+    ``slice_busy_s`` spans the fleet-wide unit axis (pod 0's units first,
+    then pod 1's, …); ``busy_time`` sums each pod's any-slice-busy span,
+    so ``utilization`` is the mean over pods.  ``summary()`` carries
+    ``schema: 2`` — consumers detect the fleet-era layout by it."""
 
     policy: str
     window: int
@@ -163,6 +243,26 @@ class SimResult:
     ticks: int = 0
     backfills: int = 0
     slice_busy_s: list[float] = field(default_factory=lambda: [0.0] * N_UNITS)
+    pods: tuple[int, ...] = (N_UNITS,)
+    router: str = "hash"
+    refits: int = 0
+
+    @property
+    def n_pods(self) -> int:
+        return len(self.pods)
+
+    @property
+    def total_units(self) -> int:
+        return sum(self.pods)
+
+    @property
+    def pod_offsets(self) -> tuple[int, ...]:
+        """Each pod's first index on the fleet-wide unit axis."""
+        offs, acc = [], 0
+        for w in self.pods:
+            offs.append(acc)
+            acc += w
+        return tuple(offs)
 
     @property
     def makespan(self) -> float:
@@ -177,17 +277,18 @@ class SimResult:
     def throughput(self) -> float:
         """Makespan-derived: solo work retired per unit of wall clock.
 
-        Pure time sharing on a saturated cluster scores ~1.0 (idle gaps pull
-        it below); co-scheduling pushes it above by retiring more than one
-        job's solo work per pod-second."""
+        Pure time sharing on a saturated single pod scores ~1.0 (idle gaps
+        pull it below); co-scheduling pushes it above by retiring more than
+        one job's solo work per pod-second, and an N-pod fleet serving a
+        capacity-scaled trace approaches N."""
         m = self.makespan
         return self.total_solo_time / m if m > 0 else 0.0
 
     @property
     def utilization(self) -> float:
-        """Fraction of the makespan during which *any* slice was busy."""
+        """Mean over pods of the makespan fraction that pod was busy."""
         m = self.makespan
-        return self.busy_time / m if m > 0 else 0.0
+        return self.busy_time / (self.n_pods * m) if m > 0 else 0.0
 
     # ---- fragmentation metrics (slice-level packing quality) --------------
 
@@ -198,10 +299,10 @@ class SimResult:
 
     @property
     def slice_utilization(self) -> float:
-        """Claimed unit-seconds / (N_UNITS x makespan): how much of the
-        pod's slice real estate the schedule actually occupied."""
+        """Claimed unit-seconds / (total units x makespan): how much of the
+        fleet's slice real estate the schedule actually occupied."""
         m = self.makespan
-        return self.unit_busy_s / (N_UNITS * m) if m > 0 else 0.0
+        return self.unit_busy_s / (self.total_units * m) if m > 0 else 0.0
 
     @property
     def idle_slice_frac(self) -> float:
@@ -216,13 +317,16 @@ class SimResult:
         return [b / m if m > 0 else 0.0 for b in self.slice_busy_s]
 
     def slice_timeline(self) -> list[list[tuple[float, float]]]:
-        """Per-unit busy intervals reconstructed from the segment timeline
-        (claims release at group drain, so segment spans *are* the claims)."""
-        out: list[list[tuple[float, float]]] = [[] for _ in range(N_UNITS)]
+        """Per-unit busy intervals on the fleet-wide axis, reconstructed
+        from the segment timeline (claims release at group drain, so
+        segment spans *are* the claims)."""
+        out: list[list[tuple[float, float]]] = [[] for _ in range(self.total_units)]
+        offs = self.pod_offsets
         for seg in self.timeline:
+            base = offs[seg.pod]
             for start, width in seg.slices:
                 for u in range(start, start + width):
-                    out[u].append((seg.t0, seg.t1))
+                    out[base + u].append((seg.t0, seg.t1))
         for iv in out:
             iv.sort()
         return out
@@ -252,10 +356,16 @@ class SimResult:
                 if self.jobs else 0.0)
 
     def summary(self) -> dict:
-        """JSON-able digest for BENCH_online.json."""
+        """JSON-able digest for BENCH_online.json (``schema: 2``: the
+        fleet-era layout — adds ``n_pods``/``pods``/``router``/``refits``
+        and redefines utilization as the per-pod mean)."""
         return {
+            "schema": 2,
             "policy": self.policy,
             "mode": self.mode,
+            "n_pods": self.n_pods,
+            "pods": list(self.pods),
+            "router": self.router,
             "jobs": len(self.jobs),
             "makespan_s": self.makespan,
             "busy_s": self.busy_time,
@@ -264,6 +374,7 @@ class SimResult:
             "slice_utilization": self.slice_utilization,
             "idle_slice_frac": self.idle_slice_frac,
             "backfills": self.backfills,
+            "refits": self.refits,
             "mean_wait_s": self.mean_wait,
             "p50_wait_s": self.p50_wait,
             "p99_wait_s": self.p99_wait,
@@ -278,7 +389,7 @@ class SimResult:
 
 @dataclass
 class _Run:
-    """A dispatched group awaiting (or holding) slice units."""
+    """A dispatched group awaiting (or holding) slice units on its pod."""
 
     group: list[JobProfile]
     partition: object                    # Partition (possibly width-fitted)
@@ -287,47 +398,88 @@ class _Run:
     window_id: int = 0                   # dispatch window this group came from
 
 
-class ClusterSimulator:
-    """Event-driven pod: FCFS admission windows dispatched by a policy.
+class _Pod:
+    """One pod's mutable serving state (everything the single-pod
+    simulator used to keep on ``self``).  A pod narrower than ``N_UNITS``
+    is a full-width occupancy map whose upper units start — and stay —
+    busy, so the shared placement arithmetic needs no width parameter."""
 
-    ``mode="concurrent"`` (default) places each dispatched group onto
-    disjoint slice-unit ranges so independent groups run side by side;
-    ``backfill=True`` additionally lets later groups of the dispatched
-    queue jump a blocked head into idle units when their predicted finish
-    cannot delay the head's reserved start.  ``mode="blocking"`` is the
-    PR-3 whole-pod block dispatch, kept bit-compatible for regression.
+    __slots__ = ("idx", "width", "offset", "pending", "ready", "busy",
+                 "free", "claims", "cid", "n_busy_units", "busy_t0")
+
+    def __init__(self, idx: int, width: int, offset: int):
+        self.idx = idx
+        self.width = width
+        self.offset = offset             # first index on the fleet unit axis
+        self.pending: deque = deque()
+        self.ready: deque[_Run] = deque()
+        self.busy = False                # blocking-mode pod flag
+        self.free = [u < width for u in range(N_UNITS)]
+        self.claims: dict[int, tuple[tuple[tuple[int, int], ...], float]] = {}
+        self.cid = 0
+        self.n_busy_units = 0
+        self.busy_t0 = 0.0
+
+
+class ClusterSimulator:
+    """Event-driven fleet: routed FCFS admission windows dispatched by a
+    policy, one occupancy map per pod.
+
+    Configuration lives in a frozen :class:`SimConfig` (pass ``config=``;
+    the historical keyword arguments remain as a legacy construction path
+    and simply populate one).  ``mode="concurrent"`` (default) places each
+    dispatched group onto disjoint slice-unit ranges so independent groups
+    run side by side; ``backfill=True`` additionally lets later groups of
+    a pod's dispatched queue jump a blocked head into idle units when
+    their predicted finish cannot delay the head's reserved start.
+    ``mode="blocking"`` is the PR-3 whole-pod block dispatch, kept
+    bit-compatible for regression.  Fleets longer than one pod route each
+    arrival through ``config.router`` at its arrival instant.
 
     ``on_tick(now, sim)`` fires every ``tick_interval_s`` of simulated time
     while work remains — the MISO-style re-training loop hangs off it (see
     :mod:`repro.online.retrain`); ticks stop as soon as the heap, pending
-    queue, and pod are all drained, so simulations always terminate.
+    queues, and pods are all drained, so simulations always terminate.
     """
 
-    def __init__(self, policy, window: int = 8,
-                 tick_interval_s: float | None = None, on_tick=None,
-                 mode: str = "concurrent", backfill: bool = True):
-        assert window >= 1
-        assert mode in ("concurrent", "blocking"), mode
+    def __init__(self, policy, config: SimConfig | None = None, *,
+                 window: int = 8, tick_interval_s: float | None = None,
+                 on_tick=None, mode: str = "concurrent",
+                 backfill: bool = True, pods: tuple[int, ...] | None = None,
+                 router: str = "hash", router_seed: int = 0):
+        if config is None:
+            config = SimConfig(
+                window=window, mode=mode, backfill=backfill,
+                tick_interval_s=tick_interval_s,
+                pods=tuple(pods) if pods is not None else (N_UNITS,),
+                router=router, router_seed=router_seed)
+        self.config = config
         self.policy = policy
-        self.window = window
-        self.tick_interval_s = tick_interval_s
         self.on_tick = on_tick
-        self.mode = mode
-        self.backfill = backfill
-        self.pending: deque = deque()
-        self.ready: deque[_Run] = deque()
-        self.busy = False                        # blocking-mode pod flag
-        self._free = [True] * N_UNITS            # concurrent-mode unit map
-        self._claims: dict[int, tuple[tuple[tuple[int, int], ...], float]] = {}
-        self._cid = 0
-        self._n_busy_units = 0
-        self._busy_t0 = 0.0
+        # legacy attribute mirrors (config is the source of truth)
+        self.window = config.window
+        self.tick_interval_s = config.tick_interval_s
+        self.mode = config.mode
+        self.backfill = config.backfill
+        self._router: Router = make_router(config.router, config.router_seed)
+        self._pods: list[_Pod] = []
+        self._reset_pods()
+
+    def _reset_pods(self) -> None:
+        self._pods = []
+        off = 0
+        for i, w in enumerate(self.config.pods):
+            self._pods.append(_Pod(i, w, off))
+            off += w
 
     # ------------------------------------------------------------------ run
 
     def run(self, trace: list[Arrival]) -> SimResult:
+        cfg = self.config
         res = SimResult(policy=getattr(self.policy, "name", "policy"),
-                        window=self.window, jobs=[], mode=self.mode)
+                        window=cfg.window, jobs=[], mode=cfg.mode,
+                        slice_busy_s=[0.0] * cfg.total_units,
+                        pods=cfg.pods, router=cfg.router)
         heap: list[tuple[float, int, int, object]] = []
         seq = 0
         # heap/pending carry the sorted-trace *index*, not the Arrival:
@@ -346,63 +498,117 @@ class ClusterSimulator:
 
         for i, a in enumerate(order):
             push(a.t, _ARRIVE, i)
-        if self.tick_interval_s and trace:
-            push(self.tick_interval_s, _TICK, None)
+        if cfg.tick_interval_s and trace:
+            push(cfg.tick_interval_s, _TICK, None)
 
-        self.pending.clear()
-        self.ready.clear()
-        self.busy = False
-        self._free = [True] * N_UNITS
-        self._claims.clear()
-        self._n_busy_units = 0
+        self._reset_pods()
+        n_pods = cfg.n_pods
+
+        def work_left():
+            return any(p.pending or p.ready or p.busy or p.claims
+                       for p in self._pods)
 
         def handle(now, kind, payload):
             if kind == _ARRIVE:
-                self.pending.append(payload)
+                i = payload
+                pidx = (0 if n_pods == 1
+                        else self._router.route(order[i],
+                                                self._fleet_view(now, order)))
+                records[i].pod = pidx
+                self._pods[pidx].pending.append(i)
             elif kind == _FREE:
-                if self.mode == "blocking":
-                    self.busy = False
+                pidx, cid = payload
+                pod = self._pods[pidx]
+                if cfg.mode == "blocking":
+                    pod.busy = False
                 else:
-                    self._release(now, payload, res)
+                    self._release(now, pod, cid, res)
             else:  # _TICK — only while work remains (no retrain on a drained
                 # cluster), and stop rescheduling once the trace is served
-                if (heap or self.pending or self.ready or self.busy
-                        or self._claims):
+                if heap or work_left():
                     if self.on_tick is not None:
                         self.on_tick(now, self)
                     res.ticks += 1
-                    push(now + self.tick_interval_s, _TICK, None)
+                    push(now + cfg.tick_interval_s, _TICK, None)
 
         while heap:
             now, kind, _, payload = heapq.heappop(heap)
             handle(now, kind, payload)
             # drain every coincident event before considering a dispatch:
             # same-instant arrivals (batch submissions, tied burst times)
-            # must all reach the pending queue so one window sees them all
+            # must all reach the pending queues so one window sees them all
             while heap and heap[0][0] == now:
                 _, kind2, _, payload2 = heapq.heappop(heap)
                 handle(now, kind2, payload2)
-            if self.mode == "blocking":
-                self._dispatch_blocking(now, res, order, records, push)
-            else:
-                self._service(now, res, order, records, push)
-        assert not self._claims and not self.ready, "undrained claims/groups"
+            for pod in self._pods:
+                if cfg.mode == "blocking":
+                    self._dispatch_blocking(now, pod, res, order, records,
+                                            push)
+                else:
+                    self._service(now, pod, res, order, records, push)
+        for pod in self._pods:
+            assert not pod.claims and not pod.ready, "undrained claims/groups"
         return res
+
+    # --------------------------------------------------------- fleet view
+
+    def _fleet_view(self, now, order) -> FleetView:
+        """Immutable routing snapshot: every pod's width, pod-local free
+        mask, queue depths, and claimed/queued units at the arrival
+        instant — the router's whole world."""
+        views = []
+        for p in self._pods:
+            if self.config.mode == "blocking":
+                free = tuple([not p.busy] * p.width)
+                busy_units = p.width if p.busy else 0
+            else:
+                free = tuple(p.free[:p.width])
+                busy_units = p.n_busy_units
+            queue_units = sum(r.partition.total_units for r in p.ready)
+            queue_units += sum(
+                min(order[i].profile.requested_units, p.width)
+                for i in p.pending)
+            views.append(PodView(idx=p.idx, width=p.width, free=free,
+                                 pending=len(p.pending), ready=len(p.ready),
+                                 queue_units=queue_units,
+                                 busy_units=busy_units))
+        return FleetView(pods=tuple(views), now_s=now)
+
+    # ------------------------------------------------ policy entry point
+
+    def _decide(self, subs, ctx) -> DispatchDecision:
+        """One call site for the policy: the unified ``decide`` API, with
+        a duck-typing adapter for external policies that still only
+        implement the legacy ``placements``/``dispatch`` surface."""
+        pol = self.policy
+        if hasattr(pol, "decide"):
+            return pol.decide(subs, context=ctx)
+        if hasattr(pol, "placements"):
+            return DispatchDecision(
+                schedule=None,
+                placements=tuple(pol.placements(subs, context=ctx)))
+        sched = pol.dispatch(subs, context=ctx)
+        return DispatchDecision(schedule=sched,
+                                placements=tuple(to_placements(sched)))
 
     # ------------------------------------------------- blocking (PR-3) mode
 
-    def _dispatch_blocking(self, now, res, order, records, push) -> None:
+    def _dispatch_blocking(self, now, pod: _Pod, res, order, records,
+                           push) -> None:
         """Whole-pod block dispatch — the PR-3 event model, verbatim (the
         dispatch context reports the idle full pod, which it is whenever a
         blocking dispatch fires)."""
-        if self.busy or not self.pending:
+        if pod.busy or not pod.pending:
             return
-        head = [self.pending.popleft()
-                for _ in range(min(self.window, len(self.pending)))]
-        sched = self.policy.dispatch(
+        head = [pod.pending.popleft()
+                for _ in range(min(self.window, len(pod.pending)))]
+        decision = self._decide(
             [(order[i].binary, order[i].profile) for i in head],
-            context=self._dispatch_context(now, head, order,
-                                           free=(True,) * N_UNITS))
+            self._dispatch_context(now, pod, head, order,
+                                   free=(True,) * N_UNITS))
+        sched = decision.schedule
+        assert sched is not None, \
+            "blocking mode needs a schedule-producing policy"
         by_name: dict[str, deque] = defaultdict(deque)
         for i in head:
             by_name[order[i].profile.name].append(records[i])
@@ -420,21 +626,22 @@ class ClusterSimulator:
                 rec.group_size = len(g)
                 rec.partition = p.label
             res.timeline.append(Segment(t0, t0 + block.makespan, len(g),
-                                        p.label, slices=((0, N_UNITS),)))
+                                        p.label, slices=((0, N_UNITS),),
+                                        pod=pod.idx))
             for u in range(N_UNITS):
-                res.slice_busy_s[u] += block.makespan
+                res.slice_busy_s[pod.offset + u] += block.makespan
             t0 += block.makespan
         leftover = [n for n, d in by_name.items() if d]
         assert not leftover, f"policy dropped submissions: {leftover}"
         res.busy_time += t0 - now
         res.dispatches += 1
-        self.busy = True
-        push(t0, _FREE, None)
+        pod.busy = True
+        push(t0, _FREE, (pod.idx, None))
 
     # --------------------------------------------- concurrent (slice) mode
 
-    def _service(self, now, res, order, records, push) -> None:
-        """Place dispatched groups onto free slice units.
+    def _service(self, now, pod: _Pod, res, order, records, push) -> None:
+        """Place one pod's dispatched groups onto its free slice units.
 
         Non-backfilled groups start strictly in dispatch order; a new
         window is formed once the dispatched queue has drained (FCFS across
@@ -446,87 +653,104 @@ class ClusterSimulator:
         while True:
             progress = False
             # FCFS: place the head while it fits
-            while self.ready:
-                starts = find_offsets(self.ready[0].partition, self._free)
+            while pod.ready:
+                starts = find_offsets(pod.ready[0].partition, pod.free)
                 if starts is None:
                     break
-                self._place(now, self.ready.popleft(), starts, res, push)
+                self._place(now, pod, pod.ready.popleft(), starts, res, push)
                 progress = True
-            if self.ready:
+            if pod.ready:
                 if self.backfill:
                     # bounded EASY lookahead: at most one window past the
                     # blocked head's own window may be admitted early
-                    if (self.pending and any(self._free)
-                            and self.ready[-1].window_id == self.ready[0].window_id):
-                        self._form_window(now, res, order, records)
+                    if (pod.pending and any(pod.free)
+                            and pod.ready[-1].window_id == pod.ready[0].window_id):
+                        self._form_window(now, pod, res, order, records)
                         progress = True
-                    if len(self.ready) > 1:
-                        progress |= self._backfill_scan(now, res, push)
-            elif self.pending and any(self._free):
-                self._form_window(now, res, order, records)
+                    if len(pod.ready) > 1:
+                        progress |= self._backfill_scan(now, pod, res, push)
+            elif pod.pending and any(pod.free):
+                self._form_window(now, pod, res, order, records)
                 progress = True
             if not progress:
                 return
 
-    def _dispatch_context(self, now, head, order, free=None) -> DispatchContext:
-        """Cluster-state snapshot handed to the policy with each window:
-        the live free-unit mask (the same list ``find_offsets`` places
-        against), each head submission's age since arrival, and the depth
-        of the pending queue left behind — the arrival-aware observation
-        an ``obs_context`` agent folds into its state."""
+    def _dispatch_context(self, now, pod: _Pod, head, order,
+                          free=None) -> DispatchContext:
+        """Pod-state snapshot handed to the policy with each window: the
+        live free-unit mask (the same list ``find_offsets`` places
+        against — a narrow pod's missing upper units read busy), each head
+        submission's age since arrival, and the depth of the pod's pending
+        queue left behind — the arrival-aware observation an
+        ``obs_context`` agent folds into its state."""
         return DispatchContext(
-            free_units=tuple(self._free) if free is None else free,
+            free_units=tuple(pod.free) if free is None else free,
             ages_s=tuple(now - order[i].t for i in head),
-            queue_depth=len(self.pending),
+            queue_depth=len(pod.pending),
             now_s=now)
 
-    def _form_window(self, now, res, order, records) -> None:
-        head = [self.pending.popleft()
-                for _ in range(min(self.window, len(self.pending)))]
+    def _fit_to_pod(self, pl: Placement, pod: _Pod, res) -> list[Placement]:
+        """Pod-width guard: a placement planned wider than the pod (the
+        per-pod policy plans against the full partition table — e.g. an
+        8-unit MPS pair routed onto a 4-unit pod) can never first-fit, so
+        decompose it into right-sized solo placements.  Buddy packing of
+        power-of-two slices totaling <= width always fits an empty pod,
+        so ``total_units <= width`` is exact.  Router eligibility keeps
+        each individual job's request within the pod, making the
+        decomposition always placeable; ``SimResult.refits`` counts
+        decompositions."""
+        if pl.partition.total_units <= pod.width:
+            return [pl]
+        res.refits += 1
+        return [Placement([j], solo_partition(min(j.requested_units,
+                                                  pod.width)))
+                for j in pl.group]
+
+    def _form_window(self, now, pod: _Pod, res, order, records) -> None:
+        head = [pod.pending.popleft()
+                for _ in range(min(self.window, len(pod.pending)))]
         subs = [(order[i].binary, order[i].profile) for i in head]
-        ctx = self._dispatch_context(now, head, order)
-        fn = getattr(self.policy, "placements", None)
-        placements = (fn(subs, context=ctx) if fn is not None
-                      else to_placements(self.policy.dispatch(subs,
-                                                              context=ctx)))
+        ctx = self._dispatch_context(now, pod, head, order)
+        decision = self._decide(subs, ctx)
         by_name: dict[str, deque] = defaultdict(deque)
         for i in head:
             by_name[order[i].profile.name].append(records[i])
-        for pl in placements:
-            recs = [by_name[j.name].popleft() for j in pl.group]
-            self.ready.append(_Run(pl.group, pl.partition, recs,
-                                   corun(pl.group, pl.partition),
-                                   window_id=res.dispatches))
+        for pl in decision.placements:
+            for fitted in self._fit_to_pod(pl, pod, res):
+                recs = [by_name[j.name].popleft() for j in fitted.group]
+                pod.ready.append(_Run(fitted.group, fitted.partition, recs,
+                                      corun(fitted.group, fitted.partition),
+                                      window_id=res.dispatches))
         leftover = [n for n, d in by_name.items() if d]
         assert not leftover, f"policy dropped submissions: {leftover}"
         res.dispatches += 1
 
-    def _backfill_scan(self, now, res, push) -> bool:
+    def _backfill_scan(self, now, pod: _Pod, res, push) -> bool:
         """EASY backfill: later dispatched groups may start now iff they fit
         the idle units and predictably finish by the blocked head's reserved
         start.  Backfilled claims give their units back before the head's
         reservation, so the head can never be delayed."""
-        t_res = self._earliest_fit(self.ready[0].partition)
+        t_res = self._earliest_fit(pod, pod.ready[0].partition)
         placed = False
-        for run in list(self.ready)[1:]:
-            starts = find_offsets(run.partition, self._free)
+        for run in list(pod.ready)[1:]:
+            starts = find_offsets(run.partition, pod.free)
             if starts is None:
                 continue
             if now + run.pred.makespan <= t_res + 1e-9:
-                self.ready.remove(run)
-                self._place(now, run, starts, res, push, backfilled=True)
+                pod.ready.remove(run)
+                self._place(now, pod, run, starts, res, push, backfilled=True)
                 res.backfills += 1
                 placed = True
         return placed
 
-    def _earliest_fit(self, partition) -> float:
-        """Earliest time `partition` fits, replaying outstanding claim
-        expiries (exact: no new non-backfill work is admitted past a
+    def _earliest_fit(self, pod: _Pod, partition) -> float:
+        """Earliest time `partition` fits the pod, replaying outstanding
+        claim expiries (exact: no new non-backfill work is admitted past a
         blocked head, and backfill claims expire before this time)."""
-        expiries = sorted({t1 for _, t1 in self._claims.values()})
-        free = list(self._free)
+        expiries = sorted({t1 for _, t1 in pod.claims.values()})
+        free = list(pod.free)
         for t in expiries:
-            for ranges, t1 in self._claims.values():
+            for ranges, t1 in pod.claims.values():
                 if t1 <= t:
                     for start, width in ranges:
                         free[start:start + width] = [True] * width
@@ -534,17 +758,17 @@ class ClusterSimulator:
                 return t
         return expiries[-1] if expiries else 0.0
 
-    def _place(self, now, run: _Run, starts, res, push,
+    def _place(self, now, pod: _Pod, run: _Run, starts, res, push,
                backfilled: bool = False) -> None:
         ranges = tuple((st, s.units)
                        for st, s in zip(starts, run.partition.slices))
         width = 0
         for st, w in ranges:
-            self._free[st:st + w] = [False] * w
+            pod.free[st:st + w] = [False] * w
             width += w
-        if self._n_busy_units == 0:
-            self._busy_t0 = now
-        self._n_busy_units += width
+        if pod.n_busy_units == 0:
+            pod.busy_t0 = now
+        pod.n_busy_units += width
         t1 = now + run.pred.makespan
         for rec, ft, (si, s, _b) in zip(run.recs, run.pred.finish_times,
                                         run.partition.slots):
@@ -556,19 +780,19 @@ class ClusterSimulator:
             rec.backfilled = backfilled
         res.timeline.append(Segment(now, t1, len(run.group),
                                     run.partition.label, slices=ranges,
-                                    backfilled=backfilled))
+                                    backfilled=backfilled, pod=pod.idx))
         for st, w in ranges:
             for u in range(st, st + w):
-                res.slice_busy_s[u] += run.pred.makespan
-        cid = self._cid
-        self._cid += 1
-        self._claims[cid] = (ranges, t1)
-        push(t1, _FREE, cid)
+                res.slice_busy_s[pod.offset + u] += run.pred.makespan
+        cid = pod.cid
+        pod.cid += 1
+        pod.claims[cid] = (ranges, t1)
+        push(t1, _FREE, (pod.idx, cid))
 
-    def _release(self, now, cid, res) -> None:
-        ranges, _t1 = self._claims.pop(cid)
+    def _release(self, now, pod: _Pod, cid, res) -> None:
+        ranges, _t1 = pod.claims.pop(cid)
         for st, w in ranges:
-            self._free[st:st + w] = [True] * w
-            self._n_busy_units -= w
-        if self._n_busy_units == 0:
-            res.busy_time += now - self._busy_t0
+            pod.free[st:st + w] = [True] * w
+            pod.n_busy_units -= w
+        if pod.n_busy_units == 0:
+            res.busy_time += now - pod.busy_t0

@@ -87,9 +87,13 @@ def mean_solo_time(jobs: list[JobProfile]) -> float:
     return float(np.mean([j.solo_time() for j in jobs]))
 
 
-def _rate(jobs: list[JobProfile], load: float) -> float:
-    """Arrivals/second that submit ``load`` pods' worth of solo work."""
-    return load / mean_solo_time(jobs)
+def _rate(jobs: list[JobProfile], load: float, capacity: float = 1.0) -> float:
+    """Arrivals/second that submit ``load * capacity`` pods' worth of solo
+    work.  ``capacity`` is the serving fleet's size in full-pod
+    equivalents (``SimConfig.total_units / N_UNITS``), so ``load`` keeps
+    its single-pod meaning — 1.0 saturates the *whole* fleet — and
+    ``capacity=1.0`` reproduces the historical rates bit-for-bit."""
+    return capacity * load / mean_solo_time(jobs)
 
 
 def _binary(prof: JobProfile) -> str:
@@ -102,21 +106,25 @@ def _assemble(times, picks) -> list[Arrival]:
 
 
 def poisson_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
-                  mix: str = "balanced", seed: int = 0) -> list[Arrival]:
-    """Constant-rate memoryless submissions."""
+                  mix: str = "balanced", seed: int = 0,
+                  capacity: float = 1.0) -> list[Arrival]:
+    """Constant-rate memoryless submissions.  ``capacity`` scales the rate
+    to a fleet of that many full-pod equivalents (all families take it)."""
     rng = np.random.default_rng(seed)
-    times = np.cumsum(rng.exponential(1.0 / _rate(jobs, load), size=n))
+    times = np.cumsum(rng.exponential(1.0 / _rate(jobs, load, capacity),
+                                      size=n))
     return _assemble(times, _draw_jobs(jobs, n, mix, rng))
 
 
 def mmpp_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
                burst_factor: float = 4.0, mean_phase_s: float = 600.0,
-               mix: str = "balanced", seed: int = 0) -> list[Arrival]:
+               mix: str = "balanced", seed: int = 0,
+               capacity: float = 1.0) -> list[Arrival]:
     """Bursty 2-state MMPP: alternating burst/lull phases of exponential
     length; the burst state submits ``burst_factor``x the lull rate while
     the *time-average* rate matches ``load``."""
     rng = np.random.default_rng(seed)
-    base = _rate(jobs, load)
+    base = _rate(jobs, load, capacity)
     lo = 2.0 * base / (1.0 + burst_factor)        # phases are equally likely
     hi = burst_factor * lo
     times, t, state, phase_end = [], 0.0, 1, 0.0
@@ -131,12 +139,13 @@ def mmpp_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
 
 def diurnal_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
                   amplitude: float = 0.8, period_s: float = 7200.0,
-                  mix: str = "balanced", seed: int = 0) -> list[Arrival]:
+                  mix: str = "balanced", seed: int = 0,
+                  capacity: float = 1.0) -> list[Arrival]:
     """Sinusoidal day/night rate lambda(t) = base * (1 + A sin(2 pi t / P)),
     sampled exactly by thinning a dominating Poisson process."""
     assert 0.0 <= amplitude < 1.0
     rng = np.random.default_rng(seed)
-    base = _rate(jobs, load)
+    base = _rate(jobs, load, capacity)
     peak = base * (1.0 + amplitude)
     times, t = [], 0.0
     while len(times) < n:
@@ -149,7 +158,8 @@ def diurnal_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
 
 def heavy_tailed_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
                        tail_index: float = 1.3, max_scale: int = 8,
-                       mix: str = "balanced", seed: int = 0) -> list[Arrival]:
+                       mix: str = "balanced", seed: int = 0,
+                       capacity: float = 1.0) -> list[Arrival]:
     """Poisson arrivals with Pareto-distributed job scale.
 
     Each arrival's step count is stretched by a power-of-two factor from a
@@ -175,13 +185,15 @@ def heavy_tailed_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
         scaled.append(variants[key])
     # elephants inflate the mean solo work; rate uses the *base* pool so the
     # nominal load stays comparable across trace families
-    times = np.cumsum(rng.exponential(1.0 / _rate(jobs, load), size=n))
+    times = np.cumsum(rng.exponential(1.0 / _rate(jobs, load, capacity),
+                                      size=n))
     return _assemble(times, scaled)
 
 
 def fragmented_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
                      mix: str = "balanced", seed: int = 0,
-                     tols: tuple[float, ...] = (1.05, 1.35, 1.65)) -> list[Arrival]:
+                     tols: tuple[float, ...] = (1.05, 1.35, 1.65),
+                     capacity: float = 1.0) -> list[Arrival]:
     """Poisson arrivals with MISO-style right-sized slice requests.
 
     Each arrival draws a tolerance from ``tols`` and requests the narrowest
@@ -217,7 +229,8 @@ def fragmented_trace(jobs: list[JobProfile], n: int, load: float = 1.2,
             variants[key] = dataclasses.replace(
                 j, name=key, meta={**j.meta, "units": w})
         sized.append(variants[key])
-    times = np.cumsum(rng.exponential(1.0 / _rate(jobs, load), size=n))
+    times = np.cumsum(rng.exponential(1.0 / _rate(jobs, load, capacity),
+                                      size=n))
     return _assemble(times, sized)
 
 

@@ -82,7 +82,10 @@ import numpy as np
 from repro.core.partition import N_UNITS, solo_partition
 from repro.core.perfmodel_jax import UNIT_SIZES, solo_duration_table
 from repro.online.policies import TimeSharingPolicy
-from repro.online.simulator import Arrival, JobRecord, Segment, SimResult
+from repro.online.router import FleetView, PodView, make_router
+from repro.online.simulator import (
+    Arrival, JobRecord, Segment, SimConfig, SimResult,
+)
 
 _INF = jnp.float32(jnp.inf)
 _BIG_SEQ = jnp.int32(2**30)
@@ -367,7 +370,12 @@ def _build_run(window: int, backfill: bool, capacity: int):
     """
     max_steps = 2 * capacity + 4
 
-    def run(trace: TraceArrays, jobs: JobTable) -> _State:
+    def run(trace: TraceArrays, jobs: JobTable,
+            width=jnp.int32(N_UNITS)) -> _State:
+        # `width` is the pod's slice width (traced, so a fleet can vmap a
+        # pod axis over it): a narrower pod is the same engine with the
+        # upper units born busy — they are never claimed, never freed, and
+        # every fit query sees them occupied, mirroring the heap's _Pod.
         form_window = _make_form_window(trace, jobs, window)
         A = capacity
         R = 2 * window + 2
@@ -376,7 +384,7 @@ def _build_run(window: int, backfill: bool, capacity: int):
         st = _State(
             now=f32(0.0), pend_lo=i32(0), pend_hi=i32(0),
             profiled=jnp.zeros(J, dtype=bool),
-            free=jnp.ones(N_UNITS, dtype=bool),
+            free=_UNIT_IDX < width,
             r_active=jnp.zeros(R, dtype=bool),
             r_seq=jnp.zeros(R, i32), r_win=jnp.zeros(R, i32),
             r_grp=jnp.zeros(R, i32), next_seq=i32(0),
@@ -565,6 +573,37 @@ def build_job_table(jobs: list) -> JobTable:
                     solo8=jnp.asarray(solo8, jnp.float32))
 
 
+def _emit_lane(st: _State, jt: JobTable, records: list[JobRecord],
+               pod: int = 0) -> list[Segment]:
+    """Scatter one engine lane's group log into its (sorted-subtrace-
+    indexed) ``JobRecord``\\ s and return the lane's :class:`Segment`\\ s
+    in placement order — the reconstruction shared by the single-pod and
+    fleet wrappers."""
+    g_n = int(st.n_groups)
+    g_arr = np.asarray(st.g_arr)[:g_n]
+    g_t0 = np.asarray(st.g_t0)[:g_n]
+    g_job = np.asarray(st.g_job)[:g_n]
+    g_dur = np.asarray(jt.dur)[g_job]
+    g_w = np.asarray(jt.width)[g_job]
+    pack = np.asarray(st.g_pack)[:g_n]
+    g_pseq, g_start, g_bf = pack >> 4, (pack >> 1) & 7, (pack & 1) == 1
+    labels = {w: solo_partition(int(w)).label for w in set(g_w.tolist())}
+    for g in range(g_n):
+        rec = records[int(g_arr[g])]
+        rec.dispatch = float(g_t0[g])
+        rec.finish = float(g_t0[g] + g_dur[g])
+        rec.group_size = 1
+        rec.partition = labels[int(g_w[g])]
+        rec.units = int(g_w[g])
+        rec.backfilled = bool(g_bf[g])
+        rec.pod = pod
+    return [Segment(t0=float(g_t0[g]), t1=float(g_t0[g] + g_dur[g]), jobs=1,
+                    partition=labels[int(g_w[g])],
+                    slices=((int(g_start[g]), int(g_w[g])),),
+                    backfilled=bool(g_bf[g]), pod=pod)
+            for g in np.argsort(g_pseq)]
+
+
 class VectorizedClusterSimulator:
     """Drop-in vectorized engine for solo-placement policies.
 
@@ -618,34 +657,11 @@ class VectorizedClusterSimulator:
         st = jax.block_until_ready(self._run1(tr, jt))
         self._check_err(int(st.err))
 
-        g_n = int(st.n_groups)
-        g_arr = np.asarray(st.g_arr)[:g_n]
-        g_t0 = np.asarray(st.g_t0)[:g_n]
-        g_job = np.asarray(st.g_job)[:g_n]
-        g_dur = np.asarray(jt.dur)[g_job]
-        g_w = np.asarray(jt.width)[g_job]
-        pack = np.asarray(st.g_pack)[:g_n]
-        g_pseq, g_start, g_bf = pack >> 4, (pack >> 1) & 7, (pack & 1) == 1
-        labels = {w: solo_partition(int(w)).label for w in set(g_w.tolist())}
-
         records = [JobRecord(binary=a.binary, name=a.profile.name,
                              arrival=a.t, solo_time=a.profile.solo_time())
                    for a in order]
-        for g in range(g_n):
-            rec = records[int(g_arr[g])]
-            rec.dispatch = float(g_t0[g])
-            rec.finish = float(g_t0[g] + g_dur[g])
-            rec.group_size = 1
-            rec.partition = labels[int(g_w[g])]
-            rec.units = int(g_w[g])
-            rec.backfilled = bool(g_bf[g])
         res.jobs = records
-        for g in np.argsort(g_pseq):
-            res.timeline.append(Segment(
-                t0=float(g_t0[g]), t1=float(g_t0[g] + g_dur[g]), jobs=1,
-                partition=labels[int(g_w[g])],
-                slices=((int(g_start[g]), int(g_w[g])),),
-                backfilled=bool(g_bf[g])))
+        res.timeline = _emit_lane(st, jt, records)
         res.busy_time = float(st.busy_time)
         res.dispatches = int(st.dispatches)
         res.backfills = int(st.backfills)
@@ -693,3 +709,122 @@ class VectorizedClusterSimulator:
                                "exceeded (stuck trace?)")
         if err:
             raise RuntimeError(f"vectorized engine: error lanes {err:#x}")
+
+
+class VectorizedFleetSimulator:
+    """Hash-routed fleet on the vectorized engine: a vmapped pod axis.
+
+    The hash router is the one shipped policy computable from the trace
+    alone — its assignment depends only on the binary path, the seed, and
+    the *static* pod widths (eligibility), never on cluster state.  Routed
+    sub-streams therefore never interact (claims are pod-local, windows
+    are pod-local, a routed job never migrates), so the heap fleet under
+    hash routing is **exactly** the merge of independent single-pod
+    simulations of the routed subtraces.  This wrapper materializes that
+    decomposition: split the trace with the same :class:`~repro.online.\\
+    router.HashRouter` the heap uses, compile each pod's subtrace against
+    one shared job table, and run all pods in ONE vmapped device call with
+    a per-lane ``width`` (a narrow pod's upper units are born busy).
+    Per-pod lanes are merged back into a single fleet
+    :class:`~repro.online.simulator.SimResult` — records in sorted-trace
+    order tagged with their pod, segments on the fleet-wide unit axis —
+    matching the heap fleet's decisions exactly and its clock to float32.
+
+    State-dependent routers (``least_loaded``/``frag``) couple the pods
+    through the live :class:`FleetView` and stay heap-only, as do
+    ``mode="blocking"``, ``on_tick`` re-training, and non-solo policies
+    (:meth:`supports` mirrors :class:`VectorizedClusterSimulator`).
+    ``capacity`` bounds the *per-pod* subtrace length; hash-splitting an
+    ``n``-arrival trace needs roughly ``n / n_pods`` plus skew headroom.
+    """
+
+    def __init__(self, policy=None, config: SimConfig | None = None, *,
+                 window: int = 8, backfill: bool = True,
+                 capacity: int = 256,
+                 pods: tuple[int, ...] | None = None,
+                 router: str = "hash", router_seed: int = 0):
+        if config is None:
+            config = SimConfig(
+                window=window, backfill=backfill,
+                pods=tuple(pods) if pods is not None else (N_UNITS,),
+                router=router, router_seed=router_seed)
+        if not self.supports(policy):
+            raise ValueError(
+                f"vectorized fleet serves solo-placement plans "
+                f"(TimeSharingPolicy); got {type(policy).__name__}")
+        if config.router != "hash":
+            raise ValueError(
+                f"vectorized fleet requires the state-free 'hash' router "
+                f"(got {config.router!r}); state-dependent routers couple "
+                f"pods and run on the heap ClusterSimulator")
+        if config.mode != "concurrent" or config.tick_interval_s:
+            raise ValueError("vectorized fleet is concurrent-mode only, "
+                             "without ticks")
+        self.config = config
+        self.policy = policy if policy is not None else TimeSharingPolicy()
+        self.capacity = capacity
+        self._router = make_router(config.router, config.router_seed)
+        self._runp = jax.jit(jax.vmap(
+            _build_run(config.window, config.backfill, capacity),
+            in_axes=(0, None, 0)))
+
+    @staticmethod
+    def supports(policy) -> bool:
+        return VectorizedClusterSimulator.supports(policy)
+
+    def run(self, trace: list[Arrival]) -> SimResult:
+        cfg = self.config
+        res = SimResult(policy=getattr(self.policy, "name", "time_sharing"),
+                        window=cfg.window, jobs=[], mode="concurrent",
+                        slice_busy_s=[0.0] * cfg.total_units,
+                        pods=cfg.pods, router=cfg.router)
+        if not trace:
+            return res
+        order = sorted(trace, key=lambda a: a.t)
+        records = [JobRecord(binary=a.binary, name=a.profile.name,
+                             arrival=a.t, solo_time=a.profile.solo_time())
+                   for a in order]
+        res.jobs = records
+
+        # static pre-split: same router object the heap constructs, fed a
+        # quiescent FleetView (hash ignores the dynamic fields) — so the
+        # assignment is bit-identical to the heap's at-arrival routing
+        view = FleetView(pods=tuple(
+            PodView(idx=i, width=w, free=(True,) * w, pending=0, ready=0,
+                    queue_units=0, busy_units=0)
+            for i, w in enumerate(cfg.pods)))
+        sub: list[list[Arrival]] = [[] for _ in cfg.pods]
+        sub_rec: list[list[JobRecord]] = [[] for _ in cfg.pods]
+        for a, rec in zip(order, records):
+            p = 0 if cfg.n_pods == 1 else self._router.route(a, view)
+            rec.pod = p
+            sub[p].append(a)
+            sub_rec[p].append(rec)
+
+        names: dict[str, int] = {}
+        jobs: list = []
+        compiled = [compile_trace(s, self.capacity, names, jobs)[0]
+                    for s in sub]
+        jt = build_job_table(jobs)
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *compiled)
+        widths = jnp.asarray(np.array(cfg.pods, np.int32))
+        sts = jax.block_until_ready(self._runp(batch, jt, widths))
+        VectorizedClusterSimulator._check_err(
+            int(np.max(np.asarray(sts.err))))
+
+        offs = res.pod_offsets
+        segs: list[Segment] = []
+        for p, w in enumerate(cfg.pods):
+            st = jax.tree.map(lambda x, p=p: x[p], sts)
+            segs.extend(_emit_lane(st, jt, sub_rec[p], pod=p))
+            res.busy_time += float(st.busy_time)
+            res.dispatches += int(st.dispatches)
+            res.backfills += int(st.backfills)
+            sb = np.asarray(st.slice_busy)
+            for u in range(w):
+                res.slice_busy_s[offs[p] + u] = float(sb[u])
+        # merge lanes chronologically; Python's stable sort keeps each
+        # pod's placement order intact on ties
+        segs.sort(key=lambda s: (s.t0, s.pod))
+        res.timeline = segs
+        return res
