@@ -28,7 +28,14 @@ ratio regressions):
     x hash routing's (smart placement must not lose to the stateless
     baseline), and the recorded ``single_pod_parity`` check — the
     ``pods=(8,)`` fleet bit-matching the committed single-pod cells —
-    holds on every family.
+    holds on every family;
+  * the recorded ``telemetry_overhead`` ratio (telemetry-enabled /
+    disabled sim wall, same machine, best-of-N both sides) stays at or
+    below ``TELEMETRY_OVERHEAD_MAX`` on both engines — observability must
+    not tax the hot path;
+  * the recorded ``retrain_trigger`` A/B keeps drift-triggered serving at
+    or above ``DRIFT_RETRAIN_FLOOR`` x clock-triggered throughput while
+    retraining no more often.
 
 A *missing* optional section is a warning, not a failure: the trajectory
 is grown incrementally via ``online_sim --section <name>`` merges, and a
@@ -53,6 +60,8 @@ VECSIM_SPEEDUP_FLOOR = 5.0  # committed vmapped-sweep traces/sec vs heap
 VECSIM_MIN_BATCH = 64     # sweep batch the speedup must be recorded at
 FLEET_P99_FLOOR = 1.0     # best router p99 vs hash, fragmented fleet
 FLEET_MIN_ARRIVALS = 10_000  # committed fleet grid scale (p50/p99 regime)
+TELEMETRY_OVERHEAD_MAX = 1.10  # telemetry-on/off sim wall ratio, both engines
+DRIFT_RETRAIN_FLOOR = 0.97  # drift-triggered/clock-triggered throughput
 
 
 def _load(path: str, failures: list[str]) -> dict | None:
@@ -133,6 +142,33 @@ def gate_online(bench: dict, failures: list[str],
             if not ok:
                 failures.append(f"online: pods=(8,) fleet diverges from the "
                                 f"committed single-pod {fam} cell")
+    tel = bench.get("telemetry_overhead") or {}
+    if not tel:
+        _warn_missing("online: telemetry_overhead", warnings)
+    else:
+        for engine in ("heap", "vectorized"):
+            ratio = tel.get(engine, {}).get("overhead_ratio")
+            if ratio is None:
+                failures.append(f"online: telemetry_overhead.{engine}."
+                                f"overhead_ratio missing")
+            elif ratio > TELEMETRY_OVERHEAD_MAX:
+                failures.append(f"online: {engine} telemetry overhead "
+                                f"{ratio:.3f}x > max "
+                                f"{TELEMETRY_OVERHEAD_MAX:.2f}x")
+    rt = bench.get("retrain_trigger") or {}
+    if not rt:
+        _warn_missing("online: retrain_trigger", warnings)
+    else:
+        ratio = rt.get("drift_vs_clock_throughput", 0.0)
+        if ratio < DRIFT_RETRAIN_FLOOR:
+            failures.append(f"online: drift-triggered/clock-triggered "
+                            f"throughput = {ratio:.3f} < floor "
+                            f"{DRIFT_RETRAIN_FLOOR}")
+        if rt.get("drift", {}).get("retrains", 0) > \
+                rt.get("clock", {}).get("retrains", 0):
+            failures.append("online: drift trigger recorded MORE retrains "
+                            "than the clock — the gate is supposed to prove "
+                            "it retrains less, not more")
 
 
 def gate_train(bench: dict, failures: list[str],

@@ -42,9 +42,21 @@ and ``--engine vectorized`` routes supported cells (solo-placement
 policies, concurrent mode, no retrainer) through the vectorized engine —
 each cell records which ``engine`` served it.
 
-    PYTHONPATH=src python -m benchmarks.online_sim [--fast] \
+    PYTHONPATH=src python -m benchmarks.online_sim [--fast] [--profile] \
         [--out BENCH_online.json] [--engine {heap,vectorized}]
     PYTHONPATH=src python -m benchmarks.online_sim --section arrival_aware
+
+``--profile`` records a per-phase wall-time breakdown in every heap cell
+(``profile``: sim / policy / retrain seconds, plus per-family
+``trace_gen_s``) so future perf PRs have a phase-level baseline.  The
+``retrain_trigger`` section is the clock-vs-drift re-training A/B
+(``OnlineRetrainer(trigger="drift")`` gated by the telemetry layer's
+``DriftMonitor``); ``telemetry_overhead`` records the telemetry-on/off
+sim-wall ratio for both engines, gated at ``TELEMETRY_OVERHEAD_MAX`` by
+``benchmarks.bench_gate``.  In smoke mode ``--telemetry-artifacts DIR``
+additionally serves one telemetry-enabled fleet cell and writes its
+Chrome trace + events/metrics JSONL there for CI artifact upload,
+cross-checking the metric aggregates against ``summary()``.
 
 ``--section <name>`` recomputes only that section (for ``arrival_aware``,
 re-training both agents deterministically from the committed run's
@@ -68,12 +80,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import statistics
 import sys
 import time
 
 from benchmarks.bench_gate import (
     ARRIVAL_FLOOR, CONC_BLK_FLOOR, FLEET_MIN_ARRIVALS, FLEET_P99_FLOOR,
-    FRAG_MARGIN, VECSIM_SPEEDUP_FLOOR,
+    FRAG_MARGIN, TELEMETRY_OVERHEAD_MAX, VECSIM_SPEEDUP_FLOOR,
 )
 from benchmarks.common import emit, missing_keys
 from repro.core import (
@@ -85,8 +98,8 @@ from repro.core.env import context_dim
 from repro.core.partition import N_UNITS
 from repro.online import (
     ClusterSimulator, GreedyPackerPolicy, OnlineRetrainer, RLDispatchPolicy,
-    SimConfig, StaticPartitionPolicy, TRACE_FAMILIES, TimeSharingPolicy,
-    VectorizedClusterSimulator, VectorizedFleetSimulator,
+    SimConfig, StaticPartitionPolicy, TRACE_FAMILIES, Telemetry,
+    TimeSharingPolicy, VectorizedClusterSimulator, VectorizedFleetSimulator,
     default_retrain_train_config,
 )
 
@@ -145,26 +158,63 @@ ARRIVAL_NOTE = (
 
 
 def _simulate(policy, trace, window, retrainer=None, mode="concurrent",
-              engine="heap"):
+              engine="heap", profile=False):
     # the vectorized engine serves solo-placement plans in concurrent mode
     # with no periodic tick; everything else stays on the Python heap
     use_vec = (engine == "vectorized" and retrainer is None
                and mode == "concurrent"
                and VectorizedClusterSimulator.supports(policy))
+    # --profile: shim the policy's decide() and the retrainer callable with
+    # wall-clock accumulators so each cell splits its sim_wall_s into
+    # sim / policy / retrain phases (heap cells only; the vectorized
+    # engine's policy work is compiled into the graph)
+    pt = None
+    on_tick = retrainer
+    if profile and not use_vec:
+        from repro.online.telemetry import PhaseTimer
+        pt = PhaseTimer()
+        orig_decide = policy.decide
+
+        def timed_decide(*a, **kw):
+            t = time.perf_counter()
+            try:
+                return orig_decide(*a, **kw)
+            finally:
+                pt.add("policy_s", time.perf_counter() - t)
+
+        policy.decide = timed_decide
+        if retrainer is not None:
+            def on_tick(now, sim, _rt=retrainer):
+                t = time.perf_counter()
+                try:
+                    _rt(now, sim)
+                finally:
+                    pt.add("retrain_s", time.perf_counter() - t)
     t0 = time.perf_counter()
-    if use_vec:
-        res = VectorizedClusterSimulator(
-            policy, window=window,
-            capacity=max(128, 2 * len(trace))).run(trace)
-    else:
-        sim = ClusterSimulator(
-            policy, window=window, mode=mode,
-            tick_interval_s=retrainer.interval_s if retrainer else None,
-            on_tick=retrainer)
-        res = sim.run(trace)
+    try:
+        if use_vec:
+            res = VectorizedClusterSimulator(
+                policy, window=window,
+                capacity=max(128, 2 * len(trace))).run(trace)
+        else:
+            sim = ClusterSimulator(
+                policy, window=window, mode=mode,
+                tick_interval_s=retrainer.interval_s if retrainer else None,
+                on_tick=on_tick)
+            res = sim.run(trace)
+    finally:
+        if pt is not None:
+            del policy.decide
     out = res.summary()
     out["sim_wall_s"] = time.perf_counter() - t0
     out["engine"] = "vectorized" if use_vec else "heap"
+    if pt is not None:
+        phases = pt.as_dict()
+        phases.setdefault("policy_s", 0.0)
+        phases.setdefault("retrain_s", 0.0)
+        phases["sim_s"] = max(
+            0.0, out["sim_wall_s"] - phases["policy_s"] - phases["retrain_s"])
+        out["profile"] = phases
     if retrainer is not None:
         out["retrains"] = len(retrainer.history)
         out["retrain_history"] = retrainer.history
@@ -343,6 +393,122 @@ def _vectorized_sim(zoo, window, n, load, seed, batch=64, capacity=128):
     return section
 
 
+def _retrain_trigger(zoo, agent, env_cfg, window, n, load, seed,
+                     interval_min, retrain_episodes):
+    """Clock vs drift re-training A/B on a drift-prone trace.
+
+    The MMPP family's regime switches move the arrival mix over time —
+    exactly what the :class:`~repro.online.telemetry.DriftMonitor` watches
+    (class/width-mix entropy, idle-fraction rise).  Both arms serve the
+    identical trace with the same frozen starting agent and the same tick
+    cadence; the clock arm retrains every tick, the drift arm only on a
+    drift verdict.  The committed cell records throughput and retrain
+    counts — the gate (``benchmarks.bench_gate``) requires drift to hold
+    throughput within ``DRIFT_RETRAIN_FLOOR`` of clock while never
+    retraining more often.
+    """
+    trace = TRACE_FAMILIES["mmpp"](zoo, n=n, load=load, seed=seed)
+    out: dict = {"family": "mmpp", "n_arrivals": n, "load": load,
+                 "seed": seed, "interval_min": interval_min,
+                 "retrain_episodes": retrain_episodes}
+    for trig in ("clock", "drift"):
+        pol = RLDispatchPolicy(agent, env_cfg)
+        rt = OnlineRetrainer(
+            policy=pol, train_cfg=default_retrain_train_config(
+                retrain_episodes),
+            interval_s=interval_min * 60.0, min_jobs=4, trigger=trig)
+        cell = _simulate(pol, trace, window, retrainer=rt)
+        if trig == "drift":
+            cell["drift_observations"] = len(rt.monitor.history)
+            cell["drift_verdicts"] = sum(
+                1 for h in rt.monitor.history if h["drift"])
+        out[trig] = cell
+        emit(f"retrain_trigger_{trig}", cell["sim_wall_s"] * 1e6 / n,
+             f"retrains={cell['retrains']} tp={cell['throughput']:.3f}")
+    out["drift_vs_clock_throughput"] = (out["drift"]["throughput"]
+                                        / out["clock"]["throughput"])
+    out["retrains_saved"] = (out["clock"]["retrains"]
+                             - out["drift"]["retrains"])
+    out["note"] = (
+        "identical mmpp trace, identical frozen starting agent, identical "
+        "tick cadence; clock retrains every tick with enough repository "
+        "jobs, drift only when the DriftMonitor fires on the interval's "
+        "class/width-mix entropy or idle-fraction shift (then rebases); "
+        "drift_vs_clock_throughput near 1.0 with retrains_saved > 0 means "
+        "the drift signals buy back retraining compute without giving up "
+        "serving quality")
+    return out
+
+
+def _telemetry_overhead(zoo, window, n, load, seed, repeats=21):
+    """Telemetry-enabled vs disabled sim wall time, both engines.
+
+    Same machine, same run, ``repeats`` alternating off/on pairs — the
+    committed ``overhead_ratio`` is the median of per-pair ratios, which
+    cancels slow machine drift that a best-of or median-of-each-side
+    comparison picks up as phantom overhead.  The heap side pays
+    per-event hook calls; the vectorized side carries the
+    ``MetricsState`` through its ``lax.while_loop`` (compile time
+    excluded both ways — it amortizes).  Gated at
+    ``TELEMETRY_OVERHEAD_MAX`` by ``benchmarks.bench_gate``.
+    """
+    trace = TRACE_FAMILIES["poisson"](zoo, n=n, load=load, seed=seed)
+
+    def heap_wall(tel_on: bool) -> float:
+        tel = Telemetry() if tel_on else None
+        sim = ClusterSimulator(TimeSharingPolicy(), window=window,
+                               telemetry=tel)
+        t0 = time.perf_counter()
+        sim.run(trace)
+        return time.perf_counter() - t0
+
+    def paired(wall) -> tuple[float, float, float]:
+        wall(False), wall(True)                  # warm outside timing
+        pairs = [(wall(False), wall(True)) for _ in range(repeats)]
+        return (statistics.median(b for b, _ in pairs),
+                statistics.median(t for _, t in pairs),
+                statistics.median(t / b for b, t in pairs))
+
+    heap_base, heap_tel, heap_ratio = paired(heap_wall)
+
+    cap = max(128, 2 * len(trace))
+    engines = {
+        False: VectorizedClusterSimulator(TimeSharingPolicy(), window=window,
+                                          capacity=cap),
+        True: VectorizedClusterSimulator(TimeSharingPolicy(), window=window,
+                                         capacity=cap, telemetry=True),
+    }
+    for eng in engines.values():
+        eng.run(trace)                       # compile outside the timed region
+
+    def vec_wall(tel_on: bool) -> float:
+        t0 = time.perf_counter()
+        engines[tel_on].run(trace)
+        return time.perf_counter() - t0
+
+    vec_base, vec_tel, vec_ratio = paired(vec_wall)
+    section = {
+        "family": "poisson", "n_arrivals": n, "load": load, "seed": seed,
+        "window": window, "repeats": repeats,
+        "heap": {"base_wall_s": heap_base, "telemetry_wall_s": heap_tel,
+                 "overhead_ratio": heap_ratio},
+        "vectorized": {"base_wall_s": vec_base, "telemetry_wall_s": vec_tel,
+                       "overhead_ratio": vec_ratio},
+        "max_allowed_ratio": TELEMETRY_OVERHEAD_MAX,
+        "note": ("median per-pair off/on wall ratios on one machine in one "
+                 "process — cross-machine absolute times never enter the "
+                 "gate; vectorized walls are warm (compile excluded, as "
+                 "the engine is used); heap telemetry includes full event "
+                 "recording + metrics hooks, vectorized carries "
+                 "MetricsState in-graph"),
+    }
+    emit("telemetry_overhead_heap", heap_tel * 1e6 / n,
+         f"ratio={heap_ratio:.3f}x")
+    emit("telemetry_overhead_vec", vec_tel * 1e6 / n,
+         f"ratio={vec_ratio:.3f}x")
+    return section
+
+
 def _context_agent(zoo, env_cfg, base_agent, episodes, seed=0):
     """Train the arrival-aware agent, warm-started from the profile-only one.
 
@@ -397,27 +563,33 @@ def _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent, families,
 
 
 def _bench_trace(tname, trace, agent, env_cfg, window, retrain_cfg,
-                 baselines: bool, engine="heap"):
+                 baselines: bool, engine="heap", profile=False,
+                 trace_gen_s=None):
     """All policies on one trace; fresh repositories so profiling restarts."""
     out: dict = {"arrivals": len(trace), "span_s": trace[-1].t}
+    if trace_gen_s is not None:
+        out["trace_gen_s"] = trace_gen_s
     out["time_sharing"] = _simulate(TimeSharingPolicy(), trace, window,
-                                    engine=engine)
+                                    engine=engine, profile=profile)
     # dispatch-mode comparison: same frozen policies, blocking pod
     out["time_sharing_blocking"] = _simulate(TimeSharingPolicy(), trace,
-                                             window, mode="blocking")
+                                             window, mode="blocking",
+                                             profile=profile)
     if baselines:
         out["greedy_packer"] = _simulate(GreedyPackerPolicy(), trace, window,
-                                         engine=engine)
+                                         engine=engine, profile=profile)
         out["mig_mps_default"] = _simulate(
             StaticPartitionPolicy("mig_mps_default"), trace, window,
-            engine=engine)
+            engine=engine, profile=profile)
         out["rl"] = _simulate(RLDispatchPolicy(agent, env_cfg), trace, window,
-                              engine=engine)
+                              engine=engine, profile=profile)
         out["rl_blocking"] = _simulate(RLDispatchPolicy(agent, env_cfg),
-                                       trace, window, mode="blocking")
+                                       trace, window, mode="blocking",
+                                       profile=profile)
     pol = RLDispatchPolicy(agent, env_cfg)
     rt = OnlineRetrainer(policy=pol, **retrain_cfg)
-    out["rl_retrain"] = _simulate(pol, trace, window, retrainer=rt)
+    out["rl_retrain"] = _simulate(pol, trace, window, retrainer=rt,
+                                  profile=profile)
     ts_tp = out["time_sharing"]["throughput"]
     for name in ("greedy_packer", "mig_mps_default", "rl", "rl_retrain"):
         if name in out:
@@ -470,10 +642,18 @@ def main() -> None:
                     help="vmapped batch size for the vectorized_sim sweep")
     ap.add_argument("--section",
                     choices=("arrival_aware", "vectorized_sim", "sim_wall",
-                             "fleet_scale"),
+                             "fleet_scale", "retrain_trigger",
+                             "telemetry_overhead"),
                     default=None,
                     help="recompute one section and merge it into the "
                          "committed --bench-json instead of a full run")
+    ap.add_argument("--profile", action="store_true",
+                    help="record a per-phase wall-time breakdown (trace "
+                         "gen / sim / policy / retrain) in each heap cell")
+    ap.add_argument("--telemetry-artifacts", default=None, metavar="DIR",
+                    help="(smoke) write a telemetry-enabled fleet cell's "
+                         "Chrome trace + events/metrics JSONL into DIR "
+                         "for CI artifact upload")
     ap.add_argument("--bench-json", default="BENCH_online.json",
                     help="committed trajectory checked for keys in --smoke")
     ap.add_argument("--out", default=None,
@@ -526,6 +706,66 @@ def main() -> None:
         print(f"merged fleet_scale into {out}: best/hash p99 on fragmented "
               f"= {best:.2f}x (floor {FLEET_P99_FLOOR:.1f}), parity "
               f"{section['single_pod_parity']}")
+        return
+
+    if args.section == "telemetry_overhead":
+        with open(args.bench_json) as f:
+            bench = json.load(f)
+        window = args.window or bench["window"]
+        n = args.arrivals or max(400, bench["n_arrivals"])
+        load = bench.get("load", args.load)
+        seed = bench.get("seed", args.seed)
+        zoo = make_zoo(dryrun_dir=None)
+        print("name,us_per_call,derived")
+        section = _telemetry_overhead(zoo, window, n, load, seed)
+        bench["telemetry_overhead"] = section
+        worst = max(section["heap"]["overhead_ratio"],
+                    section["vectorized"]["overhead_ratio"])
+        bench.setdefault("acceptance", {})[
+            "telemetry_overhead_within_max"] = worst <= TELEMETRY_OVERHEAD_MAX
+        out = args.out or args.bench_json
+        with open(out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"merged telemetry_overhead into {out}: heap "
+              f"{section['heap']['overhead_ratio']:.3f}x, vectorized "
+              f"{section['vectorized']['overhead_ratio']:.3f}x "
+              f"(max {TELEMETRY_OVERHEAD_MAX:.2f}x)")
+        return
+
+    if args.section == "retrain_trigger":
+        with open(args.bench_json) as f:
+            bench = json.load(f)
+        window = args.window or bench["window"]
+        n = args.arrivals or bench["n_arrivals"]
+        load = bench.get("load", args.load)
+        seed = bench.get("seed", args.seed)
+        episodes = args.episodes or bench["train_episodes"]
+        interval_min = (args.retrain_interval_min
+                        or bench.get("retrain", {}).get("interval_min", 30.0))
+        retrain_episodes = bench.get("retrain", {}).get("episodes", 240)
+        zoo = make_zoo(dryrun_dir=None)
+        env_cfg = EnvConfig(window=window, c_max=4)
+        print("name,us_per_call,derived")
+        # deterministic replication of the committed run's profile-only agent
+        agent, _ = train_agent(
+            zoo, env_cfg,
+            TrainConfig(episodes=episodes, eval_every=max(50, episodes // 4),
+                        seed=seed,
+                        dqn=DQNConfig(eps_decay_steps=episodes * 6)))
+        section = _retrain_trigger(zoo, agent, env_cfg, window, n, load,
+                                   seed, interval_min, retrain_episodes)
+        bench["retrain_trigger"] = section
+        bench.setdefault("acceptance", {})[
+            "drift_trigger_holds_throughput_with_fewer_retrains"] = (
+            section["drift_vs_clock_throughput"] >= 0.97
+            and section["retrains_saved"] >= 0)
+        out = args.out or args.bench_json
+        with open(out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"merged retrain_trigger into {out}: drift/clock throughput "
+              f"{section['drift_vs_clock_throughput']:.3f}, retrains "
+              f"{section['clock']['retrains']} -> "
+              f"{section['drift']['retrains']}")
         return
 
     if args.section == "vectorized_sim":
@@ -625,11 +865,14 @@ def main() -> None:
 
     traces = {}
     for i, fam in enumerate(families):
+        t_gen = time.perf_counter()
         trace = TRACE_FAMILIES[fam](zoo, n=n, load=args.load,
                                     seed=args.seed + i)
+        t_gen = time.perf_counter() - t_gen
         traces[fam] = _bench_trace(fam, trace, agent, env_cfg, window,
                                    retrain_cfg, baselines=not args.smoke,
-                                   engine=args.engine)
+                                   engine=args.engine, profile=args.profile,
+                                   trace_gen_s=t_gen if args.profile else None)
 
     # observation-mode comparison: context-trained vs profile-only, frozen
     ctx_episodes = args.ctx_episodes or (100 if args.smoke else episodes)
@@ -677,6 +920,35 @@ def main() -> None:
         emit("fleet_smoke", 0.0,
              f"p99_hash={p99['hash']:.1f}s "
              f"gap={fleet_smoke['vec_heap_p99_gap_s']:.4f}s")
+        if args.telemetry_artifacts:
+            # telemetry-enabled fleet cell: Chrome trace + events/metrics
+            # JSONL for CI artifact upload, with the metrics aggregates
+            # cross-checked against summary() (the acceptance invariant)
+            import os
+            os.makedirs(args.telemetry_artifacts, exist_ok=True)
+            tel = Telemetry()
+            tres = ClusterSimulator(
+                TimeSharingPolicy(),
+                SimConfig(window=window, pods=pods, router="hash"),
+                telemetry=tel).run(fleet_trace)
+            summ = tres.summary()
+            d = args.telemetry_artifacts
+            tel.recorder.write_chrome_trace(f"{d}/smoke_trace.json", pods)
+            tel.recorder.write_jsonl(f"{d}/smoke_events.jsonl")
+            tel.metrics.write_jsonl(f"{d}/smoke_metrics.jsonl")
+            mm = {m["name"]: m for m in tel.metrics.to_dicts()}
+            busy = sum(tres.slice_busy_s)
+            fleet_smoke["telemetry_matches_summary"] = (
+                mm["jobs_arrived"]["value"] == summ["jobs"]
+                and mm["backfills"]["value"] == summ["backfills"]
+                and mm["refits"]["value"] == summ["refits"]
+                and mm["windows_formed"]["value"] == summ["dispatches"]
+                and mm["groups_placed"]["value"] == summ["groups"]
+                and abs(mm["busy_unit_s"]["value"] - busy)
+                <= 1e-6 * max(busy, 1.0))
+            emit("telemetry_artifacts", 0.0,
+                 f"events={len(tel.recorder.events)} "
+                 f"match={fleet_smoke['telemetry_matches_summary']}")
     else:
         arrival = _arrival_aware(zoo, env_cfg, ctx_cfg, agent, ctx_agent,
                                  families, n, args.load, args.seed, window,
@@ -784,6 +1056,10 @@ def main() -> None:
                     f"fleet smoke: vectorized fleet p99 diverges from heap "
                     f"by {fleet_smoke['vec_heap_p99_gap_s']:.4f}s on the "
                     f"hash cell")
+            if not fleet_smoke.get("telemetry_matches_summary", True):
+                failures.append("fleet smoke: telemetry metrics diverge "
+                                "from summary() on the telemetry-enabled "
+                                "cell")
         missing = missing_keys(args.bench_json, REQUIRED_KEYS)
         if missing:
             failures.append(f"{args.bench_json} missing keys: {missing}")

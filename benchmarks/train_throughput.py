@@ -132,6 +132,32 @@ def _per_comparison(zoo, env_cfg, episodes: int, seeds: list[int],
     return out
 
 
+def _telemetry_series(zoo, env_cfg, episodes: int, seed: int = 0) -> dict:
+    """One telemetry-enabled training run -> the per-record series.
+
+    ``TrainConfig(telemetry=True)`` threads (loss, |TD|, grad-norm) out of
+    the scan carry at zero extra update work (same gradients, bit-identical
+    parameter trajectory — pinned by ``tests/test_telemetry.py``); ε/β ride
+    along from the schedules.  Written to ``BENCH_train_telemetry.json``
+    next to the throughput trajectory so training-dynamics regressions are
+    visible across PRs, not just end-point eval throughput.
+    """
+    cfg = TrainConfig(episodes=episodes, eval_every=max(1, episodes // 12),
+                      seed=seed, telemetry=True)
+    t0 = time.perf_counter()
+    _, hist = train_agent(zoo, env_cfg, cfg)
+    dt = time.perf_counter() - t0
+    series = {k: [r[k] for r in hist]
+              for k in ("episode", "eps", "loss", "td_abs", "grad_norm",
+                        "updates", "ep_reward", "eval_throughput")}
+    return {"episodes": episodes, "seed": seed, "window": env_cfg.window,
+            "wall_s": dt, "series": series,
+            "note": ("loss/td_abs/grad_norm are means of the scanned "
+                     "engine's per-step update samples between records; "
+                     "eps is the ε schedule at the record; beta only "
+                     "varies under per_alpha > 0 runs")}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="shrink measured episodes")
@@ -152,7 +178,21 @@ def main() -> None:
     ap.add_argument("--out", default=None,
                     help="where to write results (default BENCH_train.json; "
                          "smoke mode writes nothing unless given)")
+    ap.add_argument("--telemetry-episodes", type=int, default=600,
+                    help="episodes for the telemetry-series run")
+    ap.add_argument("--telemetry-out", default="BENCH_train_telemetry.json")
+    ap.add_argument("--telemetry-only", action="store_true",
+                    help="write only the telemetry series and exit")
     args, _ = ap.parse_known_args()
+    if args.telemetry_only:
+        zoo = make_zoo(dryrun_dir=None)
+        env_cfg = EnvConfig(window=args.window, c_max=4)
+        tel = _telemetry_series(zoo, env_cfg, args.telemetry_episodes)
+        with open(args.telemetry_out, "w") as f:
+            json.dump(tel, f, indent=1)
+        print(f"wrote {args.telemetry_out}: {len(tel['series']['episode'])} "
+              f"records over {tel['episodes']} episodes")
+        return
     if args.smoke:
         # scalar must run long enough to pass replay warmup (~9 episodes at
         # W=12 before batch_size transitions exist) or it measures a loop
@@ -229,6 +269,10 @@ def main() -> None:
         result["per_comparison"] = _per_comparison(
             zoo, env_cfg, args.per_episodes, list(range(args.per_seeds)),
             args.per_alpha)
+    tel = _telemetry_series(zoo, env_cfg, args.telemetry_episodes)
+    with open(args.telemetry_out, "w") as f:
+        json.dump(tel, f, indent=1)
+    print(f"wrote {args.telemetry_out}")
     out = args.out or "BENCH_train.json"
     with open(out, "w") as f:
         json.dump(result, f, indent=1)

@@ -22,6 +22,13 @@ to a pod at its arrival instant, then dispatched by the unchanged
 per-pod path (``--pods 8`` is the single-pod default, bit-compatible
 with earlier PRs).
 
+The RL run records the full telemetry event stream
+(docs/observability.md): the dispatch timeline printed at the end is
+read back from its ``place`` events, and ``--trace-out trace.json``
+writes the same stream as a Chrome-trace file — load it in
+https://ui.perfetto.dev to scrub the per-pod, per-slice-unit occupancy
+tracks interactively.
+
     PYTHONPATH=src python examples/online_cluster.py [--trace fragmented]
 """
 import argparse
@@ -31,7 +38,7 @@ from repro.core import EnvConfig, TrainConfig, make_zoo, train_agent
 from repro.core.agent import DQNConfig
 from repro.online import (
     ClusterSimulator, GreedyPackerPolicy, OnlineRetrainer, RLDispatchPolicy,
-    ROUTERS, SimConfig, TRACE_FAMILIES, TimeSharingPolicy,
+    ROUTERS, SimConfig, TRACE_FAMILIES, Telemetry, TimeSharingPolicy,
     default_retrain_train_config,
 )
 
@@ -56,6 +63,11 @@ def main():
                          "classic one-pod cluster")
     ap.add_argument("--router", choices=sorted(ROUTERS), default="hash",
                     help="fleet router assigning each arrival a pod")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="write the RL run's lifecycle events as a "
+                         "Chrome-trace JSON (open in Perfetto / "
+                         "chrome://tracing): one track per pod x slice "
+                         "unit")
     args = ap.parse_args()
     mode = "blocking" if args.blocking else "concurrent"
     pods = tuple(int(w) for w in args.pods.split(","))
@@ -94,8 +106,10 @@ def main():
     retrainer = OnlineRetrainer(
         policy=pol, train_cfg=default_retrain_train_config(240),
         interval_s=args.retrain_interval_min * 60.0)
+    tel = Telemetry()
     results["rl+retrain"] = ClusterSimulator(
-        pol, cfg(tick=retrainer.interval_s), on_tick=retrainer).run(trace)
+        pol, cfg(tick=retrainer.interval_s), on_tick=retrainer,
+        telemetry=tel).run(trace)
 
     ts = results["time_sharing"].throughput
     print(f"\n{'policy':14s} {'throughput':>10s} {'vs_ts':>6s} "
@@ -112,15 +126,23 @@ def main():
         print(f"  t={h['t_s']/60:6.0f}min repo={h['repository_jobs']:3d} jobs "
               f"{h['class_counts']} train_tp={h['train_eval_throughput']:.3f}")
 
-    print("\nfirst RL dispatches (slice occupancy timeline):")
-    for seg in sorted(results["rl+retrain"].timeline,
-                      key=lambda s: (s.t0, s.pod, s.slices))[:10]:
-        units = ",".join(f"{st}-{st + w - 1}" for st, w in seg.slices)
-        where = f"pod{seg.pod} units {units:9s}" if len(pods) > 1 \
+    # the slice-occupancy timeline now comes from the telemetry event
+    # stream — the same "place" events a --trace-out file visualizes
+    print("\nfirst RL dispatches (slice occupancy, from telemetry events):")
+    for e in sorted(tel.recorder.by_kind("place"),
+                    key=lambda e: (e["t_s"], e["pod"], e["slices"]))[:10]:
+        units = ",".join(f"{st}-{st + w - 1}" for st, w in e["slices"])
+        where = f"pod{e['pod']} units {units:9s}" if len(pods) > 1 \
             else f"units {units:9s}"
-        bf = " (backfilled)" if seg.backfilled else ""
-        print(f"  [{seg.t0:8.0f}s -> {seg.t1:8.0f}s] {where} "
-              f"{seg.jobs} job(s) on {seg.partition}{bf}")
+        bf = " (backfilled)" if e["backfilled"] else ""
+        print(f"  [{e['t_s']:8.0f}s -> {e['t1_s']:8.0f}s] {where} "
+              f"{len(e['jobs'])} job(s) on {e['partition']}{bf}")
+
+    if args.trace_out:
+        tel.recorder.write_chrome_trace(args.trace_out, pods=pods)
+        print(f"\nwrote {len(tel.recorder)} lifecycle events to "
+              f"{args.trace_out} (load in https://ui.perfetto.dev or "
+              f"chrome://tracing)")
     print("online_cluster OK")
 
 

@@ -85,6 +85,30 @@ def _dqn_update(params, target_params, opt, batch, cfg: DQNConfig):
     return params, opt, loss
 
 
+def _grad_norm(grads):
+    """Global L2 norm over all gradient leaves (training telemetry)."""
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(grads)))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _dqn_update_aux(params, target_params, opt, batch, cfg: DQNConfig):
+    """``_dqn_update`` + telemetry aux -> (params, opt, loss, |td|, gnorm).
+
+    The aux outputs ride ``has_aux`` on the same forward pass, and the
+    grad norm is read off the gradients the Adam step consumes anyway —
+    the parameter trajectory is bit-identical to ``_dqn_update``
+    (pinned by the training-telemetry parity test).
+    """
+    def loss_fn(p):
+        err, huber = _td_and_huber(p, target_params, batch, cfg)
+        return jnp.mean(huber), jnp.mean(jnp.abs(err))
+
+    (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    gnorm = _grad_norm(grads)
+    params, opt = _adam_step(params, grads, opt, cfg.lr)
+    return params, opt, loss, td, gnorm
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def _dqn_update_per(params, target_params, opt, batch, w, cfg: DQNConfig):
     """Importance-weighted double-DQN update -> (params, opt, loss, |td|).
@@ -102,6 +126,19 @@ def _dqn_update_per(params, target_params, opt, batch, w, cfg: DQNConfig):
     (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
     params, opt = _adam_step(params, grads, opt, cfg.lr)
     return params, opt, loss, td
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _dqn_update_per_aux(params, target_params, opt, batch, w, cfg: DQNConfig):
+    """``_dqn_update_per`` + grad-norm aux -> (params, opt, loss, td, gnorm)."""
+    def loss_fn(p):
+        err, huber = _td_and_huber(p, target_params, batch, cfg)
+        return jnp.mean(w * huber), jnp.abs(err)
+
+    (loss, td), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    gnorm = _grad_norm(grads)
+    params, opt = _adam_step(params, grads, opt, cfg.lr)
+    return params, opt, loss, td, gnorm
 
 
 @jax.jit

@@ -97,8 +97,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.agent import (
-    DQNAgent, DQNConfig, _dqn_update, _dqn_update_per, act_batch, beta_at,
-    epsilon_at,
+    DQNAgent, DQNConfig, _dqn_update, _dqn_update_aux, _dqn_update_per,
+    _dqn_update_per_aux, act_batch, beta_at, epsilon_at,
 )
 from repro.core.env import CoScheduleEnv, EnvConfig, EnvState, VecCoScheduleEnv
 from repro.core.metrics import relative_throughput
@@ -130,6 +130,8 @@ class TrainConfig:
     obs_context: bool = False           # arrival-aware context features:
                                         # promotes env_cfg.obs_context and
                                         # samples per-episode contexts in-scan
+    telemetry: bool = False             # per-record loss/TD/grad-norm series
+                                        # extracted from the scan carry
     dqn: DQNConfig = field(default_factory=DQNConfig)
 
 
@@ -210,7 +212,8 @@ def _bsel(pred, a, b):
 def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
                   batch_envs: int, updates_per_scan: int,
                   update_period: int, target_sync_updates: int,
-                  per: tuple[float, float, float] | None = None):
+                  per: tuple[float, float, float] | None = None,
+                  telemetry: bool = False):
     """One scan step = B env transitions + gated DQN updates.
 
     ``updates_per_scan`` updates run every ``update_period``-th scan step —
@@ -235,6 +238,12 @@ def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
     inside the scanned rollout.  The reset observation is recomputed from
     the re-contexted state; masks are context-independent.  Without the
     flag the key stream and compiled program are byte-identical to PR 4.
+
+    ``telemetry`` (static) swaps the update steps for their ``_aux``
+    variants and emits per-scan-step ``(loss, |td|, grad_norm, updated)``
+    alongside the episode outputs — same forward pass, same gradients,
+    bit-identical parameter trajectory (the aux outputs are reads of
+    quantities the update computes anyway).
     """
     B = batch_envs
     ctx_mode = venv.cfg.obs_context
@@ -255,52 +264,89 @@ def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
         scan_t = env_steps // B                       # 1-based scan step index
         can = (replay.size >= dqn_cfg.batch_size) & (scan_t % update_period == 0)
 
+        # (loss, |td|, grad_norm) of the scan step's last update — zeros on
+        # steps with no update; `can` tells the consumer which is which
+        tl = (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
         if per is None:
             def upd(_, uc):
-                params, target, opt, updates, k = uc
+                if telemetry:
+                    params, target, opt, updates, k, _ = uc
+                else:
+                    params, target, opt, updates, k = uc
                 k, k_s = jax.random.split(k)
                 batch = replay_sample(replay, k_s, dqn_cfg.batch_size)
-                params, opt, _ = _dqn_update(params, target, opt, batch, dqn_cfg)
+                if telemetry:
+                    params, opt, loss, td, gn = _dqn_update_aux(
+                        params, target, opt, batch, dqn_cfg)
+                else:
+                    params, opt, _ = _dqn_update(params, target, opt, batch,
+                                                 dqn_cfg)
                 updates = updates + 1
                 sync = updates % target_sync_updates == 0
                 target = jax.tree.map(lambda p, t: jnp.where(sync, p, t),
                                       params, target)
+                if telemetry:
+                    return params, target, opt, updates, k, (loss, td, gn)
                 return params, target, opt, updates, k
 
+            uc0 = (c.params, c.target, c.opt, c.updates, k_upd)
+            if telemetry:
+                uc0 = uc0 + (tl,)
             # `can` is a scalar (the body is not vmapped), so cond really
             # skips the untaken branch — no tree-wide where copies, and
             # warmup steps before the buffer fills pay nothing
-            params, target, opt, updates, _ = jax.lax.cond(
+            out = jax.lax.cond(
                 can,
                 lambda uc: jax.lax.fori_loop(0, updates_per_scan, upd, uc),
                 lambda uc: uc,
-                (c.params, c.target, c.opt, c.updates, k_upd))
+                uc0)
+            if telemetry:
+                params, target, opt, updates, _, tl = out
+            else:
+                params, target, opt, updates, _ = out
         else:
             alpha, beta0, per_eps = per
             beta = beta_at(beta0, env_steps, dqn_cfg.eps_decay_steps)
 
             def upd(_, uc):
-                params, target, opt, updates, rep, k = uc
+                if telemetry:
+                    params, target, opt, updates, rep, k, _ = uc
+                else:
+                    params, target, opt, updates, rep, k = uc
                 k, k_s = jax.random.split(k)
                 batch, idx, w = per_sample(rep, k_s, dqn_cfg.batch_size,
                                            alpha, beta)
-                params, opt, _, td = _dqn_update_per(params, target, opt,
-                                                     batch, w, dqn_cfg)
+                if telemetry:
+                    params, opt, loss, td, gn = _dqn_update_per_aux(
+                        params, target, opt, batch, w, dqn_cfg)
+                else:
+                    params, opt, _, td = _dqn_update_per(params, target, opt,
+                                                         batch, w, dqn_cfg)
                 if alpha > 0:          # alpha == 0: priorities never read
                     rep = per_update(rep, idx, td, alpha, per_eps)
                 updates = updates + 1
                 sync = updates % target_sync_updates == 0
                 target = jax.tree.map(lambda p, t: jnp.where(sync, p, t),
                                       params, target)
+                if telemetry:
+                    return (params, target, opt, updates, rep, k,
+                            (loss, jnp.mean(td), gn))
                 return params, target, opt, updates, rep, k
 
+            uc0 = (c.params, c.target, c.opt, c.updates, replay, k_upd)
+            if telemetry:
+                uc0 = uc0 + (tl,)
             # the replay joins the update carry here: priority writes must
             # be visible to the next update drawn in the same scan step
-            params, target, opt, updates, replay, _ = jax.lax.cond(
+            out = jax.lax.cond(
                 can,
                 lambda uc: jax.lax.fori_loop(0, updates_per_scan, upd, uc),
                 lambda uc: uc,
-                (c.params, c.target, c.opt, c.updates, replay, k_upd))
+                uc0)
+            if telemetry:
+                params, target, opt, updates, replay, _, tl = out
+            else:
+                params, target, opt, updates, replay, _ = out
         ep_all = c.ep_ret + r
         if ctx_mode:
             # per-episode context refresh: envs that finished an episode
@@ -328,7 +374,10 @@ def _build_engine(venv: VecCoScheduleEnv, dqn_cfg: DQNConfig,
             env_steps=env_steps, updates=updates,
             ep_ret=jnp.where(done, 0.0, ep_all),
         )
-        return carry, (done, jnp.where(done, ep_all, 0.0))
+        ret = jnp.where(done, ep_all, 0.0)
+        if telemetry:
+            return carry, (done, ret, tl[0], tl[1], tl[2], can)
+        return carry, (done, ret)
 
     def run_segment(carry: _Carry, n_steps: int):
         return jax.lax.scan(body, carry, None, length=n_steps)
@@ -375,15 +424,17 @@ _ENGINE_CACHE: dict = {}
 def _engine_for(env_cfg: EnvConfig, dqn_cfg: DQNConfig,
                 batch_envs: int, updates_per_scan: int,
                 update_period: int, target_sync_updates: int,
-                per: tuple[float, float, float] | None):
+                per: tuple[float, float, float] | None,
+                telemetry: bool = False):
     key = (env_cfg.key(), dqn_cfg, batch_envs, updates_per_scan,
-           update_period, target_sync_updates, per)
+           update_period, target_sync_updates, per, telemetry)
     if key not in _ENGINE_CACHE:
         venv = VecCoScheduleEnv(env_cfg)
         _ENGINE_CACHE[key] = (venv, _build_engine(venv, dqn_cfg, batch_envs,
                                                   updates_per_scan,
                                                   update_period,
-                                                  target_sync_updates, per),
+                                                  target_sync_updates, per,
+                                                  telemetry),
                               _build_eval(venv))
         while len(_ENGINE_CACHE) > 8:      # bound compiled-engine retention
             _ENGINE_CACHE.pop(next(iter(_ENGINE_CACHE)))
@@ -408,6 +459,10 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     context per episode inside the scan; evaluation rollouts stay at the
     neutral zero context, so ``eval_throughput`` remains comparable across
     the two observation modes.
+    ``cfg.telemetry`` adds ``loss``/``td_abs``/``grad_norm``/``beta``/
+    ``updates`` to each history record (means of the scan's per-step
+    update samples since the previous record) while keeping the parameter
+    trajectory bit-identical — see ``docs/observability.md``.
     """
     cfg = cfg or TrainConfig()
     env_cfg = env_cfg or EnvConfig()
@@ -430,7 +485,8 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     sync_updates = max(1, round(cfg.dqn.target_sync * updates_per_scan
                                 / (B * update_period)))
     venv, engine, eval_fn = _engine_for(env_cfg, cfg.dqn, B, updates_per_scan,
-                                        update_period, sync_updates, per)
+                                        update_period, sync_updates, per,
+                                        cfg.telemetry)
     agent = DQNAgent(venv.state_dim, venv.n_actions, cfg.dqn, seed=cfg.seed,
                      per_alpha=cfg.per_alpha, per_beta0=cfg.per_beta0,
                      per_eps=cfg.per_eps)
@@ -481,6 +537,10 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
     eval_every = max(1, cfg.eval_every)
     episodes_done, next_eval = 0, eval_every
     history: list[dict] = []
+    # telemetry accumulators flushed into each history record: sums of the
+    # per-scan-step (loss, |td|, grad_norm) samples over steps that ran an
+    # update since the last record
+    tel = {"loss": 0.0, "td_abs": 0.0, "grad_norm": 0.0, "n": 0}
 
     while episodes_done < cfg.episodes:
         # each env runs one of the 20 fixed queues for this segment
@@ -501,7 +561,17 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
                        params=params, target=target, opt=opt, replay=replay,
                        key=key, env_steps=env_steps, updates=updates,
                        ep_ret=jnp.zeros((B,), jnp.float32))
-        carry, (dones, rets) = engine(carry, seg_steps)
+        carry, outs = engine(carry, seg_steps)
+        if cfg.telemetry:
+            dones, rets, losses, tds, gnorms, cans = outs
+            m = np.asarray(cans)
+            if m.any():
+                tel["loss"] += float(np.asarray(losses)[m].sum())
+                tel["td_abs"] += float(np.asarray(tds)[m].sum())
+                tel["grad_norm"] += float(np.asarray(gnorms)[m].sum())
+                tel["n"] += int(m.sum())
+        else:
+            dones, rets = outs
         params, target, opt, replay, key = (carry.params, carry.target, carry.opt,
                                             carry.replay, carry.key)
         env_steps, updates = carry.env_steps, carry.updates
@@ -520,6 +590,16 @@ def train_agent(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
                    "eval_throughput": float(tp[:n_tr].mean()),
                    "heldout_throughput": (float(tp[n_tr:].mean())
                                           if held_queues else None)}
+            if cfg.telemetry:
+                n = tel["n"]
+                rec["loss"] = tel["loss"] / n if n else None
+                rec["td_abs"] = tel["td_abs"] / n if n else None
+                rec["grad_norm"] = tel["grad_norm"] / n if n else None
+                rec["beta"] = (float(beta_at(cfg.per_beta0, int(env_steps),
+                                             cfg.dqn.eps_decay_steps))
+                               if use_per else None)
+                rec["updates"] = int(updates)
+                tel = {"loss": 0.0, "td_abs": 0.0, "grad_norm": 0.0, "n": 0}
             history.append(rec)
             next_eval = (episodes_done // eval_every + 1) * eval_every
             if verbose:

@@ -66,7 +66,22 @@ Re-training
 periodic tick: every K simulated minutes it re-trains the agent on the live
 repository (warm-started from current params via ``train_agent(...,
 warm_start=...)``) and hot-swaps the refreshed agent into the RL dispatch
-policy.
+policy.  With ``trigger="drift"`` a
+:class:`~repro.online.telemetry.DriftMonitor` gates each tick on
+arrival-mix entropy and idle-fraction shifts instead of retraining
+unconditionally.
+
+Telemetry
+---------
+:mod:`repro.online.telemetry` is the observability layer
+(``docs/observability.md``): pass ``telemetry=Telemetry()`` to
+:class:`~repro.online.simulator.ClusterSimulator` (or ``telemetry=True``
+to the vectorized engines) for lifecycle event traces (JSONL /
+Perfetto-loadable Chrome trace), a streaming metrics registry, and
+windowed time series via
+:meth:`~repro.online.simulator.SimResult.timeseries`.  Telemetry observes
+and never steers: disabled runs are bit-identical, enabled runs change no
+decision.
 """
 from repro.online.policies import (
     DispatchPolicy, GreedyPackerPolicy, PolicyStats, RLDispatchPolicy,
@@ -80,6 +95,10 @@ from repro.online.router import (
 from repro.online.simulator import (
     Arrival, ClusterSimulator, JobRecord, Segment, SimConfig, SimResult,
 )
+from repro.online.telemetry import (
+    DriftMonitor, MetricsRegistry, PhaseTimer, Telemetry, TraceRecorder,
+    WAIT_BUCKETS_S,
+)
 from repro.online.traces import (
     TRACE_FAMILIES, diurnal_trace, fragmented_trace, heavy_tailed_trace,
     mmpp_trace, poisson_trace,
@@ -89,13 +108,14 @@ from repro.online.vecsim import (
 )
 
 __all__ = [
-    "Arrival", "ClusterSimulator", "DispatchPolicy", "FleetView",
-    "FragRouter", "GreedyPackerPolicy", "HashRouter", "JobRecord",
-    "LeastLoadedRouter", "OnlineRetrainer", "PodView", "PolicyStats",
-    "ROUTERS", "RLDispatchPolicy", "Router", "Segment", "SimConfig",
-    "SimResult", "StaticPartitionPolicy", "SweepSummary", "TRACE_FAMILIES",
-    "TimeSharingPolicy", "VectorizedClusterSimulator",
-    "VectorizedFleetSimulator", "default_retrain_train_config",
-    "diurnal_trace", "fragmented_trace", "heavy_tailed_trace", "make_router",
-    "mmpp_trace", "poisson_trace",
+    "Arrival", "ClusterSimulator", "DispatchPolicy", "DriftMonitor",
+    "FleetView", "FragRouter", "GreedyPackerPolicy", "HashRouter",
+    "JobRecord", "LeastLoadedRouter", "MetricsRegistry", "OnlineRetrainer",
+    "PhaseTimer", "PodView", "PolicyStats", "ROUTERS", "RLDispatchPolicy",
+    "Router", "Segment", "SimConfig", "SimResult", "StaticPartitionPolicy",
+    "SweepSummary", "TRACE_FAMILIES", "Telemetry", "TimeSharingPolicy",
+    "TraceRecorder", "VectorizedClusterSimulator",
+    "VectorizedFleetSimulator", "WAIT_BUCKETS_S",
+    "default_retrain_train_config", "diurnal_trace", "fragmented_trace",
+    "heavy_tailed_trace", "make_router", "mmpp_trace", "poisson_trace",
 ]

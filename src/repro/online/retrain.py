@@ -36,6 +36,7 @@ from dataclasses import dataclass, field, replace
 from repro.core.agent import DQNConfig
 from repro.core.train import TrainConfig, train_agent
 from repro.online.policies import RLDispatchPolicy
+from repro.online.telemetry import DriftMonitor
 
 
 def default_retrain_train_config(episodes: int = 240) -> TrainConfig:
@@ -61,6 +62,18 @@ class OnlineRetrainer:
     The environment config is the serving policy's own (the agent must be
     re-trained for exactly the env it schedules in), so it is derived, not
     passed.
+
+    ``trigger`` selects when a tick actually retrains:
+
+    * ``"clock"`` (default) — every tick, the original MISO-style periodic
+      refresh.  Bit-compatible with pre-trigger behaviour.
+    * ``"drift"`` — each tick feeds the interval's arrival class/width mix
+      and the live idle-slice fraction to a
+      :class:`~repro.online.telemetry.DriftMonitor`; re-training runs only
+      on a drift verdict, and the monitor's baselines are rebased
+      afterwards (the refreshed agent defines the new normal).  History
+      entries gain ``trigger``/``signals``/``reasons`` fields; skipped
+      ticks leave no entry (``monitor.history`` has the full verdict log).
     """
 
     policy: RLDispatchPolicy
@@ -68,9 +81,32 @@ class OnlineRetrainer:
     interval_s: float = 1800.0           # K simulated minutes between cycles
     min_jobs: int = 4
     reseed: bool = True                  # vary queue draws across cycles
+    trigger: str = "clock"               # "clock" | "drift"
+    monitor: DriftMonitor = field(default_factory=DriftMonitor)
     history: list = field(default_factory=list)
 
+    def __post_init__(self):
+        if self.trigger not in ("clock", "drift"):
+            raise ValueError(f"unknown trigger {self.trigger!r}; "
+                             f"expected 'clock' or 'drift'")
+        self._last_t = 0.0
+
     def __call__(self, now: float, sim) -> None:
+        extra: dict = {}
+        if self.trigger == "drift":
+            arrivals = sim.live_arrivals(self._last_t, now)
+            self._last_t = now
+            cc: dict[str, int] = {}
+            wc: dict[int, int] = {}
+            for a in arrivals:
+                cc[a.profile.job_class] = cc.get(a.profile.job_class, 0) + 1
+                w = a.profile.requested_units
+                wc[w] = wc.get(w, 0) + 1
+            verdict = self.monitor.observe(cc, wc, sim.live_idle_frac())
+            if not verdict["drift"]:
+                return
+            extra = {"trigger": "drift", "signals": verdict["signals"],
+                     "reasons": verdict["reasons"]}
         repo = self.policy.repository
         jobs = repo.jobs()
         if len(jobs) < self.min_jobs:
@@ -87,4 +123,7 @@ class OnlineRetrainer:
             "class_counts": repo.class_counts(),
             "episodes": hist[-1]["episode"],
             "train_eval_throughput": hist[-1]["eval_throughput"],
+            **extra,
         })
+        if self.trigger == "drift":
+            self.monitor.rebase()

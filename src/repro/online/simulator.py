@@ -201,7 +201,9 @@ class JobRecord:
     behind earlier groups of the same window.  ``units`` is the slice width
     the job actually ran on; ``pod`` the fleet pod the router assigned it;
     ``backfilled`` marks jobs whose group was started by the backfill
-    scan."""
+    scan.  ``idx`` is the job's index in sorted-trace order (the telemetry
+    event stream's job key) and ``job_class`` its profile class — both
+    feed the drift/time-series signals."""
 
     binary: str
     name: str
@@ -214,6 +216,8 @@ class JobRecord:
     units: int = N_UNITS
     backfilled: bool = False
     pod: int = 0
+    idx: int = -1
+    job_class: str = ""
 
     @property
     def wait(self) -> float:
@@ -386,6 +390,87 @@ class SimResult:
                                 if self.timeline else 0.0),
         }
 
+    def timeseries(self, interval_s: float | None = None,
+                   n_bins: int = 48) -> dict:
+        """Windowed time-series over the makespan — the drift-signal view.
+
+        Post-hoc from the job records and segment timeline (no telemetry
+        recorder needed).  ``interval_s`` fixes the bin width (default:
+        makespan / ``n_bins``).  Returns parallel lists, one entry per
+        interval ``[t0[i], t0[i] + interval)``:
+
+        * ``t0`` — interval start (s);
+        * ``arrivals`` — submissions arriving in the interval;
+        * ``queue_depth`` — time-mean count of jobs arrived but not yet
+          dispatched;
+        * ``occupancy`` — claimed unit-time fraction (1 −
+          ``idle_slice_frac``);
+        * ``idle_slice_frac`` — its complement, the per-interval trend
+          :class:`~repro.online.telemetry.DriftMonitor` watches;
+        * ``p50_wait_s`` / ``p99_wait_s`` — wait percentiles of jobs
+          *dispatched* in the interval (0.0 when none);
+        * ``backfill_rate`` — backfilled fraction of those dispatches;
+        * ``class_entropy`` / ``width_entropy`` — Shannon entropy (bits)
+          of the interval's arrival class / placed-width mix.
+        """
+        from repro.online.telemetry import entropy_bits
+        m = self.makespan
+        if m <= 0 or not self.jobs:
+            return {k: [] for k in (
+                "t0", "arrivals", "queue_depth", "occupancy",
+                "idle_slice_frac", "p50_wait_s", "p99_wait_s",
+                "backfill_rate", "class_entropy", "width_entropy")}
+        if interval_s is None:
+            interval_s = m / n_bins
+        n = max(1, int(math.ceil(m / interval_s)))
+        t0s = [i * interval_s for i in range(n)]
+        arrivals = [0] * n
+        qd = [0.0] * n
+        occ = [0.0] * n
+        waits: list[list[float]] = [[] for _ in range(n)]
+        bf = [0] * n
+        disp = [0] * n
+        cls: list[dict] = [defaultdict(int) for _ in range(n)]
+        wid: list[dict] = [defaultdict(int) for _ in range(n)]
+
+        def overlap(a0, a1, b):
+            return max(0.0, min(a1, t0s[b] + interval_s) - max(a0, t0s[b]))
+
+        for j in self.jobs:
+            b = min(int(j.arrival / interval_s), n - 1)
+            arrivals[b] += 1
+            cls[b][j.job_class or "?"] += 1
+            wid[b][j.units] += 1
+            if not math.isnan(j.dispatch):
+                d = min(int(j.dispatch / interval_s), n - 1)
+                waits[d].append(j.wait)
+                disp[d] += 1
+                bf[d] += int(j.backfilled)
+                lo = int(j.arrival / interval_s)
+                for b2 in range(lo, min(d, n - 1) + 1):
+                    qd[b2] += overlap(j.arrival, j.dispatch, b2) / interval_s
+        for seg in self.timeline:
+            lo = int(seg.t0 / interval_s)
+            hi = min(int(seg.t1 / interval_s), n - 1)
+            for b2 in range(lo, hi + 1):
+                occ[b2] += seg.units * overlap(seg.t0, seg.t1, b2)
+        denom = self.total_units * interval_s
+        occupancy = [min(o / denom, 1.0) for o in occ]
+        return {
+            "t0": t0s,
+            "arrivals": arrivals,
+            "queue_depth": qd,
+            "occupancy": occupancy,
+            "idle_slice_frac": [1.0 - o for o in occupancy],
+            "p50_wait_s": [float(np.percentile(w, 50)) if w else 0.0
+                           for w in waits],
+            "p99_wait_s": [float(np.percentile(w, 99)) if w else 0.0
+                           for w in waits],
+            "backfill_rate": [b / d if d else 0.0 for b, d in zip(bf, disp)],
+            "class_entropy": [entropy_bits(c) for c in cls],
+            "width_entropy": [entropy_bits(w) for w in wid],
+        }
+
 
 @dataclass
 class _Run:
@@ -440,13 +525,21 @@ class ClusterSimulator:
     while work remains — the MISO-style re-training loop hangs off it (see
     :mod:`repro.online.retrain`); ticks stop as soon as the heap, pending
     queues, and pods are all drained, so simulations always terminate.
+
+    ``telemetry`` (a :class:`~repro.online.telemetry.Telemetry` bundle)
+    turns on lifecycle tracing + streaming metrics: every event emits a
+    structured record with pod/slice/claim attribution and updates the
+    metrics registry (``docs/observability.md``).  ``None`` (the default)
+    is the no-op path — one ``is not None`` test per event, results
+    bit-identical either way (telemetry observes, never steers).
     """
 
     def __init__(self, policy, config: SimConfig | None = None, *,
                  window: int = 8, tick_interval_s: float | None = None,
                  on_tick=None, mode: str = "concurrent",
                  backfill: bool = True, pods: tuple[int, ...] | None = None,
-                 router: str = "hash", router_seed: int = 0):
+                 router: str = "hash", router_seed: int = 0,
+                 telemetry=None):
         if config is None:
             config = SimConfig(
                 window=window, mode=mode, backfill=backfill,
@@ -456,6 +549,9 @@ class ClusterSimulator:
         self.config = config
         self.policy = policy
         self.on_tick = on_tick
+        self.telemetry = telemetry
+        self._live_res: SimResult | None = None
+        self._live_order: list[Arrival] = []
         # legacy attribute mirrors (config is the source of truth)
         self.window = config.window
         self.tick_interval_s = config.tick_interval_s
@@ -487,9 +583,13 @@ class ClusterSimulator:
         # submissions), and identity-keyed records would alias
         order = sorted(trace, key=lambda a: a.t)
         records = [JobRecord(binary=a.binary, name=a.profile.name,
-                             arrival=a.t, solo_time=a.profile.solo_time())
-                   for a in order]
+                             arrival=a.t, solo_time=a.profile.solo_time(),
+                             idx=i, job_class=a.profile.job_class)
+                   for i, a in enumerate(order)]
         res.jobs = list(records)
+        # live references: tick callbacks (drift-triggered retraining) read
+        # the in-progress result/trace through live_result/live_arrivals
+        self._live_res, self._live_order = res, order
 
         def push(t, kind, payload):
             nonlocal seq
@@ -508,6 +608,8 @@ class ClusterSimulator:
             return any(p.pending or p.ready or p.busy or p.claims
                        for p in self._pods)
 
+        tel = self.telemetry
+
         def handle(now, kind, payload):
             if kind == _ARRIVE:
                 i = payload
@@ -516,6 +618,12 @@ class ClusterSimulator:
                                                 self._fleet_view(now, order)))
                 records[i].pod = pidx
                 self._pods[pidx].pending.append(i)
+                if tel is not None:
+                    # job_class re-derives the perf model on every access
+                    # — reuse the value already computed into the record
+                    rec = records[i]
+                    tel.on_arrive(now, pidx, i, rec.name, rec.job_class,
+                                  order[i].profile.requested_units)
             elif kind == _FREE:
                 pidx, cid = payload
                 pod = self._pods[pidx]
@@ -523,16 +631,45 @@ class ClusterSimulator:
                     pod.busy = False
                 else:
                     self._release(now, pod, cid, res)
+                if tel is not None:
+                    tel.on_free(now, pidx, cid)
             else:  # _TICK — only while work remains (no retrain on a drained
                 # cluster), and stop rescheduling once the trace is served
                 if heap or work_left():
                     if self.on_tick is not None:
                         self.on_tick(now, self)
                     res.ticks += 1
+                    if tel is not None:
+                        tel.on_tick(now)
                     push(now + cfg.tick_interval_s, _TICK, None)
 
+        prev_t = 0.0
+        qd = bu = 0
+        qd_int = bu_int = 0.0
+        pods = self._pods
+        pod0 = pods[0] if len(pods) == 1 else None   # single-pod fast path
+        blocking = cfg.mode == "blocking"
         while heap:
             now, kind, _, payload = heapq.heappop(heap)
+            if tel is not None and now > prev_t:
+                # event-gap integrals: depth/busy were constant since
+                # prev_t.  Accumulated in locals and flushed once after
+                # the loop — a per-pop hook call is measurable against
+                # the telemetry_overhead gate
+                dt = now - prev_t
+                if pod0 is not None:
+                    qd = len(pod0.pending)
+                    bu = (pod0.width if pod0.busy else 0) if blocking \
+                        else pod0.n_busy_units
+                else:
+                    qd = bu = 0
+                    for p in pods:
+                        qd += len(p.pending)
+                        bu += (p.width if p.busy else 0) if blocking \
+                            else p.n_busy_units
+                qd_int += qd * dt
+                bu_int += bu * dt
+                prev_t = now
             handle(now, kind, payload)
             # drain every coincident event before considering a dispatch:
             # same-instant arrivals (batch submissions, tied burst times)
@@ -546,9 +683,33 @@ class ClusterSimulator:
                                             push)
                 else:
                     self._service(now, pod, res, order, records, push)
+        if tel is not None:
+            tel.on_clock_totals(qd_int, bu_int, qd, bu)
         for pod in self._pods:
             assert not pod.claims and not pod.ready, "undrained claims/groups"
         return res
+
+    # ------------------------------------------------------ live snapshots
+
+    @property
+    def live_result(self) -> SimResult | None:
+        """The in-progress :class:`SimResult` of the current ``run()`` —
+        tick callbacks (drift monitoring) read occupancy through it."""
+        return self._live_res
+
+    def live_arrivals(self, t0: float, t1: float) -> list[Arrival]:
+        """Arrivals with ``t0 < t <= t1`` of the trace being served —
+        the drift monitor's per-window class/width sample."""
+        return [a for a in self._live_order if t0 < a.t <= t1]
+
+    def live_idle_frac(self) -> float:
+        """Instantaneous fraction of fleet units unclaimed — the drift
+        monitor's occupancy signal at tick time."""
+        if self.config.mode == "blocking":
+            busy = sum(p.width if p.busy else 0 for p in self._pods)
+        else:
+            busy = sum(p.n_busy_units for p in self._pods)
+        return 1.0 - busy / self.config.total_units
 
     # --------------------------------------------------------- fleet view
 
@@ -612,9 +773,13 @@ class ClusterSimulator:
         by_name: dict[str, deque] = defaultdict(deque)
         for i in head:
             by_name[order[i].profile.name].append(records[i])
+        tel = self.telemetry
+        if tel is not None:
+            tel.on_window(now, pod.idx, head, len(pod.pending))
         t0 = now
         for g, p in zip(sched.groups, sched.partitions):
             block = corun(g, p)
+            grecs = []
             for job, ft in zip(g, block.finish_times):
                 rec = by_name[job.name].popleft()
                 # dispatch = the group's actual start, not the block
@@ -625,11 +790,15 @@ class ClusterSimulator:
                 rec.finish = t0 + ft
                 rec.group_size = len(g)
                 rec.partition = p.label
+                grecs.append(rec)
             res.timeline.append(Segment(t0, t0 + block.makespan, len(g),
                                         p.label, slices=((0, N_UNITS),),
                                         pod=pod.idx))
             for u in range(N_UNITS):
                 res.slice_busy_s[pod.offset + u] += block.makespan
+            if tel is not None:
+                tel.on_place(t0, pod.idx, grecs, ((0, N_UNITS),),
+                             t0 + block.makespan, None, p.label, False)
             t0 += block.makespan
         leftover = [n for n, d in by_name.items() if d]
         assert not leftover, f"policy dropped submissions: {leftover}"
@@ -689,7 +858,8 @@ class ClusterSimulator:
             queue_depth=len(pod.pending),
             now_s=now)
 
-    def _fit_to_pod(self, pl: Placement, pod: _Pod, res) -> list[Placement]:
+    def _fit_to_pod(self, pl: Placement, pod: _Pod, res,
+                    now: float = 0.0) -> list[Placement]:
         """Pod-width guard: a placement planned wider than the pod (the
         per-pod policy plans against the full partition table — e.g. an
         8-unit MPS pair routed onto a 4-unit pod) can never first-fit, so
@@ -702,6 +872,9 @@ class ClusterSimulator:
         if pl.partition.total_units <= pod.width:
             return [pl]
         res.refits += 1
+        if self.telemetry is not None:
+            self.telemetry.on_refit(now, pod.idx, pl.partition.label,
+                                    len(pl.group))
         return [Placement([j], solo_partition(min(j.requested_units,
                                                   pod.width)))
                 for j in pl.group]
@@ -716,7 +889,7 @@ class ClusterSimulator:
         for i in head:
             by_name[order[i].profile.name].append(records[i])
         for pl in decision.placements:
-            for fitted in self._fit_to_pod(pl, pod, res):
+            for fitted in self._fit_to_pod(pl, pod, res, now):
                 recs = [by_name[j.name].popleft() for j in fitted.group]
                 pod.ready.append(_Run(fitted.group, fitted.partition, recs,
                                       corun(fitted.group, fitted.partition),
@@ -724,6 +897,8 @@ class ClusterSimulator:
         leftover = [n for n, d in by_name.items() if d]
         assert not leftover, f"policy dropped submissions: {leftover}"
         res.dispatches += 1
+        if self.telemetry is not None:
+            self.telemetry.on_window(now, pod.idx, head, len(pod.pending))
 
     def _backfill_scan(self, now, pod: _Pod, res, push) -> bool:
         """EASY backfill: later dispatched groups may start now iff they fit
@@ -788,6 +963,9 @@ class ClusterSimulator:
         pod.cid += 1
         pod.claims[cid] = (ranges, t1)
         push(t1, _FREE, (pod.idx, cid))
+        if self.telemetry is not None:
+            self.telemetry.on_place(now, pod.idx, run.recs, ranges, t1, cid,
+                                    run.partition.label, backfilled)
 
     def _release(self, now, pod: _Pod, cid, res) -> None:
         ranges, _t1 = pod.claims.pop(cid)

@@ -86,6 +86,9 @@ from repro.online.router import FleetView, PodView, make_router
 from repro.online.simulator import (
     Arrival, JobRecord, Segment, SimConfig, SimResult,
 )
+from repro.online.telemetry import WAIT_BUCKETS_S
+
+_WAIT_EDGES = jnp.asarray(np.array(WAIT_BUCKETS_S, np.float32))
 
 _INF = jnp.float32(jnp.inf)
 _BIG_SEQ = jnp.int32(2**30)
@@ -166,6 +169,28 @@ class _State(NamedTuple):
     g_job: jnp.ndarray           # (A,) i32 — row into the job table
     g_t0: jnp.ndarray            # (A,) f32 — placement time
     g_pack: jnp.ndarray          # (A,) i32 — (pseq << 4)|(start << 1)|bf
+
+
+class MetricsState(NamedTuple):
+    """In-graph streaming metrics, accumulated inside the ``while_loop``
+    carry when the engine is built with ``telemetry=True`` — the pytree
+    mirror of the heap :class:`~repro.online.telemetry.Telemetry`
+    aggregates (same fixed ``WAIT_BUCKETS_S`` histogram layout, same
+    event-gap integrals), so vmapped sweeps return per-lane metric
+    tensors with zero extra device syncs."""
+
+    wait_hist: jnp.ndarray       # (len(WAIT_BUCKETS_S)+1,) i32 counts
+    wait_sum: jnp.ndarray        # () f32 — Σ wait at placement
+    queue_depth_int: jnp.ndarray  # () f32 — ∫ pending-depth dt
+    busy_unit_int: jnp.ndarray   # () f32 — ∫ claimed-units dt
+    places: jnp.ndarray          # () i32 — groups placed
+
+
+def _metrics_init() -> MetricsState:
+    return MetricsState(
+        wait_hist=jnp.zeros(len(WAIT_BUCKETS_S) + 1, jnp.int32),
+        wait_sum=jnp.float32(0.0), queue_depth_int=jnp.float32(0.0),
+        busy_unit_int=jnp.float32(0.0), places=jnp.int32(0))
 
 
 class SweepSummary(NamedTuple):
@@ -348,7 +373,8 @@ def _make_form_window(trace: TraceArrays, jobs: JobTable, window: int):
 
 # -------------------------------------------------------------- trace runs
 
-def _build_run(window: int, backfill: bool, capacity: int):
+def _build_run(window: int, backfill: bool, capacity: int,
+               telemetry: bool = False):
     """The jitted single-trace engine: ONE flat ``lax.while_loop``.
 
     Each iteration performs exactly one micro-action of the heap's
@@ -367,11 +393,19 @@ def _build_run(window: int, backfill: bool, capacity: int):
     replaying expiries after it yields the same ``t_res``, and a candidate
     skipped for lack of space stays unplaceable once ``free`` shrinks —
     re-scanning from the lowest seq is the same sequence of placements.
+
+    ``telemetry=True`` threads a :class:`MetricsState` alongside the
+    engine state (``run`` then returns ``(state, metrics)``): the wait
+    histogram fills at each placement, the queue-depth/busy-unit
+    integrals advance at each clock step — all predicated updates on the
+    existing flags, so the ``_State`` trajectory is **bit-identical**
+    with the flag on or off, and with the flag off (the default) the
+    compiled program is the exact pre-telemetry engine.
     """
     max_steps = 2 * capacity + 4
 
     def run(trace: TraceArrays, jobs: JobTable,
-            width=jnp.int32(N_UNITS)) -> _State:
+            width=jnp.int32(N_UNITS)):
         # `width` is the pod's slice width (traced, so a fleet can vmap a
         # pod axis over it): a narrower pod is the same engine with the
         # upper units born busy — they are never claimed, never freed, and
@@ -403,7 +437,11 @@ def _build_run(window: int, backfill: bool, capacity: int):
             return ((st.pend_hi < trace.n) | jnp.any(st.c_active)
                     | (st.pend_lo < st.pend_hi) | jnp.any(st.r_active))
 
-        def body(st: _State) -> _State:
+        def body(carry):
+            if telemetry:
+                st, ms = carry
+            else:
+                st, ms = carry, None
             # The four service rules are mutually exclusive by their gates
             # (rule 1 needs a fitting head; 2-3 a blocked head; 4 no head),
             # so one merged form_window and one merged _place execute
@@ -452,7 +490,22 @@ def _build_run(window: int, backfill: bool, capacity: int):
                 do_bf = can_scan & jnp.any(elig)
                 slot = jnp.where(place_head, head, cand)
                 sstart = jnp.where(place_head, start, starts[cand])
-            st = _place(st, jobs, slot, sstart, do_bf, place_head | do_bf)
+            do_place = place_head | do_bf
+            if telemetry:
+                # wait histogram at placement: the placed group's arrival
+                # index lives in the (post-form_window) group log
+                arr = jnp.clip(st.g_arr[st.r_grp[slot]], 0, A - 1)
+                wait = st.now - trace.t[arr]
+                b = jnp.searchsorted(_WAIT_EDGES, wait,
+                                     side="left").astype(jnp.int32)
+                nb = ms.wait_hist.shape[0]
+                ms = ms._replace(
+                    wait_hist=ms.wait_hist.at[
+                        jnp.where(do_place, b, nb)].add(1, mode="drop"),
+                    wait_sum=ms.wait_sum + jnp.where(do_place, wait, 0.0),
+                    places=ms.places + jnp.where(do_place, jnp.int32(1),
+                                                 jnp.int32(0)))
+            st = _place(st, jobs, slot, sstart, do_bf, do_place)
             progress = place_head | can_look | do_bf | can_form
 
             # --- no service progress: advance the clock one event batch
@@ -476,14 +529,27 @@ def _build_run(window: int, backfill: bool, capacity: int):
             busy_time = st.busy_time + jnp.where(
                 (n_busy == 0) & (w_rel > 0), now - st.busy_t0, 0.0)
             steps = st.steps + jnp.where(adv, jnp.int32(1), jnp.int32(0))
-            return st._replace(
+            if telemetry:
+                # event-gap integrals: depth/busy constant over [st.now, now)
+                dt = now - st.now
+                ms = ms._replace(
+                    queue_depth_int=ms.queue_depth_int
+                    + (st.pend_hi - st.pend_lo).astype(jnp.float32) * dt,
+                    busy_unit_int=ms.busy_unit_int
+                    + st.n_busy.astype(jnp.float32) * dt)
+            st = st._replace(
                 now=now, pend_hi=pend_hi, free=st.free | freed,
                 c_active=st.c_active & ~rel, n_busy=n_busy,
                 busy_time=busy_time, steps=steps,
                 err=st.err | jnp.where(steps > max_steps,
                                        jnp.int32(ERR_EVENT_OVERFLOW),
                                        jnp.int32(0)))
+            return (st, ms) if telemetry else st
 
+        if telemetry:
+            return jax.lax.while_loop(
+                lambda c: live(c[0]) & (c[0].err == 0), body,
+                (st, _metrics_init()))
         return jax.lax.while_loop(lambda s: live(s) & (s.err == 0), body, st)
 
     return run
@@ -528,6 +594,22 @@ def _summary(st: _State, trace: TraceArrays, jobs: JobTable) -> SweepSummary:
 
 
 # ------------------------------------------------------------ host wrapper
+
+def metrics_dict(ms: MetricsState) -> dict:
+    """Host-side dict of one (or a pod-summed) :class:`MetricsState` —
+    keyed like the heap registry (``docs/observability.md``) so parity
+    tests and exporters read both engines uniformly."""
+    counts = np.asarray(ms.wait_hist)
+    return {
+        "wait_s": {"edges": list(WAIT_BUCKETS_S),
+                   "counts": counts.tolist(),
+                   "sum": float(ms.wait_sum),
+                   "count": int(counts.sum())},
+        "queue_depth_integral_s": float(ms.queue_depth_int),
+        "busy_unit_s": float(ms.busy_unit_int),
+        "groups_placed": int(ms.places),
+    }
+
 
 def compile_trace(trace: list[Arrival], capacity: int,
                   names: dict[str, int] | None = None,
@@ -623,7 +705,7 @@ class VectorizedClusterSimulator:
     """
 
     def __init__(self, policy=None, window: int = 8, backfill: bool = True,
-                 capacity: int = 256):
+                 capacity: int = 256, telemetry: bool = False):
         if not self.supports(policy):
             raise ValueError(
                 f"vectorized engine serves solo-placement plans "
@@ -633,11 +715,23 @@ class VectorizedClusterSimulator:
         self.window = window
         self.backfill = backfill
         self.capacity = capacity
-        self._run1 = jax.jit(_build_run(window, backfill, capacity))
-        self._sweepfn = jax.jit(jax.vmap(
-            lambda tr, jt: _summary(
-                _build_run(window, backfill, capacity)(tr, jt), tr, jt),
-            in_axes=(0, None)))
+        # `telemetry` is a *static* engine flag: False compiles the exact
+        # pre-telemetry program; True threads a MetricsState through the
+        # while_loop (run -> (state, metrics)) without touching the state
+        # trajectory — see _build_run
+        self.telemetry = telemetry
+        self.last_metrics: dict | None = None
+        self.last_sweep_metrics: MetricsState | None = None
+        runf = _build_run(window, backfill, capacity, telemetry)
+        self._run1 = jax.jit(runf)
+        if telemetry:
+            def _one(tr, jt):
+                st, ms = runf(tr, jt)
+                return _summary(st, tr, jt), ms
+        else:
+            def _one(tr, jt):
+                return _summary(runf(tr, jt), tr, jt)
+        self._sweepfn = jax.jit(jax.vmap(_one, in_axes=(0, None)))
 
     @staticmethod
     def supports(policy) -> bool:
@@ -654,12 +748,18 @@ class VectorizedClusterSimulator:
         jobs: list = []
         tr, order = compile_trace(trace, self.capacity, jobs=jobs)
         jt = build_job_table(jobs)
-        st = jax.block_until_ready(self._run1(tr, jt))
+        out = jax.block_until_ready(self._run1(tr, jt))
+        if self.telemetry:
+            st, ms = out
+            self.last_metrics = metrics_dict(ms)
+        else:
+            st = out
         self._check_err(int(st.err))
 
         records = [JobRecord(binary=a.binary, name=a.profile.name,
-                             arrival=a.t, solo_time=a.profile.solo_time())
-                   for a in order]
+                             arrival=a.t, solo_time=a.profile.solo_time(),
+                             idx=i, job_class=a.profile.job_class)
+                   for i, a in enumerate(order)]
         res.jobs = records
         res.timeline = _emit_lane(st, jt, records)
         res.busy_time = float(st.busy_time)
@@ -671,15 +771,24 @@ class VectorizedClusterSimulator:
     # -------------------------------------------------------------- sweep
 
     def sweep(self, traces: list[list[Arrival]],
-              devices: list | None = None) -> SweepSummary:
+              devices: list | None = None, with_metrics: bool = False):
         """Evaluate ``traces`` in one device call (one compiled program).
 
         With ``devices`` (>= 2 and batch divisible), the batch axis is
         sharded across host devices via ``pmap`` — the CPU-CI parallelism
         of ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+        With ``with_metrics=True`` (requires a ``telemetry=True`` engine)
+        returns ``(SweepSummary, MetricsState)`` — the per-lane metric
+        tensors accumulated in-graph, batch axis leading, at no extra
+        device syncs.  A telemetry engine still records
+        ``last_sweep_metrics`` when ``with_metrics`` is off.
         """
         if not traces:
             raise ValueError("empty sweep")
+        if with_metrics and not self.telemetry:
+            raise ValueError("with_metrics needs an engine built with "
+                             "telemetry=True")
         names: dict[str, int] = {}
         jobs: list = []
         compiled = [compile_trace(t, self.capacity, names, jobs)[0]
@@ -697,8 +806,13 @@ class VectorizedClusterSimulator:
             out = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), out)
         else:
             out = jax.block_until_ready(self._sweepfn(batch, jt))
-        self._check_err(int(np.max(np.asarray(out.err))))
-        return out
+        if self.telemetry:
+            summ, ms = out
+            self.last_sweep_metrics = ms
+        else:
+            summ = out
+        self._check_err(int(np.max(np.asarray(summ.err))))
+        return (summ, ms) if with_metrics else summ
 
     @staticmethod
     def _check_err(err: int) -> None:
@@ -742,7 +856,8 @@ class VectorizedFleetSimulator:
                  window: int = 8, backfill: bool = True,
                  capacity: int = 256,
                  pods: tuple[int, ...] | None = None,
-                 router: str = "hash", router_seed: int = 0):
+                 router: str = "hash", router_seed: int = 0,
+                 telemetry: bool = False):
         if config is None:
             config = SimConfig(
                 window=window, backfill=backfill,
@@ -763,9 +878,11 @@ class VectorizedFleetSimulator:
         self.config = config
         self.policy = policy if policy is not None else TimeSharingPolicy()
         self.capacity = capacity
+        self.telemetry = telemetry
+        self.last_metrics: dict | None = None
         self._router = make_router(config.router, config.router_seed)
         self._runp = jax.jit(jax.vmap(
-            _build_run(config.window, config.backfill, capacity),
+            _build_run(config.window, config.backfill, capacity, telemetry),
             in_axes=(0, None, 0)))
 
     @staticmethod
@@ -782,8 +899,9 @@ class VectorizedFleetSimulator:
             return res
         order = sorted(trace, key=lambda a: a.t)
         records = [JobRecord(binary=a.binary, name=a.profile.name,
-                             arrival=a.t, solo_time=a.profile.solo_time())
-                   for a in order]
+                             arrival=a.t, solo_time=a.profile.solo_time(),
+                             idx=i, job_class=a.profile.job_class)
+                   for i, a in enumerate(order)]
         res.jobs = records
 
         # static pre-split: same router object the heap constructs, fed a
@@ -808,7 +926,14 @@ class VectorizedFleetSimulator:
         jt = build_job_table(jobs)
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *compiled)
         widths = jnp.asarray(np.array(cfg.pods, np.int32))
-        sts = jax.block_until_ready(self._runp(batch, jt, widths))
+        out = jax.block_until_ready(self._runp(batch, jt, widths))
+        if self.telemetry:
+            sts, mss = out
+            # pod lanes are disjoint sub-streams: fleet metrics are the sum
+            self.last_metrics = metrics_dict(
+                jax.tree.map(lambda x: x.sum(0), mss))
+        else:
+            sts = out
         VectorizedClusterSimulator._check_err(
             int(np.max(np.asarray(sts.err))))
 
