@@ -22,6 +22,10 @@ ratio regressions):
   * the vectorized engine's recorded vmapped sweep (``vectorized_sim``)
     stays at or above ``VECSIM_SPEEDUP_FLOOR`` x the Python heap's
     traces/sec at batch >= 64;
+  * the in-graph RL serving sweep (``vectorized_rl`` — the same engine
+    running the trained agent's episodes at the window-formation seam)
+    stays at or above ``VECRL_SPEEDUP_FLOOR`` x the heap replaying the
+    identical agent, also at batch >= 64;
   * the fleet grid (``fleet_scale``) is recorded at or above
     ``FLEET_MIN_ARRIVALS`` arrivals, the best router's p99 wait on the
     fragmented heterogeneous fleet stays at or above ``FLEET_P99_FLOOR``
@@ -57,6 +61,7 @@ FRAG_MARGIN = 1.02        # fragmented family must strictly win
 ARRIVAL_FLOOR = 1.0       # committed rl_context/rl_profile_only, fragmented
 PER_DRIFT = 0.15          # |prioritized - uniform| / uniform at 1000 ep
 VECSIM_SPEEDUP_FLOOR = 5.0  # committed vmapped-sweep traces/sec vs heap
+VECRL_SPEEDUP_FLOOR = 3.0   # committed in-graph RL sweep vs heap RL serving
 VECSIM_MIN_BATCH = 64     # sweep batch the speedup must be recorded at
 FLEET_P99_FLOOR = 1.0     # best router p99 vs hash, fragmented fleet
 FLEET_MIN_ARRIVALS = 10_000  # committed fleet grid scale (p50/p99 regime)
@@ -119,6 +124,20 @@ def gate_online(bench: dict, failures: list[str],
             failures.append(f"online: vectorized sweep speedup vs heap = "
                             f"{speedup:.2f}x < floor "
                             f"{VECSIM_SPEEDUP_FLOOR:.1f}x")
+    vecrl = bench.get("vectorized_rl") or {}
+    if not vecrl:
+        _warn_missing("online: vectorized_rl", warnings)
+    else:
+        sweep = vecrl.get("sweep", {})
+        batch = sweep.get("batch", 0)
+        speedup = sweep.get("speedup_vs_heap", 0.0)
+        if batch < VECSIM_MIN_BATCH:
+            failures.append(f"online: vectorized_rl sweep batch {batch} "
+                            f"< {VECSIM_MIN_BATCH}")
+        if speedup < VECRL_SPEEDUP_FLOOR:
+            failures.append(f"online: in-graph RL sweep speedup vs heap RL "
+                            f"= {speedup:.2f}x < floor "
+                            f"{VECRL_SPEEDUP_FLOOR:.1f}x")
     fleet = bench.get("fleet_scale") or {}
     if not fleet:
         _warn_missing("online: fleet_scale", warnings)

@@ -35,7 +35,12 @@ vectorized simulator (``repro.online.vecsim``, one jitted
 ``lax.while_loop`` per trace, ``vmap`` over a leading trace axis) vs the
 Python event heap on identical solo-placement traces — single-trace wall
 time both ways plus vmapped-sweep throughput (traces/sec at batch >= 64),
-whose ``speedup_vs_heap`` is floored by ``benchmarks.bench_gate``.  The
+whose ``speedup_vs_heap`` is floored by ``benchmarks.bench_gate``.
+``vectorized_rl`` is the same comparison for **RL serving**: the trained
+agent's episodes run in-graph at the window-formation seam (observation
+assembly + fit-masked greedy argmax inside the jitted episode) vs the
+heap replaying the identical agent, plus the ``sweep(param_sets=...)``
+population mode — P agents x batch traces in one device call.  The
 ``sim_wall`` block mirrors every policy×family cell's ``sim_wall_s`` so
 the Python-vs-vectorized trend stays visible in the committed trajectory,
 and ``--engine vectorized`` routes supported cells (solo-placement
@@ -85,8 +90,8 @@ import sys
 import time
 
 from benchmarks.bench_gate import (
-    ARRIVAL_FLOOR, CONC_BLK_FLOOR, FLEET_MIN_ARRIVALS, FLEET_P99_FLOOR,
-    FRAG_MARGIN, TELEMETRY_OVERHEAD_MAX, VECSIM_SPEEDUP_FLOOR,
+    ARRIVAL_FLOOR, CONC_BLK_FLOOR, FLEET_P99_FLOOR, FRAG_MARGIN,
+    TELEMETRY_OVERHEAD_MAX, VECRL_SPEEDUP_FLOOR, VECSIM_SPEEDUP_FLOOR,
 )
 from benchmarks.common import emit, missing_keys
 from repro.core import (
@@ -105,7 +110,7 @@ from repro.online import (
 
 REQUIRED_KEYS = ("window", "n_arrivals", "traces", "rl_vs_time_sharing",
                  "dispatch_comparison", "arrival_aware", "sim_wall",
-                 "vectorized_sim", "fleet_scale", "note")
+                 "vectorized_sim", "vectorized_rl", "fleet_scale", "note")
 
 # fleet-scale grid: trace family -> pod widths (heterogeneous 4/8 fleets
 # stress width eligibility and the frag router; uniform 8s isolate pure
@@ -393,6 +398,107 @@ def _vectorized_sim(zoo, window, n, load, seed, batch=64, capacity=128):
     return section
 
 
+def _vectorized_rl(zoo, agent, env_cfg, window, n, load, seed,
+                   batch=64, capacity=128, population=4):
+    """Engine comparison for RL serving: in-graph agent episodes vs heap.
+
+    The same trained agent both ways.  The heap replays it through
+    :class:`RLDispatchPolicy` one trace at a time (a fresh policy per
+    trace: the profile repository fills as jobs complete, and the
+    vectorized engine's profiled lane also starts empty every run, so
+    fresh-per-trace is the matched condition); the vectorized engine
+    runs the DQN forward pass at the window-formation seam *inside* the
+    jitted episode and sweeps the whole batch in one vmapped call.
+    ``population`` extra param sets ride ``sweep(param_sets=...)``'s
+    leading axis — one device call evaluates P agents x batch traces,
+    the population-evaluation mode the axis exists for.
+    """
+    traces = [TRACE_FAMILIES["poisson"](zoo, n=n, load=load, seed=seed + i)
+              for i in range(batch)]
+    n_heap = min(8, batch)
+    t0 = time.perf_counter()
+    heap_res = [ClusterSimulator(RLDispatchPolicy(agent, env_cfg),
+                                 window=window).run(tr)
+                for tr in traces[:n_heap]]
+    heap_per_trace = (time.perf_counter() - t0) / n_heap
+    vec = VectorizedClusterSimulator(RLDispatchPolicy(agent, env_cfg),
+                                     window=window, capacity=capacity)
+    t0 = time.perf_counter()
+    vec_res = vec.run(traces[0])
+    vec_compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vec.run(traces[0])
+    vec_per_trace = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    vec.sweep(traces)
+    sweep_compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    summ = vec.sweep(traces)
+    sweep_wall = time.perf_counter() - t0
+    traces_per_s = batch / sweep_wall
+    heap_traces_per_s = 1.0 / heap_per_trace
+    # population axis: the trained params plus seed-varied random inits
+    env = CoScheduleEnv(env_cfg)
+    param_sets = [agent.params] + [
+        DQNAgent(env.state_dim, env.n_actions, seed=seed + 1 + k).params
+        for k in range(population - 1)]
+    t0 = time.perf_counter()
+    vec.sweep(traces, param_sets=param_sets)
+    pop_compile_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    psumm = vec.sweep(traces, param_sets=param_sets)
+    pop_wall = time.perf_counter() - t0
+    h0, v0 = heap_res[0], vec_res
+    section = {
+        "family": "poisson", "window": window, "n_arrivals": n,
+        "load": load, "seed": seed, "capacity": capacity,
+        "single_trace": {
+            "heap_wall_s": heap_per_trace,
+            "vectorized_wall_s": vec_per_trace,
+            "vectorized_compile_s": vec_compile_s,
+        },
+        "sweep": {
+            "batch": batch,
+            "wall_s": sweep_wall,
+            "compile_s": sweep_compile_s,
+            "traces_per_s": traces_per_s,
+            "heap_traces_per_s": heap_traces_per_s,
+            "speedup_vs_heap": traces_per_s / heap_traces_per_s,
+        },
+        "population": {
+            "params_sets": len(param_sets),
+            "wall_s": pop_wall,
+            "compile_s": pop_compile_s,
+            "episodes_per_s": len(param_sets) * batch / pop_wall,
+            "mean_makespan_s_per_params": [
+                float(m) for m in psumm.makespan.mean(axis=1)],
+        },
+        "parity": {
+            "heap_makespan_s": h0.makespan,
+            "vectorized_makespan_s": v0.makespan,
+            "heap_p99_wait_s": h0.p99_wait,
+            "vectorized_p99_wait_s": v0.p99_wait,
+            "sweep_mean_makespan_s": float(summ.makespan.mean()),
+        },
+        "note": ("heap_traces_per_s replays the trained agent through "
+                 "RLDispatchPolicy on the Python event heap one trace at "
+                 "a time (fresh policy per trace: both engines start with "
+                 "an empty profile repository); traces_per_s is one warm "
+                 "vmapped sweep call with the DQN forward pass running "
+                 "in-graph at the window-formation seam (compile_s "
+                 "amortizes and is excluded); speedup_vs_heap is their "
+                 "ratio, floored by benchmarks.bench_gate; population is "
+                 "the sweep(param_sets=...) mode — params_sets x batch "
+                 "agent episodes in ONE device call (row 0 is the trained "
+                 "agent, the rest seed-varied random inits); decision-"
+                 "level RL parity is asserted in tests/test_parity_fuzz.py"),
+    }
+    emit("vectorized_rl", sweep_wall * 1e6 / batch,
+         f"speedup={section['sweep']['speedup_vs_heap']:.2f}x "
+         f"pop={len(param_sets)}x{batch}")
+    return section
+
+
 def _retrain_trigger(zoo, agent, env_cfg, window, n, load, seed,
                      interval_min, retrain_episodes):
     """Clock vs drift re-training A/B on a drift-prone trace.
@@ -641,7 +747,8 @@ def main() -> None:
     ap.add_argument("--sweep-batch", type=int, default=64,
                     help="vmapped batch size for the vectorized_sim sweep")
     ap.add_argument("--section",
-                    choices=("arrival_aware", "vectorized_sim", "sim_wall",
+                    choices=("arrival_aware", "vectorized_sim",
+                             "vectorized_rl", "sim_wall",
                              "fleet_scale", "retrain_trigger",
                              "telemetry_overhead"),
                     default=None,
@@ -791,6 +898,42 @@ def main() -> None:
               f"batch {section['sweep']['batch']} "
               f"({section['sweep']['traces_per_s']:.0f} traces/s, floor "
               f"{VECSIM_SPEEDUP_FLOOR:.1f}x)")
+        return
+
+    if args.section == "vectorized_rl":
+        with open(args.bench_json) as f:
+            bench = json.load(f)
+        window = args.window or bench["window"]
+        n = args.arrivals or bench["n_arrivals"]
+        load = bench.get("load", args.load)
+        seed = bench.get("seed", args.seed)
+        episodes = args.episodes or bench["train_episodes"]
+        zoo = make_zoo(dryrun_dir=None)
+        env_cfg = EnvConfig(window=window, c_max=4)
+        print("name,us_per_call,derived")
+        # deterministic replication of the committed run's profile-only agent
+        agent, _ = train_agent(
+            zoo, env_cfg,
+            TrainConfig(episodes=episodes, eval_every=max(50, episodes // 4),
+                        seed=seed,
+                        dqn=DQNConfig(eps_decay_steps=episodes * 6)))
+        section = _vectorized_rl(zoo, agent, env_cfg, window, n, load, seed,
+                                 batch=args.sweep_batch)
+        bench["vectorized_rl"] = section
+        bench.setdefault("acceptance", {})[
+            "vectorized_rl_sweep_speedup_ge_floor"] = (
+            section["sweep"]["speedup_vs_heap"] >= VECRL_SPEEDUP_FLOOR)
+        out = args.out or args.bench_json
+        with open(out, "w") as f:
+            json.dump(bench, f, indent=1)
+        print(f"merged vectorized_rl into {out}: "
+              f"{section['sweep']['speedup_vs_heap']:.2f}x over heap RL at "
+              f"batch {section['sweep']['batch']} "
+              f"({section['sweep']['traces_per_s']:.0f} traces/s, floor "
+              f"{VECRL_SPEEDUP_FLOOR:.1f}x); population "
+              f"{section['population']['params_sets']}x"
+              f"{section['sweep']['batch']} episodes in "
+              f"{section['population']['wall_s']:.3f}s")
         return
 
     if args.section == "arrival_aware":
@@ -958,6 +1101,9 @@ def main() -> None:
     # CI exercises the sweep path via tests/test_vecsim.py instead)
     vec_section = None if args.smoke else _vectorized_sim(
         zoo, window, n, args.load, args.seed, batch=args.sweep_batch)
+    vecrl_section = None if args.smoke else _vectorized_rl(
+        zoo, agent, env_cfg, window, n, args.load, args.seed,
+        batch=args.sweep_batch)
 
     # fleet-scale grid rides the full run too (frozen profile-only agent)
     fleet = None if args.smoke else _fleet_scale(
@@ -983,6 +1129,7 @@ def main() -> None:
         "arrival_aware": arrival,
         "sim_wall": _sim_wall_block(traces),
         "vectorized_sim": vec_section,
+        "vectorized_rl": vecrl_section,
         "fleet_scale": fleet,
         "acceptance": {
             "arrival_aware_fragmented_ctx_ge_profile_only": (
@@ -1004,6 +1151,10 @@ def main() -> None:
                 vec_section is not None
                 and vec_section["sweep"]["speedup_vs_heap"]
                 >= VECSIM_SPEEDUP_FLOOR),
+            "vectorized_rl_sweep_speedup_ge_floor": (
+                vecrl_section is not None
+                and vecrl_section["sweep"]["speedup_vs_heap"]
+                >= VECRL_SPEEDUP_FLOOR),
         },
         "note": ("throughput = total solo work / makespan (time sharing ~1.0 "
                  "on a saturated pod); *_vs_time_sharing are ratios of that "

@@ -19,7 +19,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.network import dqn_apply, init_dqn, masked_argmax
+from repro.core.network import (
+    dqn_apply, greedy_q_action, init_dqn, masked_argmax,
+)
 from repro.core.replay import PrioritizedReplayBuffer, ReplayBuffer
 
 
@@ -142,8 +144,8 @@ def _dqn_update_per_aux(params, target_params, opt, batch, w, cfg: DQNConfig):
 
 
 @jax.jit
-def _q_values(params, s):
-    return dqn_apply(params, s)
+def _greedy_action(params, obs, mask):
+    return greedy_q_action(params, obs, mask)
 
 
 def epsilon_at(cfg: DQNConfig, env_steps):
@@ -232,9 +234,10 @@ class DQNAgent:
             self.env_steps += 1
             if self.rng.random() < self.epsilon:
                 return int(self.rng.choice(np.flatnonzero(mask)))
-        q = np.array(_q_values(self.params, state[None]))[0]
-        q[~mask] = -np.inf
-        return int(np.argmax(q))
+        # greedy selection routes through the same jitted kernel the
+        # vectorized engine closes over in-graph (see network.greedy_q_action)
+        return int(_greedy_action(self.params, jnp.asarray(state),
+                                  jnp.asarray(mask)))
 
     # -------------------------------------------------------------- learn
     def observe(self, s, a, r, s2, done, mask2) -> None:

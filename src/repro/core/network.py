@@ -51,6 +51,19 @@ def masked_argmax(q: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmax(jnp.where(mask, q, -jnp.inf), axis=-1)
 
 
+def greedy_q_action(params: dict, obs: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Greedy fit-masked action for one observation: () i32.
+
+    The single action-selection implementation shared by
+    ``DQNAgent.act(greedy=True)`` (the heap serving path) and the
+    vectorized engine's in-graph policy seam — ties break to the first
+    maximal index on both, so the two paths pick identical actions on
+    identical observations (the property the parity fuzzer pins).
+    """
+    q = dqn_apply(params, obs[None])[0]
+    return masked_argmax(q, mask).astype(jnp.int32)
+
+
 def widen_dqn_params(params: dict, extra_in: int) -> dict:
     """Zero-pad the input layer for ``extra_in`` *appended* observation dims.
 

@@ -128,6 +128,57 @@ def stack_queues(qas: list[QueueArrays]) -> QueueArrays:
     return jax.tree.map(lambda *xs: jnp.stack(xs), *qas)
 
 
+class JobTermsTable(NamedTuple):
+    """Per-*job* roofline terms, gatherable into window ``QueueArrays``.
+
+    ``queue_arrays`` lays terms out per window slot on the host; the
+    vectorized serving engine instead precomputes them once per distinct
+    job and gathers rows in-graph at each window formation.  Row ``J``
+    (one past the last job) is the padding row — the same harmless
+    values ``queue_arrays`` writes for empty slots (``fixedt = 1``,
+    ``steps = 1``, everything else 0), so a gather of the padding index
+    reproduces a padded window slot bit-for-bit.
+    """
+
+    features: jnp.ndarray            # (J+1, F) f32
+    comp: jnp.ndarray                # (J+1, U) f32
+    mem: jnp.ndarray                 # (J+1, U) f32
+    collb: jnp.ndarray               # (J+1, U) f32
+    colll: jnp.ndarray               # (J+1, U) f32
+    fixedt: jnp.ndarray              # (J+1, U) f32
+    steps: jnp.ndarray               # (J+1,) f32
+    solo: jnp.ndarray                # (J+1,) f32
+    cpct: jnp.ndarray                # (J+1,) f32
+    mpct: jnp.ndarray                # (J+1,) f32
+
+
+def job_terms_table(jobs: list[JobProfile]) -> JobTermsTable:
+    """Precompute :class:`JobTermsTable` rows for ``jobs`` (+ padding row)."""
+    J, U, F = len(jobs), len(UNIT_SIZES), len(FEATURES)
+    feats = np.zeros((J + 1, F), np.float32)
+    comp, mem, collb, colll, fixedt = (np.zeros((J + 1, U), np.float32)
+                                       for _ in range(5))
+    fixedt[:] = 1.0
+    steps = np.ones((J + 1,), np.float32)
+    solo = np.zeros((J + 1,), np.float32)
+    cpct = np.zeros((J + 1,), np.float32)
+    mpct = np.zeros((J + 1,), np.float32)
+    for i, j in enumerate(jobs):
+        feats[i] = j.features()
+        for u_i, u in enumerate(UNIT_SIZES):
+            c, m, x = j.terms(u)
+            comp[i, u_i], mem[i, u_i], collb[i, u_i] = c, m, x
+            colll[i, u_i] = j.coll_latency(u)
+            fixedt[i, u_i] = j.fixed_latency(u) + j.serial_s
+        steps[i] = j.steps
+        solo[i] = j.solo_time()
+        cpct[i] = j.compute_pct
+        mpct[i] = j.memory_pct
+    return JobTermsTable(*(jnp.asarray(a) for a in
+                           (feats, comp, mem, collb, colll, fixedt,
+                            steps, solo, cpct, mpct)))
+
+
 def build_fit_table(partitions: list[Partition]) -> jnp.ndarray:
     """(P, 2**N_UNITS) f32 — does partition ``p`` first-fit busy mask ``m``?
 
@@ -253,18 +304,28 @@ def _simulate_slice(c, m, xb, xl, fx, steps, members, shared_flag):
 
 def group_metrics(table: PartitionTable, qa: QueueArrays,
                   group_idx: jnp.ndarray, group_size: jnp.ndarray,
-                  p_idx: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                  p_idx: jnp.ndarray, units_idx: jnp.ndarray | None = None,
+                  with_finish: bool = False):
     """(co-run makespan, Σ solo time, Σ r_i) for the group under partition p_idx.
 
     The makespan/solo pair is the in-graph mirror of ``corun_time`` /
     ``solo_run_time`` — it powers both the Table VI reward and the
     device-resident evaluation rollout's relative-throughput accumulators.
+
+    ``units_idx`` (per-slot width index, shape (S,)) overrides the
+    partition's planned slot widths for the roofline terms only — the
+    in-graph mirror of the placement layer's dedicated-slice right-sizing
+    (``to_placements`` shrinks a single-share slice to ``requested_units``
+    without touching MPS shares or β, and co-run simulates slices
+    independently, so swapping the width terms *is* the fitted co-run).
+    ``with_finish=True`` additionally returns the per-slot finish times,
+    which the vectorized serving engine records per job.
     """
     S = group_idx.shape[0]
     W = qa.steps.shape[0]
     slot_ok = table.slot_valid[p_idx] & (jnp.arange(S) < group_size)
     j = jnp.clip(group_idx, 0, W - 1)
-    u = table.slot_units_idx[p_idx]
+    u = table.slot_units_idx[p_idx] if units_idx is None else units_idx
     beta = table.slot_beta[p_idx]
     c = qa.comp[j, u] / beta
     m, xb, xl, fx = qa.mem[j, u], qa.collb[j, u], qa.colll[j, u], qa.fixedt[j, u]
@@ -286,7 +347,10 @@ def group_metrics(table: PartitionTable, qa: QueueArrays,
     mr = qa.mpct[j] / jnp.maximum(qa.mean_m, 1e-9)
     dr = qa.solo[j] / jnp.maximum(qa.mean_d, 1e-9)
     ri = (sm_alloc * cr + mem_alloc * mr) * dr ** 2
-    return makespan, solo, jnp.sum(jnp.where(slot_ok, ri, 0.0))
+    ri_sum = jnp.sum(jnp.where(slot_ok, ri, 0.0))
+    if with_finish:
+        return makespan, solo, ri_sum, jnp.where(slot_ok, finish, 0.0)
+    return makespan, solo, ri_sum
 
 
 def solo_duration_table(jobs: list[JobProfile]) -> np.ndarray:

@@ -38,7 +38,12 @@ earlier PRs, bit-compatible with it.  The hash-routed fleet also runs on
 the vectorized engine
 (:class:`~repro.online.vecsim.VectorizedFleetSimulator`) as one vmapped
 pod axis — hash routing is trace-computable, so the fleet decomposes into
-independent per-pod lanes.
+independent per-pod lanes.  Both vectorized engines serve time-sharing
+*and* RL plans: an :class:`~repro.online.policies.RLDispatchPolicy`'s
+agent episodes run in-graph at the window-formation seam (observation
+assembly + fit-masked greedy argmax, ``docs/architecture.md``), and
+``sweep(param_sets=...)`` evaluates a population of agents in one device
+call.
 
 Traces ↔ paper workload mix
 ---------------------------

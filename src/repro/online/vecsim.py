@@ -39,32 +39,51 @@ evaluates hundreds of scenarios per call.
 
 Scope and the plan seam
 -----------------------
-The engine executes **solo-placement plans**: every submission becomes its
-own single-slice group at its ``requested_units`` width, through the same
-first-sight protocol the heap runs (unprofiled binaries are scheduled
-ahead of the planned remainder of their window, and enter the in-graph
-profiled bitmap).  That is exactly :class:`~repro.online.policies.\
-TimeSharingPolicy` through ``to_placements`` — the baseline the paper
-normalizes against and the policy the fragmentation/backfill layer is
-scored on.  Group durations are *precomputed* per (job, width) by the
-float64 reference model (:func:`~repro.core.perfmodel_jax.\
+The engine executes two plan families through one dispatch machinery:
+
+* **Solo-placement plans** (:class:`~repro.online.policies.\
+TimeSharingPolicy` / ``policy=None``): every submission becomes its own
+  single-slice group at its ``requested_units`` width, through the same
+  first-sight protocol the heap runs (unprofiled binaries are scheduled
+  ahead of the planned remainder of their window, and enter the in-graph
+  profiled bitmap).  Group durations are *precomputed* per (job, width)
+  by the float64 reference model (:func:`~repro.core.perfmodel_jax.\
 solo_duration_table`, bit-equal to the heap's per-group ``corun``
-predictions for solo placements), so the two engines make identical
-discrete decisions and differ only by float32 rounding of the clock.
-Grouped plans — the RL agent's greedy episode as a pure ``dqn_apply``
-function over the PR-5 observation layout — ride on the same
-window-formation seam (``_form_window`` is the single place a plan is
-materialized into group slots) and are the ROADMAP follow-on.
+  predictions for solo placements), so the two engines make identical
+  discrete decisions and differ only by float32 rounding of the clock.
+* **RL grouped plans** (:class:`~repro.online.policies.\
+RLDispatchPolicy`): the agent's greedy co-scheduling episode runs
+  in-graph at the same window-formation seam (``_build_run_rl``'s
+  ``form_and_plan`` — the single place a plan is materialized into group
+  slots).  The popped chunk is assembled into the ``CoScheduleEnv``
+  observation layout (profile rows + status flags, plus the live
+  ``ObsContext`` block under ``EnvConfig.obs_context``), scored by
+  :func:`~repro.core.network.greedy_q_action` with the env's validity
+  mask, and the closed groups pass through the heap's §IV-A fallback
+  guard, pod-width refit, and dedicated-slice shrink before dispatching
+  on the shared predicated place/backfill path.  Params are a
+  closed-over pytree argument: ``hot_swap`` never recompiles, and
+  ``sweep(param_sets=...)`` vmaps a population of agents.  Solo entries
+  (first-sight and single-member groups) keep the exact f64 duration
+  table; only true co-run groups carry the f32 in-graph model's
+  clock-level drift.
 
 Parity guarantee
 ----------------
 For any concurrent-mode trace, :class:`VectorizedClusterSimulator` and the
 Python heap produce matching :class:`~repro.online.simulator.SimResult`
-job records: **identical decisions** (placement order, slice ranges,
-units, backfill flags, window/dispatch counts) and times equal up to
-float32 resolution of the clock (the heap is the float64 reference,
-exactly as ``train_agent_scalar`` is for the training engine).
-``tests/test_vecsim.py`` pins this on randomized traces.
+job records: **identical decisions** (placement order, groups,
+partitions, slice ranges, units, backfill flags, fallback/refit
+outcomes, window/dispatch counts) and times equal up to float32
+resolution of the clock (the heap is the float64 reference, exactly as
+``train_agent_scalar`` is for the training engine).  Record attribution
+for duplicate-tenant windows follows the heap's name-keyed FIFO.
+``tests/test_vecsim.py`` pins the time-sharing side on randomized
+traces; ``tests/test_parity_fuzz.py`` fuzzes the RL side (single-pod and
+fleet) on shared ``tests/strategies.py`` generators.  Context-aware
+agents (``obs_context=True``) see an f32 context block in-graph vs the
+heap's f64 snapshot, so a near-tie action can legitimately flip;
+profile-only agents are parity-exact at the decision level.
 
 Capacity limits raise eagerly: a trace longer than ``capacity`` raises
 ``ValueError`` before the device call, and the engine carries an error
@@ -79,9 +98,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.partition import N_UNITS, solo_partition
-from repro.core.perfmodel_jax import UNIT_SIZES, solo_duration_table
-from repro.online.policies import TimeSharingPolicy
+from repro.core.network import greedy_q_action
+from repro.core.partition import (
+    N_UNITS, Partition, Slice, enumerate_partitions, slice_label,
+    solo_partition,
+)
+from repro.core.perfmodel import corun
+from repro.core.perfmodel_jax import (
+    UNIT_SIZES, JobTermsTable, QueueArrays, build_partition_table,
+    group_metrics, job_terms_table, solo_duration_table,
+)
+from repro.online.policies import RLDispatchPolicy, TimeSharingPolicy
 from repro.online.router import FleetView, PodView, make_router
 from repro.online.simulator import (
     Arrival, JobRecord, Segment, SimConfig, SimResult,
@@ -111,6 +138,9 @@ _ALIGNED = jnp.asarray(np.stack([
 ERR_READY_OVERFLOW = 1          # ready ring out of slots (cannot happen at
                                 # R = 2*window + 2; kept as an eager guard)
 ERR_EVENT_OVERFLOW = 2          # while_loop exceeded 2*capacity+4 events
+ERR_EPISODE = 4                 # RL co-schedule episode failed to terminate
+                                # (cannot happen: 2*W steps bound any
+                                # masked-greedy episode; eager guard)
 
 
 class TraceArrays(NamedTuple):
@@ -566,14 +596,16 @@ def _records(st: _State, trace: TraceArrays, jobs: JobTable):
     return dispatch, finish
 
 
-def _summary(st: _State, trace: TraceArrays, jobs: JobTable) -> SweepSummary:
+def _summarize(st, trace: TraceArrays, dispatch, finish,
+               solo8) -> SweepSummary:
+    """Shared summary tail over per-arrival dispatch/finish lanes — ``st``
+    is either engine's state (both carry the busy/backfill/err lanes)."""
     A = trace.t.shape[0]
     valid = jnp.arange(A) < trace.n
-    dispatch, finish = _records(st, trace, jobs)
     wait = dispatch - trace.t
     turnaround = finish - trace.t
     makespan = jnp.max(jnp.where(valid, finish, 0.0))
-    solo = jnp.sum(jnp.where(valid, jobs.solo8[trace.job], 0.0))
+    solo = jnp.sum(jnp.where(valid, solo8, 0.0))
     nz = makespan > 0
     n = jnp.maximum(jnp.sum(valid), 1)
     return SweepSummary(
@@ -591,6 +623,11 @@ def _summary(st: _State, trace: TraceArrays, jobs: JobTable) -> SweepSummary:
         dispatches=st.dispatches,
         err=st.err,
     )
+
+
+def _summary(st: _State, trace: TraceArrays, jobs: JobTable) -> SweepSummary:
+    dispatch, finish = _records(st, trace, jobs)
+    return _summarize(st, trace, dispatch, finish, jobs.solo8[trace.job])
 
 
 # ------------------------------------------------------------ host wrapper
@@ -686,8 +723,645 @@ def _emit_lane(st: _State, jt: JobTable, records: list[JobRecord],
             for g in np.argsort(g_pseq)]
 
 
+# ------------------------------------------------------------- RL serving
+#
+# The in-graph policy seam: the same engine skeleton, but the plan chosen
+# at window formation comes from the DQN's greedy co-schedule episode
+# (CoScheduleEnv, run as a lax.scan of masked dqn_apply forward passes)
+# instead of the static solo plan.  The flat while_loop splits in two —
+# an *inner* service/clock loop (cheap, every event) and an *outer*
+# window loop whose body runs the episode (expensive, ~n/window times):
+# under vmap a frozen lane skips neither, so hoisting the network out of
+# the per-event loop is what makes batched RL serving fast.
+
+class RLJobTable(NamedTuple):
+    """Distinct-job lanes for the RL engine (row ``J`` = padding).
+
+    The job list is padded to a power-of-two row count (repeating job 0)
+    before the table is built, so sweeps over many randomized traces
+    retrace the jitted engine at most ``log2`` times.
+    """
+
+    widx: jnp.ndarray            # (J+1,) i32 — requested width index
+    dur_wu: jnp.ndarray          # (J+1, U) f32 — solo makespan per width
+                                 #            (float64 corun, cast once)
+    solo8: jnp.ndarray           # (J+1,) f32 — full-pod solo time
+    terms: JobTermsTable         # (J+1, ...) — roofline terms + features
+
+
+def build_rl_job_table(jobs: list) -> RLJobTable:
+    J = max(8, 1 << max(0, len(jobs) - 1).bit_length())
+    padded = list(jobs) + [jobs[0]] * (J - len(jobs))
+    tab = solo_duration_table(padded)                 # (J, U) float64
+    width = np.array([j.requested_units for j in padded], np.int32)
+    widx = np.searchsorted(np.asarray(UNIT_SIZES), width).astype(np.int32)
+    U = len(UNIT_SIZES)
+    return RLJobTable(
+        widx=jnp.asarray(np.concatenate([widx, [U - 1]]).astype(np.int32)),
+        dur_wu=jnp.asarray(np.concatenate([tab, np.zeros((1, U))]),
+                           jnp.float32),
+        solo8=jnp.asarray(
+            np.concatenate([[j.solo_time() for j in padded], [0.0]]),
+            jnp.float32),
+        terms=job_terms_table(padded))
+
+
+class _RLState(NamedTuple):
+    """RL-engine lanes: the TS state plus the grouped-entry log.
+
+    Entries (one ready-queue unit = one heap ``Placement``) carry up to
+    ``C = c_max`` members; solo entries use partition row 0 (the full-pod
+    solo — ``enumerate_partitions`` puts it first) with the fitted width
+    in ``g_uidx``, so one layout covers first-sight runs, kept groups,
+    and fallback/refit decompositions alike."""
+
+    now: jnp.ndarray             # () f32
+    pend_lo: jnp.ndarray         # () i32
+    pend_hi: jnp.ndarray         # () i32
+    profiled: jnp.ndarray        # (J,) bool
+    free: jnp.ndarray            # (N_UNITS,) bool
+    r_active: jnp.ndarray        # (R,) bool
+    r_seq: jnp.ndarray           # (R,) i32
+    r_win: jnp.ndarray           # (R,) i32
+    r_grp: jnp.ndarray           # (R,) i32
+    next_seq: jnp.ndarray        # () i32
+    c_active: jnp.ndarray        # (N_UNITS,) bool
+    c_t1: jnp.ndarray            # (N_UNITS,) f32
+    c_mask: jnp.ndarray          # (N_UNITS, N_UNITS) bool
+    n_busy: jnp.ndarray          # () i32
+    busy_t0: jnp.ndarray         # () f32
+    busy_time: jnp.ndarray       # () f32
+    slice_busy: jnp.ndarray      # (N_UNITS,) f32
+    dispatches: jnp.ndarray      # () i32
+    backfills: jnp.ndarray       # () i32
+    refits: jnp.ndarray          # () i32 — pod-width decompositions
+    n_groups: jnp.ndarray        # () i32
+    place_seq: jnp.ndarray       # () i32
+    steps: jnp.ndarray           # () i32
+    err: jnp.ndarray             # () i32
+    # entry log (A rows; C = c_max member slots each)
+    g_arr: jnp.ndarray           # (A, C) i32 — member arrival index
+    g_job: jnp.ndarray           # (A, C) i32 — member job row
+    g_size: jnp.ndarray         # (A,) i32 — member count
+    g_pidx: jnp.ndarray          # (A,) i32 — planned partition row
+    g_uidx: jnp.ndarray          # (A, C) i32 — fitted per-slot width index
+    g_dur: jnp.ndarray           # (A,) f32 — claim horizon (makespan)
+    g_ft: jnp.ndarray            # (A, C) f32 — per-slot finish offsets
+    g_start: jnp.ndarray         # (A, C) i32 — per-slice start offsets
+    g_t0: jnp.ndarray            # (A,) f32 — placement time
+    g_pack: jnp.ndarray          # (A,) i32 — (pseq << 1) | backfilled
+
+
+def _build_run_rl(window: int, backfill: bool, capacity: int,
+                  telemetry: bool, env_cfg):
+    """The jitted RL single-trace engine.
+
+    Two nested ``lax.while_loop``\\ s: the inner loop is the TS engine's
+    service/clock body generalized to multi-slice entries, and *exits*
+    (``want``) where the TS engine would form a window; the outer body
+    then runs the window-formation seam — observation assembly, the
+    greedy DQN episode, the §IV-A fallback guard, and pod-width fitting —
+    once per window.  Scheduling semantics (formation gates, EASY
+    backfill, claim replay) are unchanged from ``_build_run``; only the
+    plan materialized at the seam differs.
+    """
+    assert window <= env_cfg.window, (window, env_cfg.window)
+    W = env_cfg.window
+    C = env_cfg.c_max
+    obs_ctx = env_cfg.obs_context
+    parts = enumerate_partitions(C)
+    P = len(parts)
+    ptable = build_partition_table(parts, C)
+    # static per-(partition, slot) masks: dedicated slice (single share ->
+    # shrinks to the member's requested width) and first-slot-of-slice
+    # (per-slice reductions over slot lanes)
+    ded = np.zeros((P, C), bool)
+    first = np.zeros((P, C), bool)
+    for p_i, p in enumerate(parts):
+        seen: set[int] = set()
+        for s_i, (si, s, _b) in enumerate(p.slots):
+            ded[p_i, s_i] = len(s.shares) == 1
+            if si not in seen:
+                first[p_i, s_i] = True
+                seen.add(si)
+    dedj = jnp.asarray(ded)
+    firstj = jnp.asarray(first)
+    units_arr = jnp.asarray(np.array(UNIT_SIZES, np.int32))
+    U = len(UNIT_SIZES)
+    A = capacity
+    R = 2 * window + 2
+    T_EP = 2 * W                 # selects + closes bound any episode
+    max_steps = 2 * capacity + 4
+    i32, f32 = jnp.int32, jnp.float32
+    c_rng = jnp.arange(C, dtype=jnp.int32)
+    w_rng = jnp.arange(W, dtype=jnp.int32)
+
+    def slice_widths(p, uidx):
+        """Per-slice (width index, validity) of partition row ``p`` under
+        fitted per-slot widths ``uidx`` -> ((C,), (C,))."""
+        eq = ((ptable.slot_slice[p][None, :] == c_rng[:, None])
+              & ptable.slot_valid[p][None, :])
+        svalid = jnp.any(eq, axis=1)
+        svec = jnp.max(jnp.where(eq, uidx[None, :], -1), axis=1).astype(i32)
+        return svec, svalid
+
+    def fit_multi(free, svec, svalid):
+        """In-graph ``find_offsets``: first-fit-decreasing placement of the
+        partition's slices onto ``free``.  Python's stable sort breaks
+        width ties by slice index; ``-units * C + index`` reproduces that
+        order exactly.  Returns (all-fit, per-slice starts, claimed
+        union mask)."""
+        units = units_arr[jnp.clip(svec, 0, U - 1)]
+        key = jnp.where(svalid, -units * C + c_rng, jnp.int32(2 ** 15))
+        order = jnp.argsort(key)
+        starts = jnp.zeros(C, i32)
+        ok = jnp.bool_(True)
+        cur = free
+        union = jnp.zeros(N_UNITS, dtype=bool)
+        for step in range(C):                  # static: C slices max
+            sid = order[step]
+            act = svalid[sid]
+            w_i = jnp.clip(svec[sid], 0, U - 1)
+            cand = _ALIGNED[w_i] & jnp.all(cur[None, :] | ~_COVERED[w_i],
+                                           axis=1)
+            has = jnp.any(cand)
+            s0 = jnp.argmax(cand).astype(i32)
+            ok = ok & (has | ~act)
+            m = _claim_units(s0, units_arr[w_i]) & act & has
+            cur = cur & ~m
+            union = union | m
+            starts = starts.at[sid].set(jnp.where(act, s0, 0))
+        return ok, starts, union
+
+    def earliest_fit_multi(st: _RLState, svec, svalid):
+        """Multi-slice ``_earliest_fit``: replay claim expiries, earliest
+        fitting one wins (same candidate argument as the TS engine)."""
+        rel = (st.c_active[None, :] & st.c_active[:, None]
+               & (st.c_t1[None, :] <= st.c_t1[:, None]))
+        freed = st.free[None, :] | jnp.any(rel[:, :, None] & st.c_mask[None],
+                                           axis=1)
+        oks = jax.vmap(lambda f: fit_multi(f, svec, svalid)[0])(freed)
+        fits = st.c_active & oks
+        first_t = jnp.min(jnp.where(fits, st.c_t1, _INF))
+        last = jnp.max(jnp.where(st.c_active, st.c_t1, -_INF))
+        return jnp.where(jnp.any(fits), first_t,
+                         jnp.where(jnp.any(st.c_active), last, f32(0.0)))
+
+    def place_rl(st: _RLState, slot, starts, union, backfilled,
+                 do) -> _RLState:
+        g = st.r_grp[slot]
+        dur = st.g_dur[g]
+        mask = union & do
+        w = jnp.sum(mask, dtype=i32)
+        doi = jnp.where(do, i32(1), i32(0))
+        gt = jnp.where(do, g, A)
+        ct = jnp.where(do, jnp.argmin(st.c_active).astype(i32), N_UNITS)
+        rt = jnp.where(do, slot, R)
+        pack = (st.place_seq << 1) | jnp.where(backfilled, i32(1), i32(0))
+        return st._replace(
+            free=st.free & ~mask,
+            busy_t0=jnp.where(do & (st.n_busy == 0), st.now, st.busy_t0),
+            n_busy=st.n_busy + w,
+            c_active=st.c_active.at[ct].set(True, mode="drop"),
+            c_t1=st.c_t1.at[ct].set(st.now + dur, mode="drop"),
+            c_mask=st.c_mask.at[ct].set(mask, mode="drop"),
+            slice_busy=st.slice_busy + jnp.where(mask, dur, 0.0),
+            g_t0=st.g_t0.at[gt].set(st.now, mode="drop"),
+            g_start=st.g_start.at[gt].set(starts, mode="drop"),
+            g_pack=st.g_pack.at[gt].set(pack, mode="drop"),
+            place_seq=st.place_seq + doi,
+            r_active=st.r_active.at[rt].set(False, mode="drop"),
+            backfills=st.backfills + jnp.where(do & backfilled, i32(1),
+                                               i32(0)))
+
+    def run(trace: TraceArrays, rjt: RLJobTable, params,
+            width=jnp.int32(N_UNITS)):
+        Jp = rjt.widx.shape[0] - 1               # padding row index
+        pod_widx = jnp.searchsorted(units_arr, width).astype(i32)
+        tt = rjt.terms
+        st0 = _RLState(
+            now=f32(0.0), pend_lo=i32(0), pend_hi=i32(0),
+            profiled=jnp.zeros(Jp, dtype=bool),
+            free=_UNIT_IDX < width,
+            r_active=jnp.zeros(R, dtype=bool),
+            r_seq=jnp.zeros(R, i32), r_win=jnp.zeros(R, i32),
+            r_grp=jnp.zeros(R, i32), next_seq=i32(0),
+            c_active=jnp.zeros(N_UNITS, dtype=bool),
+            c_t1=jnp.zeros(N_UNITS, f32),
+            c_mask=jnp.zeros((N_UNITS, N_UNITS), dtype=bool),
+            n_busy=i32(0), busy_t0=f32(0.0), busy_time=f32(0.0),
+            slice_busy=jnp.zeros(N_UNITS, f32),
+            dispatches=i32(0), backfills=i32(0), refits=i32(0),
+            n_groups=i32(0), place_seq=i32(0), steps=i32(0), err=i32(0),
+            g_arr=jnp.full((A, C), A, i32), g_job=jnp.full((A, C), Jp, i32),
+            g_size=jnp.zeros(A, i32), g_pidx=jnp.zeros(A, i32),
+            g_uidx=jnp.zeros((A, C), i32), g_dur=jnp.zeros(A, f32),
+            g_ft=jnp.zeros((A, C), f32), g_start=jnp.zeros((A, C), i32),
+            g_t0=jnp.zeros(A, f32), g_pack=jnp.zeros(A, i32))
+
+        def live(st):
+            return ((st.pend_hi < trace.n) | jnp.any(st.c_active)
+                    | (st.pend_lo < st.pend_hi) | jnp.any(st.r_active))
+
+        def form_and_plan(st: _RLState, do) -> _RLState:
+            # ---- pop & first-sight protocol (same as _make_form_window)
+            k = jnp.where(do, jnp.minimum(jnp.int32(window),
+                                          st.pend_hi - st.pend_lo), i32(0))
+            i_w = jnp.arange(window, dtype=jnp.int32)
+            on = i_w < k
+            arr = jnp.clip(st.pend_lo + i_w, 0, A - 1)
+            jrow = trace.job[arr]
+            earlier_same = ((jrow[None, :] == jrow[:, None])
+                            & (i_w[None, :] < i_w[:, None]) & on[None, :])
+            fs = on & ~jnp.any(earlier_same, axis=1) & ~st.profiled[jrow]
+            profiled = st.profiled.at[jnp.where(on, jrow, Jp)].set(
+                True, mode="drop")
+            n_fs = jnp.sum(fs, dtype=i32)
+            rank_fs = jnp.cumsum(fs, dtype=i32) - 1
+            rank_pl = jnp.cumsum(~fs & on, dtype=i32) - 1
+            n_pl = jnp.sum(~fs & on, dtype=i32)
+
+            # ---- the profiled chunk as env-window queue rows (<= W)
+            pt = jnp.where(~fs & on, rank_pl, W)
+            pl_job = jnp.full(W, Jp, i32).at[pt].set(jrow, mode="drop")
+            pl_arr = jnp.full(W, A, i32).at[pt].set(arr, mode="drop")
+            pl_valid = w_rng < n_pl
+            qa = QueueArrays(
+                features=tt.features[pl_job], valid=pl_valid,
+                comp=tt.comp[pl_job], mem=tt.mem[pl_job],
+                collb=tt.collb[pl_job], colll=tt.colll[pl_job],
+                fixedt=tt.fixedt[pl_job], steps=tt.steps[pl_job],
+                solo=tt.solo[pl_job], cpct=tt.cpct[pl_job],
+                mpct=tt.mpct[pl_job],
+                mean_c=f32(1.0), mean_m=f32(1.0), mean_d=f32(1.0))
+            if obs_ctx:
+                # dispatch_obs_context in-graph: busy mask, per-slot ages,
+                # pending depth left behind (float32 mirror of the heap's
+                # float64 snapshot — context parity is approximate)
+                busy_f = (~st.free).astype(jnp.float32)
+                age = st.now - trace.t[jnp.clip(pl_arr, 0, A - 1)]
+                ages_f = jnp.where(
+                    pl_valid,
+                    jnp.log10(1.0 + jnp.maximum(age, 0.0)) / 6.0, 0.0)
+                depth = jnp.minimum(
+                    (st.pend_hi - st.pend_lo - k).astype(jnp.float32)
+                    / (4.0 * W), 1.0)
+                ctx_vec = jnp.concatenate(
+                    [busy_f, ages_f.astype(jnp.float32), depth[None]])
+
+            # ---- greedy co-schedule episode (CoScheduleEnv in-graph)
+            def ep_step(carry, _):
+                sched, gidx, gsize, pm, psize, ppidx, nplan = carry
+                member = jnp.zeros(W, dtype=bool).at[
+                    jnp.where(c_rng < gsize, gidx, W)].set(True, mode="drop")
+                avail = pl_valid & ~sched & ~member
+                prog = gsize.astype(jnp.float32) / jnp.float32(max(1, C))
+                flags = jnp.stack([
+                    jnp.where(avail, 1.0, 0.0),
+                    jnp.where(member, 1.0, 0.0),
+                    jnp.where(sched, 1.0, 0.0),
+                    jnp.where(~pl_valid, 1.0, 0.0),
+                    jnp.where(pl_valid, prog, 0.0)],
+                    axis=1).astype(jnp.float32)
+                obs = jnp.concatenate([qa.features, flags],
+                                      axis=1).reshape(-1)
+                if obs_ctx:
+                    obs = jnp.concatenate([obs, ctx_vec])
+                mask = jnp.concatenate([avail & (gsize < C),
+                                        (gsize >= 1)
+                                        & (ptable.arity == gsize)])
+                done = jnp.all(sched | ~pl_valid) & (gsize == 0)
+                act = greedy_q_action(params, obs, mask)
+                do_sel = ~done & (act < W)
+                do_close = ~done & (act >= W)
+                row = jnp.where(do_close, nplan, W)
+                pm = pm.at[row].set(gidx, mode="drop")
+                psize = psize.at[row].set(gsize, mode="drop")
+                ppidx = ppidx.at[row].set(jnp.clip(act - W, 0, P - 1),
+                                          mode="drop")
+                sched = sched | (member & do_close)
+                gidx = gidx.at[jnp.where(do_sel, jnp.clip(gsize, 0, C - 1),
+                                         C)].set(act, mode="drop")
+                gidx = jnp.where(do_close, jnp.full(C, -1, i32), gidx)
+                gsize = jnp.where(do_close, i32(0),
+                                  gsize + jnp.where(do_sel, i32(1), i32(0)))
+                nplan = nplan + jnp.where(do_close, i32(1), i32(0))
+                return (sched, gidx, gsize, pm, psize, ppidx, nplan), None
+
+            init = (jnp.zeros(W, dtype=bool), jnp.full(C, -1, i32), i32(0),
+                    jnp.full((W, C), -1, i32), jnp.zeros(W, i32),
+                    jnp.zeros(W, i32), i32(0))
+            (e_sched, _, e_gsize, pm, psize, ppidx, nplan), _ = \
+                jax.lax.scan(ep_step, init, None, length=T_EP)
+            done_f = jnp.all(e_sched | ~pl_valid) & (e_gsize == 0)
+            err_ep = jnp.where(do & ~done_f, i32(ERR_EPISODE), i32(0))
+
+            # ---- §IV-A fallback + pod-width fitting, over planned rows
+            row_on = w_rng < nplan
+            mvalid = (c_rng[None, :] < psize[:, None]) & row_on[:, None]
+            mslot = jnp.clip(pm, 0, W - 1)
+            mjob = jnp.where(mvalid, pl_job[mslot], Jp)
+            mwidx = rjt.widx[mjob]
+            uplan = ptable.slot_units_idx[ppidx]
+            uidx_fit = jnp.where(dedj[ppidx],
+                                 jnp.minimum(uplan, mwidx), uplan)
+            mk_plan, solo_sum, _ri = jax.vmap(
+                lambda m, s, p: group_metrics(ptable, qa, m, s, p))(
+                    pm, psize, ppidx)
+            _mk, _s2, _r2, ft_fit = jax.vmap(
+                lambda m, s, p, u: group_metrics(
+                    ptable, qa, m, s, p, units_idx=u, with_finish=True))(
+                    pm, psize, ppidx, uidx_fit)
+            mk_fit = jnp.max(ft_fit, axis=1)
+            fallback = row_on & (psize > 1) & (mk_plan > solo_sum)
+            wfit = units_arr[uidx_fit]
+            ftot = jnp.sum(jnp.where(firstj[ppidx] & ptable.slot_valid[ppidx],
+                                     wfit, 0), axis=1)
+            refit = row_on & ~fallback & (ftot > width)
+            split = fallback | refit
+            solo_widx = jnp.minimum(mwidx, pod_widx)
+            solo_dur = rjt.dur_wu[mjob, solo_widx]
+            fs_widx = jnp.minimum(rjt.widx[jrow], pod_widx)
+            fs_dur = rjt.dur_wu[jrow, fs_widx]
+            refits_add = (
+                jnp.sum(jnp.where(refit, 1, 0))
+                + jnp.sum(jnp.where(fallback[:, None] & mvalid
+                                    & (mwidx > pod_widx), 1, 0))
+                + jnp.sum(jnp.where(fs & (rjt.widx[jrow] > pod_widx), 1, 0)))
+
+            # ---- entry expansion, in schedule order: first-sight solos,
+            # then plan rows (split rows decompose to members in place)
+            E = jnp.where(row_on, jnp.where(split, psize, 1), 0)
+            off = n_fs + jnp.cumsum(E) - E
+            n_ent = n_fs + jnp.sum(E)
+            EN = window
+            e_rng = jnp.arange(EN, dtype=jnp.int32)
+            ent_job = jnp.full((EN, C), Jp, i32)
+            ent_size = jnp.zeros(EN, i32)
+            ent_pidx = jnp.zeros(EN, i32)      # row 0 = the full-pod solo
+            ent_uidx = jnp.zeros((EN, C), i32)
+            ent_dur = jnp.zeros(EN, f32)
+            ent_ft = jnp.zeros((EN, C), f32)
+            tfs = jnp.where(fs, rank_fs, EN)
+            ent_job = ent_job.at[tfs, 0].set(jrow, mode="drop")
+            ent_size = ent_size.at[tfs].set(1, mode="drop")
+            ent_uidx = ent_uidx.at[tfs, 0].set(fs_widx, mode="drop")
+            ent_dur = ent_dur.at[tfs].set(fs_dur, mode="drop")
+            ent_ft = ent_ft.at[tfs, 0].set(fs_dur, mode="drop")
+            # kept plan rows: single-member groups take the exact float64
+            # solo duration (bit-equal to the heap's corun); true co-run
+            # groups take the float32 in-graph model (clock-only drift)
+            one = psize == 1
+            grp_dur = jnp.where(one, rjt.dur_wu[mjob[:, 0], uidx_fit[:, 0]],
+                                mk_fit)
+            grp_ft = jnp.where(one[:, None],
+                               jnp.where(c_rng[None, :] == 0,
+                                         grp_dur[:, None], 0.0),
+                               ft_fit)
+            tg = jnp.where(row_on & ~split, off, EN)
+            ent_job = ent_job.at[tg].set(mjob, mode="drop")
+            ent_size = ent_size.at[tg].set(psize, mode="drop")
+            ent_pidx = ent_pidx.at[tg].set(ppidx, mode="drop")
+            ent_uidx = ent_uidx.at[tg].set(uidx_fit, mode="drop")
+            ent_dur = ent_dur.at[tg].set(grp_dur, mode="drop")
+            ent_ft = ent_ft.at[tg].set(grp_ft, mode="drop")
+            # split rows: member solos, submission slots preserved in place
+            tsp = jnp.where(split[:, None] & mvalid,
+                            off[:, None] + c_rng[None, :], EN).reshape(-1)
+            ent_job = ent_job.at[tsp, 0].set(mjob.reshape(-1), mode="drop")
+            ent_size = ent_size.at[tsp].set(1, mode="drop")
+            ent_pidx = ent_pidx.at[tsp].set(0, mode="drop")
+            ent_uidx = ent_uidx.at[tsp, 0].set(solo_widx.reshape(-1),
+                                               mode="drop")
+            ent_dur = ent_dur.at[tsp].set(solo_dur.reshape(-1), mode="drop")
+            ent_ft = ent_ft.at[tsp, 0].set(solo_dur.reshape(-1), mode="drop")
+            # submission attribution is name-keyed FIFO in schedule-entry
+            # order (the heap's _form_window by_name deques): when one
+            # binary is popped twice into a window, the *entry* order — not
+            # the agent's row choice — decides which arrival each entry
+            # serves.  The o-th entry member of a job row takes the o-th
+            # popped arrival of that row.
+            flat_job = ent_job.reshape(-1)
+            p_rng = jnp.arange(EN * C, dtype=i32)
+            occ_ent = jnp.sum((flat_job[None, :] == flat_job[:, None])
+                              & (p_rng[None, :] < p_rng[:, None]),
+                              axis=1, dtype=i32)
+            occ_pop = jnp.sum(earlier_same, axis=1, dtype=i32)
+            amatch = ((jrow[None, :] == flat_job[:, None])
+                      & (occ_pop[None, :] == occ_ent[:, None]) & on[None, :])
+            ent_arr = jnp.where(
+                jnp.any(amatch, axis=1),
+                jnp.max(jnp.where(amatch, arr[None, :], 0), axis=1),
+                A).reshape(EN, C).astype(i32)
+
+            # ---- ring append (n_ent entries) + group-log scatter
+            free_rank = jnp.cumsum(~st.r_active, dtype=i32) - 1
+            q = jnp.where(~st.r_active & (free_rank < n_ent), free_rank,
+                          i32(-1))
+            sel = q >= 0
+            err_ring = jnp.where(
+                jnp.sum(~st.r_active, dtype=i32) < n_ent,
+                i32(ERR_READY_OVERFLOW), i32(0))
+            grow = jnp.where(e_rng < n_ent, st.n_groups + e_rng, A)
+            return st._replace(
+                profiled=profiled,
+                g_arr=st.g_arr.at[grow].set(ent_arr, mode="drop"),
+                g_job=st.g_job.at[grow].set(ent_job, mode="drop"),
+                g_size=st.g_size.at[grow].set(ent_size, mode="drop"),
+                g_pidx=st.g_pidx.at[grow].set(ent_pidx, mode="drop"),
+                g_uidx=st.g_uidx.at[grow].set(ent_uidx, mode="drop"),
+                g_dur=st.g_dur.at[grow].set(ent_dur, mode="drop"),
+                g_ft=st.g_ft.at[grow].set(ent_ft, mode="drop"),
+                r_active=st.r_active | sel,
+                r_seq=jnp.where(sel, st.next_seq + q, st.r_seq),
+                r_win=jnp.where(sel, st.dispatches, st.r_win),
+                r_grp=jnp.where(sel, st.n_groups + q, st.r_grp),
+                next_seq=st.next_seq + n_ent,
+                n_groups=st.n_groups + n_ent,
+                pend_lo=st.pend_lo + k,
+                refits=st.refits + refits_add,
+                err=st.err | err_ep | err_ring,
+                dispatches=st.dispatches + jnp.where(do, i32(1), i32(0)))
+
+        def inner_body(carry):
+            st, ms, _w = carry
+            head, head_exists = _head(st)
+            hg = st.r_grp[head]
+            hsvec, hsvalid = slice_widths(st.g_pidx[hg], st.g_uidx[hg])
+            ok_h, starts_h, union_h = fit_multi(st.free, hsvec, hsvalid)
+            place_head = head_exists & ok_h
+            blocked = head_exists & ~place_head
+            pending = st.pend_hi > st.pend_lo
+            anyfree = jnp.any(st.free)
+            can_form = ~head_exists & pending & anyfree
+            if backfill:
+                max_win = jnp.max(jnp.where(st.r_active, st.r_win,
+                                            jnp.int32(-1)))
+                can_look = (blocked & pending & anyfree
+                            & (max_win == st.r_win[head]))
+            else:
+                can_look = jnp.bool_(False)
+            want = can_look | can_form       # exit: the outer body forms
+            slot, sstarts, sunion = head, starts_h, union_h
+            do_bf = jnp.bool_(False)
+            if backfill:
+                # the heap scans in the same pass it forms; here the scan
+                # waits one iteration (~want) so it sees the formed ring
+                can_scan = blocked & ~want & (jnp.sum(st.r_active,
+                                                      dtype=i32) > 1)
+                t_res = earliest_fit_multi(st, hsvec, hsvalid)
+                svecs, svalids = jax.vmap(
+                    lambda g: slice_widths(st.g_pidx[g], st.g_uidx[g]))(
+                        st.r_grp)
+                oks, starts_r, unions = jax.vmap(
+                    lambda sv, sva: fit_multi(st.free, sv, sva))(
+                        svecs, svalids)
+                durs = st.g_dur[st.r_grp]
+                elig = (st.r_active & oks
+                        & (jnp.arange(R, dtype=i32) != head)
+                        & (st.now + durs <= t_res + 1e-9) & can_scan)
+                cand = jnp.argmin(jnp.where(elig, st.r_seq,
+                                            _BIG_SEQ)).astype(i32)
+                do_bf = can_scan & jnp.any(elig)
+                slot = jnp.where(place_head, head, cand)
+                sstarts = jnp.where(place_head, starts_h, starts_r[cand])
+                sunion = jnp.where(place_head, union_h, unions[cand])
+            do_place = place_head | do_bf
+            if telemetry:
+                g2 = st.r_grp[slot]
+                arrm = jnp.clip(st.g_arr[g2], 0, A - 1)
+                memv = c_rng < st.g_size[g2]
+                waits = st.now - trace.t[arrm]
+                b = jnp.searchsorted(_WAIT_EDGES, waits,
+                                     side="left").astype(i32)
+                nb = ms.wait_hist.shape[0]
+                ms = ms._replace(
+                    wait_hist=ms.wait_hist.at[
+                        jnp.where(do_place & memv, b, nb)].add(
+                            1, mode="drop"),
+                    wait_sum=ms.wait_sum + jnp.sum(
+                        jnp.where(do_place & memv, waits, 0.0)),
+                    places=ms.places + jnp.where(do_place, i32(1), i32(0)))
+            st = place_rl(st, slot, sstarts, sunion, do_bf, do_place)
+
+            adv = ~do_place & ~want
+            t_arr = jnp.where(st.pend_hi < trace.n,
+                              trace.t[jnp.clip(st.pend_hi, 0, A - 1)], _INF)
+            t_free = jnp.min(jnp.where(st.c_active, st.c_t1, _INF))
+            now = jnp.where(adv, jnp.minimum(t_arr, t_free), st.now)
+            pend_hi = jnp.where(
+                adv, jnp.sum(trace.t <= now, dtype=i32), st.pend_hi)
+            rel = adv & st.c_active & (st.c_t1 <= now)
+            freed = jnp.any(rel[:, None] & st.c_mask, axis=0)
+            w_rel = jnp.sum(jnp.where(rel[:, None], st.c_mask, False),
+                            dtype=i32)
+            n_busy = st.n_busy - w_rel
+            busy_time = st.busy_time + jnp.where(
+                (n_busy == 0) & (w_rel > 0), now - st.busy_t0, 0.0)
+            steps = st.steps + jnp.where(adv, i32(1), i32(0))
+            if telemetry:
+                dt = now - st.now
+                ms = ms._replace(
+                    queue_depth_int=ms.queue_depth_int
+                    + (st.pend_hi - st.pend_lo).astype(jnp.float32) * dt,
+                    busy_unit_int=ms.busy_unit_int
+                    + st.n_busy.astype(jnp.float32) * dt)
+            st = st._replace(
+                now=now, pend_hi=pend_hi, free=st.free | freed,
+                c_active=st.c_active & ~rel, n_busy=n_busy,
+                busy_time=busy_time, steps=steps,
+                err=st.err | jnp.where(steps > max_steps,
+                                       i32(ERR_EVENT_OVERFLOW), i32(0)))
+            return st, ms, want
+
+        def outer_body(carry):
+            st, ms = carry
+            st, ms, want = jax.lax.while_loop(
+                lambda c: live(c[0]) & (c[0].err == 0) & ~c[2],
+                inner_body, (st, ms, jnp.bool_(False)))
+            return form_and_plan(st, want), ms
+
+        st, ms = jax.lax.while_loop(
+            lambda c: live(c[0]) & (c[0].err == 0), outer_body,
+            (st0, _metrics_init()))
+        return (st, ms) if telemetry else st
+
+    return run
+
+
+def _records_rl(st: _RLState, trace: TraceArrays):
+    A = trace.t.shape[0]
+    C = st.g_arr.shape[1]
+    memv = jnp.arange(C)[None, :] < st.g_size[:, None]
+    tgt = jnp.where(memv, st.g_arr, A).reshape(-1)
+    dispatch = jnp.zeros(A, jnp.float32).at[tgt].set(
+        jnp.broadcast_to(st.g_t0[:, None], st.g_arr.shape).reshape(-1),
+        mode="drop")
+    finish = jnp.zeros(A, jnp.float32).at[tgt].set(
+        (st.g_t0[:, None] + st.g_ft).reshape(-1), mode="drop")
+    return dispatch, finish
+
+
+def _summary_rl(st: _RLState, trace: TraceArrays,
+                rjt: RLJobTable) -> SweepSummary:
+    dispatch, finish = _records_rl(st, trace)
+    return _summarize(st, trace, dispatch, finish, rjt.solo8[trace.job])
+
+
+def _emit_lane_rl(st: _RLState, jobs: list, parts: list,
+                  records: list[JobRecord], pod: int = 0) -> list[Segment]:
+    """RL mirror of ``_emit_lane``: rebuild each entry's fitted partition
+    from the logged per-slot widths (the exact ``to_placements`` shrink)
+    and recompute its record times with the float64 ``corun`` the heap
+    stores — so decisions AND label/units/grouping match the heap
+    bit-for-bit, and only the placement clock carries float32 rounding."""
+    g_n = int(st.n_groups)
+    g_arr = np.asarray(st.g_arr)[:g_n]
+    g_job = np.asarray(st.g_job)[:g_n]
+    g_size = np.asarray(st.g_size)[:g_n]
+    g_pidx = np.asarray(st.g_pidx)[:g_n]
+    g_uidx = np.asarray(st.g_uidx)[:g_n]
+    g_start = np.asarray(st.g_start)[:g_n]
+    g_t0 = np.asarray(st.g_t0)[:g_n]
+    pack = np.asarray(st.g_pack)[:g_n]
+    g_pseq, g_bf = pack >> 1, (pack & 1) == 1
+    segs: list[tuple[int, Segment]] = []
+    for g in range(g_n):
+        size = int(g_size[g])
+        group = [jobs[int(g_job[g, m])] for m in range(size)]
+        planned = parts[int(g_pidx[g])]
+        new_slices = list(planned.slices)
+        changed = False
+        for s_i, (si, s, _b) in enumerate(planned.slots):
+            w = UNIT_SIZES[int(g_uidx[g, s_i])]
+            if len(s.shares) == 1 and w < s.units:
+                new_slices[si] = Slice(w, s.shares)
+                changed = True
+        part = (Partition(tuple(new_slices), slice_label(tuple(new_slices)))
+                if changed else planned)
+        pred = corun(group, part)
+        t0 = float(g_t0[g])
+        for m, (ft, (_si, s, _b)) in enumerate(zip(pred.finish_times,
+                                                   part.slots)):
+            rec = records[int(g_arr[g, m])]
+            rec.dispatch = t0
+            rec.finish = t0 + float(ft)
+            rec.group_size = size
+            rec.partition = part.label
+            rec.units = s.units
+            rec.backfilled = bool(g_bf[g])
+            rec.pod = pod
+        ranges = tuple((int(g_start[g, si]), s.units)
+                       for si, s in enumerate(part.slices))
+        segs.append((int(g_pseq[g]), Segment(
+            t0=t0, t1=t0 + float(pred.makespan), jobs=size,
+            partition=part.label, slices=ranges,
+            backfilled=bool(g_bf[g]), pod=pod)))
+    return [s for _, s in sorted(segs, key=lambda x: x[0])]
+
+
 class VectorizedClusterSimulator:
-    """Drop-in vectorized engine for solo-placement policies.
+    """Drop-in vectorized engine for time-sharing and RL dispatch plans.
 
     ``run(trace)`` returns a :class:`~repro.online.simulator.SimResult`
     built from the device lanes (records in sorted-trace order, timeline
@@ -697,10 +1371,14 @@ class VectorizedClusterSimulator:
     host devices via ``pmap`` when ``devices`` is given) and returns
     per-trace :class:`SweepSummary` lanes.
 
-    ``policy`` must be a :class:`~repro.online.policies.TimeSharingPolicy`
-    (or ``None``, same semantics): the engine materializes that plan
-    in-graph.  Use :meth:`supports` to route other policies to the heap.
-    No ``on_tick``/re-training (host callbacks cannot run in-graph) and no
+    ``policy`` is a :class:`~repro.online.policies.TimeSharingPolicy`
+    (or ``None``, same semantics) or an :class:`~repro.online.policies.\
+RLDispatchPolicy`, whose agent episodes then run in-graph at the
+    window-formation seam (module docstring); ``hot_swap`` between calls
+    never recompiles, and ``sweep(..., param_sets=[...])`` adds a
+    leading params axis evaluating a population of agents in one call.
+    Use :meth:`supports` to route other policies to the heap.  No
+    ``on_tick``/re-training (host callbacks cannot run in-graph) and no
     ``mode="blocking"`` — the heap remains the only path for both.
     """
 
@@ -708,8 +1386,8 @@ class VectorizedClusterSimulator:
                  capacity: int = 256, telemetry: bool = False):
         if not self.supports(policy):
             raise ValueError(
-                f"vectorized engine serves solo-placement plans "
-                f"(TimeSharingPolicy); got {type(policy).__name__}")
+                f"vectorized engine serves TimeSharingPolicy or "
+                f"RLDispatchPolicy plans; got {type(policy).__name__}")
         assert window >= 1
         self.policy = policy if policy is not None else TimeSharingPolicy()
         self.window = window
@@ -722,21 +1400,49 @@ class VectorizedClusterSimulator:
         self.telemetry = telemetry
         self.last_metrics: dict | None = None
         self.last_sweep_metrics: MetricsState | None = None
-        runf = _build_run(window, backfill, capacity, telemetry)
-        self._run1 = jax.jit(runf)
-        if telemetry:
-            def _one(tr, jt):
-                st, ms = runf(tr, jt)
-                return _summary(st, tr, jt), ms
+        self._rl = isinstance(self.policy, RLDispatchPolicy)
+        if self._rl:
+            env_cfg = self.policy.scheduler.env_cfg
+            if window > env_cfg.window:
+                raise ValueError(
+                    f"sim window {window} > agent window {env_cfg.window}: "
+                    f"one formation would span several RL episodes "
+                    f"(submission_protocol re-chunking); use a sim window "
+                    f"<= EnvConfig.window")
+            self._env_cfg = env_cfg
+            self._parts = enumerate_partitions(env_cfg.c_max)
+            runf = _build_run_rl(window, backfill, capacity, telemetry,
+                                 env_cfg)
+            if telemetry:
+                def _one(tr, jt, params):
+                    st, ms = runf(tr, jt, params)
+                    return _summary_rl(st, tr, jt), ms
+            else:
+                def _one(tr, jt, params):
+                    return _summary_rl(runf(tr, jt, params), tr, jt)
+            self._sweepfn = jax.jit(jax.vmap(_one, in_axes=(0, None, None)))
+            # population axis: outer vmap over stacked agent params — one
+            # device call scores P agents x T traces on queueing reward
+            self._sweep_pop = jax.jit(jax.vmap(
+                jax.vmap(_one, in_axes=(0, None, None)),
+                in_axes=(None, None, 0)))
         else:
-            def _one(tr, jt):
-                return _summary(runf(tr, jt), tr, jt)
-        self._sweepfn = jax.jit(jax.vmap(_one, in_axes=(0, None)))
+            runf = _build_run(window, backfill, capacity, telemetry)
+            if telemetry:
+                def _one(tr, jt):
+                    st, ms = runf(tr, jt)
+                    return _summary(st, tr, jt), ms
+            else:
+                def _one(tr, jt):
+                    return _summary(runf(tr, jt), tr, jt)
+            self._sweepfn = jax.jit(jax.vmap(_one, in_axes=(0, None)))
+        self._run1 = jax.jit(runf)
 
     @staticmethod
     def supports(policy) -> bool:
         """Policies this engine serves with decision-level heap parity."""
-        return policy is None or isinstance(policy, TimeSharingPolicy)
+        return policy is None or isinstance(
+            policy, (TimeSharingPolicy, RLDispatchPolicy))
 
     # ---------------------------------------------------------------- run
 
@@ -747,8 +1453,13 @@ class VectorizedClusterSimulator:
             return res
         jobs: list = []
         tr, order = compile_trace(trace, self.capacity, jobs=jobs)
-        jt = build_job_table(jobs)
-        out = jax.block_until_ready(self._run1(tr, jt))
+        if self._rl:
+            jt = build_rl_job_table(jobs)
+            out = jax.block_until_ready(
+                self._run1(tr, jt, self.policy.agent.params))
+        else:
+            jt = build_job_table(jobs)
+            out = jax.block_until_ready(self._run1(tr, jt))
         if self.telemetry:
             st, ms = out
             self.last_metrics = metrics_dict(ms)
@@ -761,7 +1472,11 @@ class VectorizedClusterSimulator:
                              idx=i, job_class=a.profile.job_class)
                    for i, a in enumerate(order)]
         res.jobs = records
-        res.timeline = _emit_lane(st, jt, records)
+        if self._rl:
+            res.timeline = _emit_lane_rl(st, jobs, self._parts, records)
+            res.refits = int(st.refits)
+        else:
+            res.timeline = _emit_lane(st, jt, records)
         res.busy_time = float(st.busy_time)
         res.dispatches = int(st.dispatches)
         res.backfills = int(st.backfills)
@@ -771,7 +1486,8 @@ class VectorizedClusterSimulator:
     # -------------------------------------------------------------- sweep
 
     def sweep(self, traces: list[list[Arrival]],
-              devices: list | None = None, with_metrics: bool = False):
+              devices: list | None = None, with_metrics: bool = False,
+              param_sets=None):
         """Evaluate ``traces`` in one device call (one compiled program).
 
         With ``devices`` (>= 2 and batch divisible), the batch axis is
@@ -783,29 +1499,53 @@ class VectorizedClusterSimulator:
         tensors accumulated in-graph, batch axis leading, at no extra
         device syncs.  A telemetry engine still records
         ``last_sweep_metrics`` when ``with_metrics`` is off.
+
+        ``param_sets`` (RL engines only): a list of DQN param pytrees (or
+        one pre-stacked pytree) adds a leading *population* axis — the
+        returned :class:`SweepSummary` lanes are ``(n_params, n_traces)``,
+        one vmap evaluating every agent of a population on queueing
+        reward (mean/p99 wait and friends).  Exclusive of ``devices``
+        sharding and ``with_metrics``.
         """
         if not traces:
             raise ValueError("empty sweep")
         if with_metrics and not self.telemetry:
             raise ValueError("with_metrics needs an engine built with "
                              "telemetry=True")
+        if param_sets is not None and not self._rl:
+            raise ValueError("param_sets needs an RLDispatchPolicy engine")
+        if param_sets is not None and with_metrics:
+            raise ValueError("param_sets and with_metrics are exclusive")
         names: dict[str, int] = {}
         jobs: list = []
         compiled = [compile_trace(t, self.capacity, names, jobs)[0]
                     for t in traces]
-        jt = build_job_table(jobs)
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *compiled)
+        if self._rl:
+            jt = build_rl_job_table(jobs)
+            if param_sets is not None:
+                stacked = (param_sets if isinstance(param_sets, dict)
+                           else jax.tree.map(lambda *xs: jnp.stack(xs),
+                                             *param_sets))
+                out = jax.block_until_ready(
+                    self._sweep_pop(batch, jt, stacked))
+                self._check_err(int(np.max(np.asarray(out.err))))
+                return out
+            args = (jt, self.policy.agent.params)
+        else:
+            jt = build_job_table(jobs)
+            args = (jt,)
         n_dev = len(devices) if devices else 1
         if n_dev > 1 and len(traces) % n_dev == 0:
             shard = jax.tree.map(
                 lambda x: x.reshape((n_dev, len(traces) // n_dev)
                                     + x.shape[1:]), batch)
-            pfn = jax.pmap(lambda tr: self._sweepfn(tr, jt),
+            pfn = jax.pmap(lambda tr: self._sweepfn(tr, *args),
                            devices=devices)
             out = jax.block_until_ready(pfn(shard))
             out = jax.tree.map(lambda x: x.reshape((-1,) + x.shape[2:]), out)
         else:
-            out = jax.block_until_ready(self._sweepfn(batch, jt))
+            out = jax.block_until_ready(self._sweepfn(batch, *args))
         if self.telemetry:
             summ, ms = out
             self.last_sweep_metrics = ms
@@ -846,9 +1586,15 @@ class VectorizedFleetSimulator:
 
     State-dependent routers (``least_loaded``/``frag``) couple the pods
     through the live :class:`FleetView` and stay heap-only, as do
-    ``mode="blocking"``, ``on_tick`` re-training, and non-solo policies
-    (:meth:`supports` mirrors :class:`VectorizedClusterSimulator`).
-    ``capacity`` bounds the *per-pod* subtrace length; hash-splitting an
+    ``mode="blocking"``, ``on_tick`` re-training, and policies outside
+    time-sharing/RL (:meth:`supports` mirrors
+    :class:`VectorizedClusterSimulator`).  With an
+    :class:`~repro.online.policies.RLDispatchPolicy` every pod lane runs
+    the agent's episode in-graph; ``pod_params`` (a list of ``n_pods``
+    params pytrees) optionally overrides the policy agent's params *per
+    pod*, so heterogeneous fleets can serve per-pod-specialized agents
+    in the same device call.  ``capacity``
+    bounds the *per-pod* subtrace length; hash-splitting an
     ``n``-arrival trace needs roughly ``n / n_pods`` plus skew headroom.
     """
 
@@ -857,7 +1603,7 @@ class VectorizedFleetSimulator:
                  capacity: int = 256,
                  pods: tuple[int, ...] | None = None,
                  router: str = "hash", router_seed: int = 0,
-                 telemetry: bool = False):
+                 telemetry: bool = False, pod_params: list | None = None):
         if config is None:
             config = SimConfig(
                 window=window, backfill=backfill,
@@ -865,8 +1611,8 @@ class VectorizedFleetSimulator:
                 router=router, router_seed=router_seed)
         if not self.supports(policy):
             raise ValueError(
-                f"vectorized fleet serves solo-placement plans "
-                f"(TimeSharingPolicy); got {type(policy).__name__}")
+                f"vectorized fleet serves TimeSharingPolicy or "
+                f"RLDispatchPolicy plans; got {type(policy).__name__}")
         if config.router != "hash":
             raise ValueError(
                 f"vectorized fleet requires the state-free 'hash' router "
@@ -881,9 +1627,33 @@ class VectorizedFleetSimulator:
         self.telemetry = telemetry
         self.last_metrics: dict | None = None
         self._router = make_router(config.router, config.router_seed)
-        self._runp = jax.jit(jax.vmap(
-            _build_run(config.window, config.backfill, capacity, telemetry),
-            in_axes=(0, None, 0)))
+        self._rl = isinstance(self.policy, RLDispatchPolicy)
+        if pod_params is not None:
+            if not self._rl:
+                raise ValueError("pod_params needs an RLDispatchPolicy")
+            if len(pod_params) != config.n_pods:
+                raise ValueError(
+                    f"pod_params has {len(pod_params)} entries for "
+                    f"{config.n_pods} pods")
+        self.pod_params = pod_params        # per-pod DQN params (None:
+                                            # every pod runs policy.agent)
+        if self._rl:
+            env_cfg = self.policy.scheduler.env_cfg
+            if config.window > env_cfg.window:
+                raise ValueError(
+                    f"sim window {config.window} > agent window "
+                    f"{env_cfg.window}: use a sim window <= EnvConfig.window")
+            self._env_cfg = env_cfg
+            self._parts = enumerate_partitions(env_cfg.c_max)
+            self._runp = jax.jit(jax.vmap(
+                _build_run_rl(config.window, config.backfill, capacity,
+                              telemetry, env_cfg),
+                in_axes=(0, None, 0, 0)))
+        else:
+            self._runp = jax.jit(jax.vmap(
+                _build_run(config.window, config.backfill, capacity,
+                           telemetry),
+                in_axes=(0, None, 0)))
 
     @staticmethod
     def supports(policy) -> bool:
@@ -923,10 +1693,18 @@ class VectorizedFleetSimulator:
         jobs: list = []
         compiled = [compile_trace(s, self.capacity, names, jobs)[0]
                     for s in sub]
-        jt = build_job_table(jobs)
         batch = jax.tree.map(lambda *xs: jnp.stack(xs), *compiled)
         widths = jnp.asarray(np.array(cfg.pods, np.int32))
-        out = jax.block_until_ready(self._runp(batch, jt, widths))
+        if self._rl:
+            jt = build_rl_job_table(jobs)
+            plist = (self.pod_params if self.pod_params is not None
+                     else [self.policy.agent.params] * cfg.n_pods)
+            pstack = jax.tree.map(lambda *xs: jnp.stack(xs), *plist)
+            out = jax.block_until_ready(
+                self._runp(batch, jt, pstack, widths))
+        else:
+            jt = build_job_table(jobs)
+            out = jax.block_until_ready(self._runp(batch, jt, widths))
         if self.telemetry:
             sts, mss = out
             # pod lanes are disjoint sub-streams: fleet metrics are the sum
@@ -941,7 +1719,12 @@ class VectorizedFleetSimulator:
         segs: list[Segment] = []
         for p, w in enumerate(cfg.pods):
             st = jax.tree.map(lambda x, p=p: x[p], sts)
-            segs.extend(_emit_lane(st, jt, sub_rec[p], pod=p))
+            if self._rl:
+                segs.extend(_emit_lane_rl(st, jobs, self._parts,
+                                          sub_rec[p], pod=p))
+                res.refits += int(st.refits)
+            else:
+                segs.extend(_emit_lane(st, jt, sub_rec[p], pod=p))
             res.busy_time += float(st.busy_time)
             res.dispatches += int(st.dispatches)
             res.backfills += int(st.backfills)

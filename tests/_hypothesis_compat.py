@@ -11,9 +11,11 @@ through this shim::
 
 The shim implements just the surface this repo uses — ``@given`` with
 keyword strategies, ``@settings(max_examples=...)``, and the ``integers``,
-``floats``, ``booleans``, ``sampled_from``, and ``lists`` strategies —
-drawing examples from a deterministic per-test RNG.  No shrinking, no
-database; failures report the drawn example in the assertion chain.
+``floats``, ``booleans``, ``sampled_from``, ``lists``, ``tuples``, and
+``composite`` strategies — drawing examples from a deterministic per-test
+RNG.  No shrinking, no database; each example is drawn from its own
+``(test-name-crc32, index)``-seeded RNG so a failure report names both
+the drawn values and the exact seed pair that regenerates them.
 """
 from __future__ import annotations
 
@@ -58,6 +60,22 @@ class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
             return [elements.draw(rng) for _ in range(n)]
         return _Strategy(draw)
 
+    @staticmethod
+    def tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    @staticmethod
+    def composite(fn):
+        """``@st.composite`` lookalike: ``fn(draw, *args)`` becomes a
+        strategy factory, where ``draw(strategy)`` samples sub-strategies
+        from the enclosing example's RNG (the idiom tests/strategies.py
+        builds its generators on)."""
+        @functools.wraps(fn)
+        def factory(*args, **kwargs):
+            return _Strategy(
+                lambda rng: fn(lambda s: s.draw(rng), *args, **kwargs))
+        return factory
+
 
 class HealthCheck:
     too_slow = "too_slow"
@@ -100,14 +118,20 @@ def given(*pos_strategies, **strategies):
             n = (getattr(wrapper, "_compat_max_examples", None)
                  or getattr(fn, "_compat_max_examples", None)
                  or DEFAULT_MAX_EXAMPLES)
-            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            base = zlib.crc32(fn.__name__.encode())
             for i in range(n):
+                # one RNG per example: a failure is reproducible from the
+                # reported (base, i) pair alone, without replaying the
+                # preceding examples' draws
+                rng = np.random.default_rng((base, i))
                 drawn = {k: s.draw(rng) for k, s in strategies.items()}
                 try:
                     fn(**drawn)
                 except Exception as e:  # surface the failing example
                     raise AssertionError(
-                        f"{fn.__name__} failed on example {i}: {drawn!r}") from e
+                        f"{fn.__name__} failed on example {i} "
+                        f"(np.random.default_rng(({base}, {i}))): "
+                        f"{drawn!r}") from e
         functools.update_wrapper(wrapper, fn, updated=())
         del wrapper.__wrapped__             # keep pytest off fn's signature
         return wrapper

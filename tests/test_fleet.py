@@ -27,7 +27,8 @@ import math
 import numpy as np
 import pytest
 
-from repro.core import make_zoo
+from strategies import ZOO, make_trace
+
 from repro.core.partition import N_UNITS, Partition, Slice, slice_label
 from repro.core.scheduler import DispatchDecision
 from repro.online import (
@@ -38,15 +39,12 @@ from repro.online.policies import DispatchPolicy, GreedyPackerPolicy
 from repro.online.router import (
     FleetView, PodView, fragmentation_units,
 )
-from repro.online.traces import fragmented_trace
 
-ZOO = make_zoo(dryrun_dir=None)
 HET = (8, 8, 4, 4)          # the heterogeneous fleet under test
 
 
 def _trace(n=80, seed=3, load=1.0, pods=HET, fam="fragmented"):
-    cap = sum(pods) / N_UNITS
-    return TRACE_FAMILIES[fam](ZOO, n=n, seed=seed, load=load, capacity=cap)
+    return make_trace(fam, n, seed, load, capacity=sum(pods) / N_UNITS)
 
 
 def _run(pods=HET, router="frag", seed=0, trace=None, policy=None):
@@ -194,6 +192,19 @@ def test_decide_matches_deprecated_shims():
         pls = TimeSharingPolicy().placements(subs)
     assert [pl.partition.label for pl in pls] == \
            [pl.partition.label for pl in dec.placements]
+
+
+def test_decide_itself_never_warns():
+    """The unified entry point must stay warning-free: only the
+    ``dispatch()``/``placements()`` shims are deprecated, and a policy
+    without legacy overrides routes straight through ``decide()``."""
+    import warnings
+
+    subs = [(a.binary, a.profile) for a in _trace(n=6, pods=(N_UNITS,))]
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        dec = TimeSharingPolicy().decide(subs)
+    assert dec.schedule is not None and len(dec.placements) > 0
 
 
 def test_decide_honors_legacy_subclass_overrides():

@@ -1,0 +1,184 @@
+"""Property fuzz: heap-vs-vectorized parity for RL and time-sharing plans.
+
+The in-graph RL serving seam (``vecsim._build_run_rl``) claims *decision
+level* equality with the heap reference: same groups, same partitions,
+same fit/fallback/refit outcomes, same backfill jumps, same record
+attribution — times to f32 resolution.  This suite fuzzes that claim
+across randomized traces x fleets x windows, plus the adversarial
+same-instant / duplicate-tenant shapes where attribution is only pinned
+by ``_form_window``'s name-keyed FIFO.  A failing example's report names
+the drawn spec and the RNG seed pair that regenerates it (see
+``_hypothesis_compat``); ``adversarial_traces`` failures print the trace
+itself — it is already minimal (a handful of bursts).
+
+Strictness caveat: fuzzing runs profile-only agents
+(``obs_context=False``).  The context block is computed in f64 on the
+heap and f32 in-graph, so a context-aware agent may flip a near-tie
+action legitimately; the fixed-seed ``test_obs_context_parity`` covers
+that mode on known-good seeds instead.
+
+Engines are cached per configuration (window/backfill/topology) and all
+examples share one random-init agent, so the jit compile count stays
+bounded across examples.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from strategies import (
+    ZOO, adversarial_traces, assert_parity, engine_knobs, fleet_topologies,
+    make_trace, trace_specs,
+)
+
+from repro.core.agent import DQNAgent
+from repro.core.env import CoScheduleEnv, EnvConfig
+from repro.core.network import greedy_q_action
+from repro.core.partition import N_UNITS
+from repro.online import (
+    ClusterSimulator, SimConfig, TimeSharingPolicy,
+    VectorizedClusterSimulator, VectorizedFleetSimulator,
+)
+from repro.online.policies import RLDispatchPolicy
+
+ENV_CFG = EnvConfig()                      # profile-only: strict parity
+_ENV = CoScheduleEnv(ENV_CFG)
+_AGENT = DQNAgent(_ENV.state_dim, _ENV.n_actions, seed=0)
+
+
+def _rl_policy(env_cfg=ENV_CFG):
+    """Fresh policy per heap run: the profile repository fills as jobs
+    run, so reuse would leak first-sight state across examples.  The
+    in-graph engine starts every run with an empty ``profiled`` lane, so
+    its (cached) wrapper instance is safe to share."""
+    return RLDispatchPolicy(DQNAgent(_ENV.state_dim, _ENV.n_actions, seed=0),
+                            env_cfg)
+
+
+_ENGINES: dict = {}
+
+
+def _vec_rl(window=8, backfill=True, capacity=96):
+    key = ("rl", window, backfill, capacity)
+    if key not in _ENGINES:
+        _ENGINES[key] = VectorizedClusterSimulator(
+            _rl_policy(), window=window, backfill=backfill,
+            capacity=capacity)
+    return _ENGINES[key]
+
+
+def _vec_ts(window=8, backfill=True, capacity=96):
+    key = ("ts", window, backfill, capacity)
+    if key not in _ENGINES:
+        _ENGINES[key] = VectorizedClusterSimulator(
+            TimeSharingPolicy(), window=window, backfill=backfill,
+            capacity=capacity)
+    return _ENGINES[key]
+
+
+def _vec_fleet(pods, window=8, capacity=96):
+    key = ("fleet", pods, window, capacity)
+    if key not in _ENGINES:
+        _ENGINES[key] = VectorizedFleetSimulator(
+            _rl_policy(), SimConfig(pods=pods, window=window, router="hash"),
+            capacity=capacity)
+    return _ENGINES[key]
+
+
+# --------------------------------------------------------- single-pod RL
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(spec=trace_specs(max_n=40))
+def test_rl_parity_randomized_traces(spec):
+    trace = make_trace(*spec)
+    h = ClusterSimulator(_rl_policy(), window=8).run(trace)
+    assert_parity(h, _vec_rl().run(trace))
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(spec=trace_specs(max_n=30), knobs=engine_knobs())
+def test_rl_parity_window_backfill_knobs(spec, knobs):
+    window, backfill = knobs
+    trace = make_trace(*spec)
+    h = ClusterSimulator(_rl_policy(), window=window,
+                         backfill=backfill).run(trace)
+    assert_parity(h, _vec_rl(window=window, backfill=backfill).run(trace))
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(trace=adversarial_traces())
+def test_rl_parity_adversarial_duplicate_tenants(trace):
+    """Same-instant duplicate-tenant bursts: record attribution must
+    follow the heap's name-keyed FIFO, not the agent's row choice."""
+    h = ClusterSimulator(_rl_policy(), window=8).run(trace)
+    assert_parity(h, _vec_rl().run(trace))
+
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(trace=adversarial_traces())
+def test_ts_parity_adversarial_duplicate_tenants(trace):
+    h = ClusterSimulator(TimeSharingPolicy(), window=8).run(trace)
+    assert_parity(h, _vec_ts().run(trace))
+
+
+# -------------------------------------------------------------- fleet RL
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(spec=trace_specs(max_n=40), pods=fleet_topologies(max_pods=3))
+def test_rl_fleet_parity(spec, pods):
+    trace = make_trace(*spec, capacity=sum(pods) / N_UNITS)
+    cfg = SimConfig(pods=pods, window=8, router="hash")
+    h = ClusterSimulator(_rl_policy(), cfg).run(trace)
+    assert_parity(h, _vec_fleet(pods).run(trace))
+
+
+# --------------------------------------------- context-aware (fixed seed)
+
+def test_obs_context_parity():
+    """Context-aware agents see an f32 context in-graph vs f64 on the
+    heap, so parity is seed-level, not universal: pin known-good seeds."""
+    cfg = EnvConfig(obs_context=True)
+    env = CoScheduleEnv(cfg)
+
+    def policy():
+        return RLDispatchPolicy(
+            DQNAgent(env.state_dim, env.n_actions, seed=0), cfg)
+
+    vec = VectorizedClusterSimulator(policy(), window=8, capacity=96)
+    for seed in (0, 1, 2):
+        trace = make_trace("poisson", 30, seed, 1.3)
+        h = ClusterSimulator(policy(), window=8).run(trace)
+        assert_parity(h, vec.run(trace))
+
+
+# ------------------------------------------------------- greedy-Q parity
+
+@settings(max_examples=15, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000))
+def test_greedy_q_matches_agent_act_on_random_obs(seed):
+    """The in-graph forward (``greedy_q_action``) and the heap agent's
+    greedy ``act`` pick identical actions on identical observations."""
+    rng = np.random.default_rng(seed)
+    obs = rng.standard_normal(_ENV.state_dim).astype(np.float32)
+    mask = rng.random(_ENV.n_actions) < 0.4
+    mask[rng.integers(_ENV.n_actions)] = True      # never empty
+    a_heap = _AGENT.act(obs, mask, greedy=True)
+    a_graph = int(greedy_q_action(_AGENT.params, obs, mask))
+    assert a_heap == a_graph
+
+
+def test_greedy_q_matches_agent_act_on_env_observations():
+    """Same equivalence on *real* episode observations: drive a
+    CoScheduleEnv queue with the agent's greedy policy and check every
+    step's action against the in-graph forward."""
+    queue = [ZOO[i % len(ZOO)] for i in range(6)]
+    obs, mask = _ENV.reset(queue)
+    steps = 0
+    while not _ENV.done and steps < 2 * ENV_CFG.window:
+        a = _AGENT.act(obs, mask, greedy=True)
+        assert a == int(greedy_q_action(_AGENT.params, obs, mask))
+        obs, _r, _d, mask, _ = _ENV.step(a)
+        steps += 1
+    assert _ENV.done

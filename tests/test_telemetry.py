@@ -174,6 +174,36 @@ def test_heap_vs_vectorized_metric_parity(seed):
         tel.metrics.counter("busy_unit_s").value, rel=1e-3, abs=1.0)
 
 
+def test_rl_vectorized_metrics_match_summary():
+    """The in-graph RL serving path feeds the same MetricsState lanes the
+    time-sharing path does: its streaming counters must agree with the
+    post-hoc ``SimResult.summary()`` exactly like the heap path's
+    registry does."""
+    from repro.core import CoScheduleEnv
+    from repro.core.agent import DQNAgent
+
+    env_cfg = EnvConfig()
+    env = CoScheduleEnv(env_cfg)
+    policy = RLDispatchPolicy(
+        DQNAgent(env.state_dim, env.n_actions, seed=0), env_cfg)
+    eng = VectorizedClusterSimulator(policy, window=8, capacity=96,
+                                     telemetry=True)
+    res = eng.run(_trace(n=40, seed=5))
+    summ = res.summary()
+    vm = eng.last_metrics
+    assert vm["wait_s"]["count"] == summ["jobs"]
+    assert vm["wait_s"]["sum"] == pytest.approx(
+        sum(r.wait for r in res.jobs), rel=1e-3, abs=0.5)
+    assert vm["groups_placed"] == summ["groups"]
+    assert vm["busy_unit_s"] == pytest.approx(
+        sum(res.slice_busy_s), rel=1e-3, abs=1.0)
+    # streaming histogram == numpy reference over the same records
+    ref = Histogram("wait_s", WAIT_BUCKETS_S)
+    for r in res.jobs:
+        ref.observe(r.wait)
+    assert vm["wait_s"]["counts"] == ref.counts
+
+
 def test_sweep_with_metrics_returns_lane_tensors():
     traces = [_trace(n=30, seed=s) for s in (0, 1, 2)]
     eng = _vec_engine(telemetry=True)

@@ -19,13 +19,12 @@ try:
 except ImportError:
     from _hypothesis_compat import given, settings, st
 
-from repro.core import make_zoo
+from strategies import ZOO, assert_parity, close, make_trace, trace_specs
+
 from repro.online import (
     Arrival, ClusterSimulator, GreedyPackerPolicy, TRACE_FAMILIES,
     TimeSharingPolicy, VectorizedClusterSimulator,
 )
-
-ZOO = make_zoo(dryrun_dir=None)
 
 # engines cached per configuration: each instance owns its jitted program,
 # so reuse across examples keeps the suite's compile count bounded
@@ -46,43 +45,15 @@ def _heap(trace, window=8, backfill=True):
                             backfill=backfill).run(trace)
 
 
-def _close(a, b):
-    # f32 lanes vs f64 heap: absolute floor for near-zero waits, relative
-    # for late-horizon timestamps
-    return abs(a - b) <= max(0.05, 1e-4 * max(abs(a), abs(b)))
-
-
-def _assert_parity(h, v):
-    """Decision-level equality + f32-resolution times between engines."""
-    assert len(v.jobs) == len(h.jobs)
-    key = lambda r: (r.arrival, r.name)  # noqa: E731
-    for a, b in zip(sorted(h.jobs, key=key), sorted(v.jobs, key=key)):
-        assert a.name == b.name and a.binary == b.binary
-        assert a.units == b.units, (a.name, a.units, b.units)
-        assert a.partition == b.partition
-        assert a.backfilled == b.backfilled
-        assert _close(a.dispatch, b.dispatch), (a.name, a.dispatch, b.dispatch)
-        assert _close(a.finish, b.finish), (a.name, a.finish, b.finish)
-        assert _close(a.wait, b.wait)
-        assert _close(a.turnaround, b.turnaround)
-    assert v.dispatches == h.dispatches
-    assert v.backfills == h.backfills
-    # timeline in placement order: same slice ranges, same backfill flags
-    assert len(v.timeline) == len(h.timeline)
-    for s, t in zip(h.timeline, v.timeline):
-        assert t.slices == s.slices
-        assert t.backfilled == s.backfilled
-        assert _close(s.t0, t.t0) and _close(s.t1, t.t1)
-    assert _close(h.busy_time, v.busy_time)
+# parity helpers shared with test_fleet / test_parity_fuzz
+_close = close
+_assert_parity = assert_parity
 
 
 @settings(max_examples=20, deadline=None, derandomize=True)
-@given(fam=st.sampled_from(sorted(TRACE_FAMILIES)),
-       n=st.integers(5, 60),
-       seed=st.integers(0, 50),
-       load=st.floats(min_value=0.5, max_value=1.8))
-def test_parity_randomized_traces(fam, n, seed, load):
-    trace = TRACE_FAMILIES[fam](ZOO, n=n, load=load, seed=seed)
+@given(spec=trace_specs())
+def test_parity_randomized_traces(spec):
+    trace = make_trace(*spec)
     _assert_parity(_heap(trace), _vec_engine().run(trace))
 
 
@@ -188,7 +159,8 @@ def test_error_lanes_raise():
 
 
 def test_unsupported_policy_rejected():
-    with pytest.raises(ValueError, match="solo-placement"):
+    with pytest.raises(ValueError, match="TimeSharingPolicy or "
+                                         "RLDispatchPolicy"):
         VectorizedClusterSimulator(GreedyPackerPolicy())
 
 
