@@ -39,7 +39,13 @@ ratio regressions):
     not tax the hot path;
   * the recorded ``retrain_trigger`` A/B keeps drift-triggered serving at
     or above ``DRIFT_RETRAIN_FLOOR`` x clock-triggered throughput while
-    retraining no more often.
+    retraining no more often;
+  * the recorded ``queueing_reward`` A/B (sim-in-the-loop
+    ``train_online`` refinement vs the frozen proxy-trained agent, served
+    on identical traces) covers all five trace families and the
+    queueing-trained agent's p99 wait is at or below the proxy-trained
+    agent's on at least ``QUEUEING_WIN_FAMILIES_MIN`` of them — training
+    on the real queueing outcome must not lose to the throughput proxy.
 
 A *missing* optional section is a warning, not a failure: the trajectory
 is grown incrementally via ``online_sim --section <name>`` merges, and a
@@ -67,6 +73,8 @@ FLEET_P99_FLOOR = 1.0     # best router p99 vs hash, fragmented fleet
 FLEET_MIN_ARRIVALS = 10_000  # committed fleet grid scale (p50/p99 regime)
 TELEMETRY_OVERHEAD_MAX = 1.10  # telemetry-on/off sim wall ratio, both engines
 DRIFT_RETRAIN_FLOOR = 0.97  # drift-triggered/clock-triggered throughput
+QUEUEING_MIN_FAMILIES = 5   # queueing_reward A/B must cover every family
+QUEUEING_WIN_FAMILIES_MIN = 3  # families where queueing p99 <= proxy p99
 
 
 def _load(path: str, failures: list[str]) -> dict | None:
@@ -188,6 +196,24 @@ def gate_online(bench: dict, failures: list[str],
             failures.append("online: drift trigger recorded MORE retrains "
                             "than the clock — the gate is supposed to prove "
                             "it retrains less, not more")
+    qr = bench.get("queueing_reward") or {}
+    if not qr:
+        _warn_missing("online: queueing_reward", warnings)
+    else:
+        fams = qr.get("families") or {}
+        if len(fams) < QUEUEING_MIN_FAMILIES:
+            failures.append(f"online: queueing_reward covers {len(fams)} "
+                            f"families < {QUEUEING_MIN_FAMILIES}")
+        wins = sum(1 for f in fams.values() if f.get("win"))
+        recorded = qr.get("families_won")
+        if recorded is not None and recorded != wins:
+            failures.append(f"online: queueing_reward.families_won "
+                            f"{recorded} disagrees with per-family win "
+                            f"flags ({wins})")
+        if wins < QUEUEING_WIN_FAMILIES_MIN:
+            failures.append(f"online: queueing-trained agent wins p99 wait "
+                            f"on {wins} families < "
+                            f"{QUEUEING_WIN_FAMILIES_MIN} (vs proxy-trained)")
 
 
 def gate_train(bench: dict, failures: list[str],

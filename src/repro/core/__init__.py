@@ -20,7 +20,8 @@ from repro.core.replay import (
 )
 from repro.core.scheduler import RLScheduler
 from repro.core.train import (
-    TrainConfig, heldout_split, train_agent, train_agent_scalar,
+    TrainConfig, TrainOnlineConfig, heldout_split, train_agent,
+    train_agent_scalar, train_online,
 )
 from repro.core.workloads import make_queue, make_zoo, paper_queues
 
@@ -29,12 +30,13 @@ __all__ = [
     "EnvState", "JobProfile", "ObsContext", "POLICIES", "Partition",
     "PrioritizedReplayBuffer", "PrioritizedReplayState", "ProfileRepository",
     "RLScheduler", "ReplayBuffer", "ReplayState", "Schedule", "Slice",
-    "TrainConfig", "VecCoScheduleEnv", "act_batch", "analytic_profile",
+    "TrainConfig", "TrainOnlineConfig", "VecCoScheduleEnv", "act_batch",
+    "analytic_profile",
     "beta_at", "corun", "corun_time", "dispatch_obs_context",
     "enumerate_partitions", "epsilon_at", "heldout_split", "make_queue",
     "make_zoo", "oracle", "paper_queues", "per_init", "per_push",
     "per_sample", "per_update", "replay_init", "replay_push",
     "replay_sample", "solo_run_time", "summarize", "time_sharing",
-    "train_agent", "train_agent_scalar", "validate_schedule",
+    "train_agent", "train_agent_scalar", "train_online", "validate_schedule",
     "widen_dqn_params", "zero_context",
 ]

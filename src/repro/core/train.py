@@ -655,3 +655,366 @@ def train_agent_scalar(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
                 print(f"ep {ep+1:5d} eps={agent.epsilon:.3f} "
                       f"reward={ep_reward:8.1f} eval_tp={rec['eval_throughput']:.3f}")
     return agent, history
+
+
+# ---------------------------------------------------------------------------
+# Sim-in-the-loop training on queueing reward (+ population-based training)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TrainOnlineConfig:
+    """Config for :func:`train_online` — the environment is the vectorized
+    serving simulator itself, so the reward is the real queueing outcome
+    (negative per-window wait/turnaround, makespan terminal) rather than
+    the offline per-window throughput proxy."""
+
+    rounds: int = 30                    # collect -> update -> eval cycles
+    traces_per_round: int = 6           # fresh serving traces per member
+    n_arrivals: int = 48                # arrivals per trace
+    window: int = 8                     # serve window (<= env_cfg.window)
+    backfill: bool = True
+    capacity: int = 128                 # engine trace capacity
+    scenarios: tuple = (("poisson", 1.25), ("mmpp", 1.25),
+                        ("heavy_tailed", 1.1), ("diurnal", 1.0))
+    seed: int = 0
+    eps_start: float = 0.5              # round-schedule ε (not cfg.dqn's)
+    eps_end: float = 0.05
+    eps_decay_rounds: int = 20
+    updates_per_round: int = 48         # DQN updates after each collect
+    target_sync_updates: int = 32       # target refresh cadence, in updates
+    push_block: int = 32                # replay ring block-push size
+    population: int = 4                 # PBT members
+    pbt_interval: int = 5               # rounds between exploit/explore
+    pbt_quantile: float = 0.25          # copy bottom q from top q
+    eval_traces: int = 6                # shared eval set, one sweep/round
+    wait_weight: float = 1.0            # reward mix (per arrival)
+    turnaround_weight: float = 0.0
+    makespan_weight: float = 1.0
+    per_alpha: float = 0.0              # PER exponent; 0 = uniform ring
+    per_beta0: float = 0.4
+    per_eps: float = 1e-3
+    dqn: DQNConfig = field(default_factory=lambda: DQNConfig(
+        buffer_size=20_000))
+
+
+def _stitch_transitions(roll, n_windows: int, makespan: float,
+                        cfg: TrainOnlineConfig):
+    """Host-side transition stitcher for one trace rollout.
+
+    Chains every valid decision step (window-major, step order) into one
+    serving episode.  Window ``w``'s queueing bucket (member waits +
+    turnarounds, normalized per arrival) lands as negative reward on the
+    *last* decision of window ``w`` — the close that committed the plan;
+    windows with no decisions (all first-sight solos) fold into the most
+    recent earlier decision (or the first, for a leading window).  The
+    final transition adds the makespan terminal and sets ``done``; its
+    ``mask2`` is all-False, which the TD target treats as terminal.
+    Returns ``None`` when the trace produced no decisions at all.
+    """
+    valid = np.asarray(roll.valid)[:n_windows]
+    if not valid.any():
+        return None
+    idx = np.argwhere(valid)                      # row-major: window, step
+    m = len(idx)
+    obs = np.asarray(roll.obs)[:n_windows]
+    act = np.asarray(roll.act)[:n_windows]
+    mask = np.asarray(roll.mask)[:n_windows]
+    s = obs[idx[:, 0], idx[:, 1]]
+    a = act[idx[:, 0], idx[:, 1]]
+    mk = mask[idx[:, 0], idx[:, 1]]
+    s2 = np.concatenate([s[1:], np.zeros_like(s[:1])])
+    mask2 = np.concatenate([mk[1:], np.zeros_like(mk[:1])])
+    done = np.zeros(m, np.float32)
+    done[-1] = 1.0
+    norm = 1.0 / max(1, cfg.n_arrivals)
+    bucket = -(cfg.wait_weight * np.asarray(roll.w_wait, np.float64)
+               + cfg.turnaround_weight
+               * np.asarray(roll.w_turn, np.float64))[:n_windows] * norm
+    r = np.zeros(m, np.float64)
+    # last decision with window <= w; leading no-decision windows fold
+    # forward into the first decision
+    tx = np.maximum(np.searchsorted(idx[:, 0], np.arange(n_windows),
+                                    side="right") - 1, 0)
+    np.add.at(r, tx, bucket)
+    r[-1] += -cfg.makespan_weight * float(makespan) * norm
+    return {"s": s.astype(np.float32), "a": a.astype(np.int32),
+            "r": r.astype(np.float32), "s2": s2.astype(np.float32),
+            "done": done, "mask2": mask2.astype(bool)}
+
+
+_UPDATER_CACHE: dict = {}
+
+
+def _online_updater(dqn_cfg: DQNConfig, n_updates: int, sync_updates: int,
+                    per):
+    """Jitted K-update loop over a replay ring: sample -> double-DQN step
+    -> priority refresh (PER) -> cadenced target sync.  ``per`` is None
+    for the uniform ring or ``(alpha, per_eps)`` for the sum-tree."""
+    key_t = (dqn_cfg, n_updates, sync_updates, per)
+    if key_t in _UPDATER_CACHE:
+        return _UPDATER_CACHE[key_t]
+
+    def run(params, target, opt, replay, key, updates, beta):
+        def upd(_, carry):
+            params, target, opt, replay, key, updates = carry
+            key, ks = jax.random.split(key)
+            if per is None:
+                batch = replay_sample(replay, ks, dqn_cfg.batch_size)
+                params, opt, _ = _dqn_update(params, target, opt, batch,
+                                             dqn_cfg)
+            else:
+                alpha, p_eps = per
+                batch, idx, w = per_sample(replay, ks, dqn_cfg.batch_size,
+                                           alpha, beta)
+                params, opt, _, td = _dqn_update_per(params, target, opt,
+                                                     batch, w, dqn_cfg)
+                if alpha > 0.0:
+                    replay = per_update(replay, idx, td, alpha, p_eps)
+            updates = updates + 1
+            sync = updates % sync_updates == 0
+            target = jax.tree.map(lambda p, t: jnp.where(sync, p, t),
+                                  params, target)
+            return params, target, opt, replay, key, updates
+        return jax.lax.fori_loop(
+            0, n_updates, upd, (params, target, opt, replay, key, updates))
+
+    fn = jax.jit(run)
+    if len(_UPDATER_CACHE) >= 8:
+        _UPDATER_CACHE.pop(next(iter(_UPDATER_CACHE)))
+    _UPDATER_CACHE[key_t] = fn
+    return fn
+
+
+_COLLECTOR_CACHE: dict = {}
+
+
+def _collector_for(env_cfg: EnvConfig, cfg: TrainOnlineConfig):
+    from repro.online.vecsim import make_rollout_collector
+    key_t = (env_cfg.key(), cfg.window, cfg.backfill, cfg.capacity)
+    if key_t not in _COLLECTOR_CACHE:
+        if len(_COLLECTOR_CACHE) >= 8:
+            _COLLECTOR_CACHE.pop(next(iter(_COLLECTOR_CACHE)))
+        _COLLECTOR_CACHE[key_t] = make_rollout_collector(
+            env_cfg, window=cfg.window, backfill=cfg.backfill,
+            capacity=cfg.capacity)
+    return _COLLECTOR_CACHE[key_t]
+
+
+def train_online(jobs: list[JobProfile], env_cfg: EnvConfig | None = None,
+                 cfg: TrainOnlineConfig | None = None,
+                 warm_start: DQNAgent | None = None,
+                 verbose: bool = False) -> tuple[DQNAgent, list[dict]]:
+    """Sim-in-the-loop training: the vectorized serving simulator is the
+    environment, queueing outcome is the reward.
+
+    Each round, every population member rolls ``traces_per_round`` fresh
+    traces of its (family, load) scenario through the ε-greedy training
+    engine (`vecsim` ``train=True``), the host stitches the logged
+    window-seam decisions into replay transitions whose rewards are the
+    engine-accumulated per-window wait/turnaround (plus a terminal
+    makespan term), and ``updates_per_round`` double-DQN updates run on
+    the member's ring.  All members are then scored in ONE
+    ``sweep(param_sets=...)`` call on a shared eval-trace set (mean p99
+    wait — lower is better); every ``pbt_interval`` rounds the bottom
+    ``pbt_quantile`` of members copy the top performers' weights and
+    re-draw their exploration scale and scenario (exploit/explore over
+    agents AND trace families).  Returns the best member as a
+    :class:`DQNAgent` plus per-round history.  With ``warm_start`` the
+    population starts from the given agent's weights, and the unchanged
+    warm-start params are scored in the final eval as an elitism guard —
+    if no trained member beats them, the original agent's weights are
+    returned (``history[-1]["selected"] == "warm_start"``).
+    """
+    from repro.online import TRACE_FAMILIES
+    from repro.online.policies import RLDispatchPolicy
+    from repro.online.vecsim import (
+        VectorizedClusterSimulator, build_rl_job_table, compile_trace,
+    )
+    from repro.core.partition import N_UNITS
+
+    cfg = cfg or TrainOnlineConfig()
+    env_cfg = env_cfg or EnvConfig()
+    if cfg.window > env_cfg.window:
+        raise ValueError(f"serve window {cfg.window} > agent window "
+                         f"{env_cfg.window}")
+    for fam, _ld in cfg.scenarios:
+        if fam not in TRACE_FAMILIES:
+            raise ValueError(f"unknown trace family {fam!r}")
+    env = CoScheduleEnv(env_cfg)
+    state_dim, n_actions = env.state_dim, env.n_actions
+    pop = max(1, cfg.population)
+    rng = np.random.default_rng(cfg.seed)
+    base_key = jax.random.PRNGKey(cfg.seed)
+    collect = _collector_for(env_cfg, cfg)
+    use_per = cfg.per_alpha > 0.0
+    per_t = (cfg.per_alpha, cfg.per_eps) if use_per else None
+    updater = _online_updater(cfg.dqn, cfg.updates_per_round,
+                              max(1, cfg.target_sync_updates), per_t)
+    blk = cfg.push_block
+    ring_cap = -(-cfg.dqn.buffer_size // blk) * blk
+
+    def _fresh_member(m: int) -> dict:
+        seed_agent = DQNAgent(state_dim, n_actions, cfg.dqn,
+                              seed=cfg.seed + m)
+        if warm_start is not None:
+            params = jax.tree.map(jnp.copy, warm_start.params)
+            target = jax.tree.map(jnp.copy, warm_start.target_params)
+            opt = jax.tree.map(jnp.copy, warm_start.opt)
+        else:
+            params = seed_agent.params
+            target = seed_agent.target_params
+            opt = seed_agent.opt
+        ring = (per_init(ring_cap, state_dim, n_actions) if use_per
+                else replay_init(ring_cap, state_dim, n_actions))
+        return {"params": params, "target": target, "opt": opt,
+                "replay": ring, "updates": jnp.int32(0),
+                "stage": {f: [] for f in
+                          ("s", "a", "r", "s2", "done", "mask2")},
+                "staged": 0, "env_steps": 0,
+                "eps_scale": 1.0, "scenario": m % len(cfg.scenarios),
+                "score": float("inf")}
+
+    members = [_fresh_member(m) for m in range(pop)]
+
+    # shared eval traces, round-robin over the scenario axis
+    eval_traces = [
+        TRACE_FAMILIES[cfg.scenarios[t % len(cfg.scenarios)][0]](
+            jobs, n=cfg.n_arrivals,
+            load=cfg.scenarios[t % len(cfg.scenarios)][1],
+            seed=cfg.seed + 9000 + t)
+        for t in range(max(1, cfg.eval_traces))]
+    eval_agent = DQNAgent(state_dim, n_actions, cfg.dqn, seed=cfg.seed)
+    vec = VectorizedClusterSimulator(
+        RLDispatchPolicy(eval_agent, env_cfg), window=cfg.window,
+        backfill=cfg.backfill, capacity=cfg.capacity)
+
+    def _eval_scores(param_list) -> np.ndarray:
+        summ = vec.sweep(eval_traces, param_sets=param_list)
+        return np.asarray(summ.p99_wait, np.float64).mean(axis=1)
+
+    widths = jnp.full((cfg.traces_per_round,), N_UNITS, jnp.int32)
+    history: list[dict] = []
+    total_tx = 0
+    for rnd in range(cfg.rounds):
+        frac = min(1.0, rnd / max(1, cfg.eps_decay_rounds))
+        eps_round = cfg.eps_start + (cfg.eps_end - cfg.eps_start) * frac
+        for m, mem in enumerate(members):
+            fam, load = cfg.scenarios[mem["scenario"]]
+            traces = [TRACE_FAMILIES[fam](
+                jobs, n=cfg.n_arrivals, load=load,
+                seed=cfg.seed + 1 + rnd * 131 + m * 17 + t)
+                for t in range(cfg.traces_per_round)]
+            names: dict[str, int] = {}
+            tjobs: list = []
+            compiled = [compile_trace(t, cfg.capacity, names, tjobs)[0]
+                        for t in traces]
+            batch = jax.tree.map(lambda *xs: jnp.stack(xs), *compiled)
+            rjt = build_rl_job_table(tjobs)
+            keys = jax.random.split(
+                jax.random.fold_in(base_key, rnd * pop + m),
+                cfg.traces_per_round)
+            eps = jnp.float32(min(1.0, eps_round * mem["eps_scale"]))
+            summ, roll = collect(batch, rjt, mem["params"], keys, eps,
+                                 widths)
+            VectorizedClusterSimulator._check_err(
+                int(np.max(np.asarray(summ.err))))
+            n_win = np.asarray(summ.dispatches, np.int64)
+            mks = np.asarray(summ.makespan, np.float64)
+            for t in range(cfg.traces_per_round):
+                one = jax.tree.map(lambda x: x[t], roll)
+                tx = _stitch_transitions(one, int(n_win[t]),
+                                         float(mks[t]), cfg)
+                if tx is None:
+                    continue
+                for f in mem["stage"]:
+                    mem["stage"][f].append(tx[f])
+                mem["staged"] += len(tx["a"])
+                mem["env_steps"] += len(tx["a"])
+                total_tx += len(tx["a"])
+            # block-aligned ring pushes; remainder stays staged
+            if mem["staged"] >= blk:
+                full = {f: np.concatenate(v) for f, v in
+                        mem["stage"].items()}
+                n_push = (mem["staged"] // blk) * blk
+                for lo in range(0, n_push, blk):
+                    chunk = {f: jnp.asarray(v[lo:lo + blk])
+                             for f, v in full.items()}
+                    mem["replay"] = (per_push(mem["replay"], chunk)
+                                     if use_per
+                                     else replay_push(mem["replay"], chunk))
+                for f in mem["stage"]:
+                    mem["stage"][f] = [full[f][n_push:]]
+                mem["staged"] -= n_push
+            size = int(mem["replay"].ring.size if use_per
+                       else mem["replay"].size)
+            if size >= cfg.dqn.batch_size:
+                beta = jnp.float32(beta_at(cfg.per_beta0,
+                                           mem["env_steps"],
+                                           cfg.dqn.eps_decay_steps))
+                (mem["params"], mem["target"], mem["opt"], mem["replay"],
+                 _, mem["updates"]) = updater(
+                    mem["params"], mem["target"], mem["opt"],
+                    mem["replay"],
+                    jax.random.fold_in(base_key, 70_000 + rnd * pop + m),
+                    mem["updates"], beta)
+
+        scores = _eval_scores([mem["params"] for mem in members])
+        for mem, sc in zip(members, scores):
+            mem["score"] = float(sc)
+        order = np.argsort(scores)
+        rec = {"round": rnd + 1, "eps": float(eps_round),
+               "scores": [float(s) for s in scores],
+               "best_member": int(order[0]),
+               "best_p99": float(scores[order[0]]),
+               "transitions": total_tx}
+        if pop > 1 and cfg.pbt_interval > 0 and rnd < cfg.rounds - 1 \
+                and (rnd + 1) % cfg.pbt_interval == 0:
+            n_q = max(1, int(pop * cfg.pbt_quantile))
+            swaps = []
+            for dst, src in zip(order[-n_q:], order[:n_q]):
+                lo, hi = members[dst], members[src]
+                lo["params"] = jax.tree.map(jnp.copy, hi["params"])
+                lo["target"] = jax.tree.map(jnp.copy, hi["target"])
+                lo["opt"] = jax.tree.map(jnp.copy, hi["opt"])
+                lo["eps_scale"] = float(np.clip(
+                    hi["eps_scale"] * rng.choice([0.8, 1.25]), 0.25, 2.0))
+                lo["scenario"] = int(rng.integers(len(cfg.scenarios)))
+                swaps.append((int(dst), int(src)))
+            rec["pbt"] = swaps
+        history.append(rec)
+        if verbose:
+            print(f"round {rnd + 1:3d} eps={eps_round:.3f} "
+                  f"best_p99={rec['best_p99']:.2f} tx={total_tx}")
+
+    # final selection (+ warm-start elitism guard: a refresh must beat the
+    # incumbent strictly on eval, else the incumbent's weights are kept)
+    finals = [mem["params"] for mem in members]
+    labels: list = list(range(pop))
+    if warm_start is not None:
+        finals.append(warm_start.params)
+        labels.append("warm_start")
+    scores = _eval_scores(finals)
+    best = int(np.argmin(scores[:pop]))
+    if warm_start is not None and scores[pop] <= scores[best]:
+        best = pop
+    selected = labels[best]
+    agent = DQNAgent(state_dim, n_actions, cfg.dqn, seed=cfg.seed,
+                     per_alpha=cfg.per_alpha, per_beta0=cfg.per_beta0,
+                     per_eps=cfg.per_eps)
+    if selected == "warm_start":
+        agent.params = jax.tree.map(jnp.copy, warm_start.params)
+        agent.target_params = jax.tree.map(jnp.copy,
+                                           warm_start.target_params)
+        agent.opt = jax.tree.map(jnp.copy, warm_start.opt)
+    else:
+        mem = members[selected]
+        agent.params, agent.target_params = mem["params"], mem["target"]
+        agent.opt = mem["opt"]
+        agent.env_steps = int(mem["env_steps"])
+        agent.updates = int(mem["updates"])
+    if history:
+        history[-1]["selected"] = ("warm_start"
+                                   if selected == "warm_start"
+                                   else int(selected))
+        history[-1]["final_scores"] = [float(s) for s in scores]
+    return agent, history

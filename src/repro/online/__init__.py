@@ -92,7 +92,10 @@ from repro.online.policies import (
     DispatchPolicy, GreedyPackerPolicy, PolicyStats, RLDispatchPolicy,
     StaticPartitionPolicy, TimeSharingPolicy,
 )
-from repro.online.retrain import OnlineRetrainer, default_retrain_train_config
+from repro.online.retrain import (
+    OnlineRetrainer, default_retrain_online_config,
+    default_retrain_train_config,
+)
 from repro.online.router import (
     FleetView, FragRouter, HashRouter, LeastLoadedRouter, PodView, ROUTERS,
     Router, make_router,
@@ -109,7 +112,8 @@ from repro.online.traces import (
     mmpp_trace, poisson_trace,
 )
 from repro.online.vecsim import (
-    SweepSummary, VectorizedClusterSimulator, VectorizedFleetSimulator,
+    SweepSummary, TrainRollout, VectorizedClusterSimulator,
+    VectorizedFleetSimulator, make_rollout_collector,
 )
 
 __all__ = [
@@ -119,8 +123,10 @@ __all__ = [
     "PhaseTimer", "PodView", "PolicyStats", "ROUTERS", "RLDispatchPolicy",
     "Router", "Segment", "SimConfig", "SimResult", "StaticPartitionPolicy",
     "SweepSummary", "TRACE_FAMILIES", "Telemetry", "TimeSharingPolicy",
-    "TraceRecorder", "VectorizedClusterSimulator",
+    "TraceRecorder", "TrainRollout", "VectorizedClusterSimulator",
     "VectorizedFleetSimulator", "WAIT_BUCKETS_S",
-    "default_retrain_train_config", "diurnal_trace", "fragmented_trace",
-    "heavy_tailed_trace", "make_router", "mmpp_trace", "poisson_trace",
+    "default_retrain_online_config", "default_retrain_train_config",
+    "diurnal_trace", "fragmented_trace",
+    "heavy_tailed_trace", "make_rollout_collector", "make_router",
+    "mmpp_trace", "poisson_trace",
 ]

@@ -34,7 +34,9 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 
 from repro.core.agent import DQNConfig
-from repro.core.train import TrainConfig, train_agent
+from repro.core.train import (
+    TrainConfig, TrainOnlineConfig, train_agent, train_online,
+)
 from repro.online.policies import RLDispatchPolicy
 from repro.online.telemetry import DriftMonitor
 
@@ -49,6 +51,19 @@ def default_retrain_train_config(episodes: int = 240) -> TrainConfig:
         update_every=8,
         dqn=DQNConfig(eps_start=0.25, eps_end=0.01, eps_decay_steps=2000,
                       buffer_size=20_000),
+    )
+
+
+def default_retrain_online_config(rounds: int = 8) -> TrainOnlineConfig:
+    """A refresh-sized sim-in-the-loop budget (``reward="queueing"``):
+    a handful of collect/update rounds, no population (the warm-started
+    incumbent IS the population seed and the elitism guard keeps it when
+    the refresh does not improve eval p99 wait)."""
+    return TrainOnlineConfig(
+        rounds=rounds, traces_per_round=4, n_arrivals=32, capacity=96,
+        population=1, eval_traces=4, updates_per_round=32,
+        eps_start=0.25, eps_end=0.05, eps_decay_rounds=max(1, rounds - 2),
+        dqn=DQNConfig(buffer_size=20_000),
     )
 
 
@@ -74,6 +89,19 @@ class OnlineRetrainer:
       afterwards (the refreshed agent defines the new normal).  History
       entries gain ``trigger``/``signals``/``reasons`` fields; skipped
       ticks leave no entry (``monitor.history`` has the full verdict log).
+
+    ``reward`` selects what the refresh optimizes:
+
+    * ``"proxy"`` (default) — ``train_agent`` on the offline per-window
+      throughput proxy, bit-compatible with pre-queueing behaviour.
+    * ``"queueing"`` — ``train_online`` rolls the repository's jobs as
+      serving traces through the vectorized simulator and optimizes the
+      engine-accumulated wait/turnaround + makespan reward directly (the
+      metric the drift monitor watches), warm-started from the incumbent;
+      ``online_cfg`` sizes the refresh
+      (:func:`default_retrain_online_config` when unset).  History entries
+      carry ``rounds``/``train_eval_p99_wait`` instead of the proxy's
+      ``episodes``/``train_eval_throughput``.
     """
 
     policy: RLDispatchPolicy
@@ -82,6 +110,8 @@ class OnlineRetrainer:
     min_jobs: int = 4
     reseed: bool = True                  # vary queue draws across cycles
     trigger: str = "clock"               # "clock" | "drift"
+    reward: str = "proxy"                # "proxy" | "queueing"
+    online_cfg: TrainOnlineConfig | None = None
     monitor: DriftMonitor = field(default_factory=DriftMonitor)
     history: list = field(default_factory=list)
 
@@ -89,6 +119,9 @@ class OnlineRetrainer:
         if self.trigger not in ("clock", "drift"):
             raise ValueError(f"unknown trigger {self.trigger!r}; "
                              f"expected 'clock' or 'drift'")
+        if self.reward not in ("proxy", "queueing"):
+            raise ValueError(f"unknown reward {self.reward!r}; "
+                             f"expected 'proxy' or 'queueing'")
         self._last_t = 0.0
 
     def __call__(self, now: float, sim) -> None:
@@ -111,18 +144,33 @@ class OnlineRetrainer:
         jobs = repo.jobs()
         if len(jobs) < self.min_jobs:
             return
-        cfg = self.train_cfg
-        if self.reseed:
-            cfg = replace(cfg, seed=cfg.seed + len(self.history))
-        agent, hist = train_agent(jobs, self.policy.scheduler.env_cfg, cfg,
-                                  heldout=set(), warm_start=self.policy.agent)
+        env_cfg = self.policy.scheduler.env_cfg
+        if self.reward == "queueing":
+            cfg = self.online_cfg or default_retrain_online_config()
+            if cfg.window > env_cfg.window:
+                # one formation must not span several RL episodes
+                cfg = replace(cfg, window=env_cfg.window)
+            if self.reseed:
+                cfg = replace(cfg, seed=cfg.seed + len(self.history))
+            agent, hist = train_online(jobs, env_cfg, cfg,
+                                       warm_start=self.policy.agent)
+            cycle = {"rounds": hist[-1]["round"],
+                     "train_eval_p99_wait": min(hist[-1]["final_scores"]),
+                     "selected": hist[-1]["selected"]}
+        else:
+            cfg = self.train_cfg
+            if self.reseed:
+                cfg = replace(cfg, seed=cfg.seed + len(self.history))
+            agent, hist = train_agent(jobs, env_cfg, cfg, heldout=set(),
+                                      warm_start=self.policy.agent)
+            cycle = {"episodes": hist[-1]["episode"],
+                     "train_eval_throughput": hist[-1]["eval_throughput"]}
         self.policy.hot_swap(agent)
         self.history.append({
             "t_s": now,
             "repository_jobs": len(jobs),
             "class_counts": repo.class_counts(),
-            "episodes": hist[-1]["episode"],
-            "train_eval_throughput": hist[-1]["eval_throughput"],
+            **cycle,
             **extra,
         })
         if self.trigger == "drift":

@@ -766,6 +766,31 @@ def build_rl_job_table(jobs: list) -> RLJobTable:
         terms=job_terms_table(padded))
 
 
+class TrainRollout(NamedTuple):
+    """Per-trace training logs emitted by the ``train=True`` RL engine.
+
+    The window-formation seam is the decision surface: row ``w`` of the
+    ``(A, T_EP, ...)`` lanes holds window ``w``'s episode — the exact
+    observations the agent saw, the (ε-greedy) actions it took, the env
+    validity masks, and a per-step ``valid`` flag (False once the episode
+    is done or the window never formed).  ``w_wait`` / ``w_turn`` are the
+    queueing outcome attributed back to the deciding window: at every
+    placement the placed entry's member waits (``now - arrival``) and
+    turnarounds (``now + finish_offset - arrival``) are scatter-added into
+    the bucket of the window that *formed* the entry (``r_win``), so
+    summing the buckets reproduces the serving engine's per-record
+    wait/turnaround totals exactly (f32) — the invariant
+    ``tests/test_queueing_reward.py`` fuzzes against the heap.
+    """
+
+    obs: jnp.ndarray             # (A, T_EP, D) f32 — episode observations
+    act: jnp.ndarray             # (A, T_EP) i32 — actions taken
+    mask: jnp.ndarray            # (A, T_EP, W+P) bool — validity masks
+    valid: jnp.ndarray           # (A, T_EP) bool — real decision steps
+    w_wait: jnp.ndarray          # (A,) f32 — Σ member waits per window
+    w_turn: jnp.ndarray          # (A,) f32 — Σ member turnarounds per window
+
+
 class _RLState(NamedTuple):
     """RL-engine lanes: the TS state plus the grouped-entry log.
 
@@ -813,7 +838,7 @@ class _RLState(NamedTuple):
 
 
 def _build_run_rl(window: int, backfill: bool, capacity: int,
-                  telemetry: bool, env_cfg):
+                  telemetry: bool, env_cfg, train: bool = False):
     """The jitted RL single-trace engine.
 
     Two nested ``lax.while_loop``\\ s: the inner loop is the TS engine's
@@ -824,6 +849,16 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
     once per window.  Scheduling semantics (formation gates, EASY
     backfill, claim replay) are unchanged from ``_build_run``; only the
     plan materialized at the seam differs.
+
+    ``train=True`` adds the sim-in-the-loop training surface: ``run``
+    takes a PRNG ``key`` and a *traced* exploration rate ``eps`` (so the
+    ε schedule never recompiles), the episode acts ε-greedily over the
+    same validity mask, and the returned :class:`TrainRollout` carries
+    per-step (obs, act, mask, valid) logs plus per-window wait/turnaround
+    buckets scatter-added at placement.  Step keys derive from
+    ``fold_in(fold_in(key, window), step)`` so the stream is independent
+    of vmap lockstep, and ``eps == 0`` reproduces the serving engine's
+    greedy decisions bit-for-bit.
     """
     assert window <= env_cfg.window, (window, env_cfg.window)
     W = env_cfg.window
@@ -935,10 +970,22 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
                                                i32(0)))
 
     def run(trace: TraceArrays, rjt: RLJobTable, params,
-            width=jnp.int32(N_UNITS)):
+            width=jnp.int32(N_UNITS), key=None, eps=None):
         Jp = rjt.widx.shape[0] - 1               # padding row index
         pod_widx = jnp.searchsorted(units_arr, width).astype(i32)
         tt = rjt.terms
+        if train:
+            n_feat = tt.features.shape[1]
+            D = W * (n_feat + 5) + (N_UNITS + W + 1 if obs_ctx else 0)
+            roll0 = TrainRollout(
+                obs=jnp.zeros((A, T_EP, D), f32),
+                act=jnp.zeros((A, T_EP), i32),
+                mask=jnp.zeros((A, T_EP, W + P), dtype=bool),
+                valid=jnp.zeros((A, T_EP), dtype=bool),
+                w_wait=jnp.zeros(A, f32),
+                w_turn=jnp.zeros(A, f32))
+        else:
+            roll0 = ()
         st0 = _RLState(
             now=f32(0.0), pend_lo=i32(0), pend_hi=i32(0),
             profiled=jnp.zeros(Jp, dtype=bool),
@@ -963,7 +1010,11 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
             return ((st.pend_hi < trace.n) | jnp.any(st.c_active)
                     | (st.pend_lo < st.pend_hi) | jnp.any(st.r_active))
 
-        def form_and_plan(st: _RLState, do) -> _RLState:
+        def form_and_plan(st: _RLState, roll, do):
+            if train:
+                # one episode key per window; independent of how many
+                # outer iterations frozen sibling lanes burn under vmap
+                ep_key = jax.random.fold_in(key, st.dispatches)
             # ---- pop & first-sight protocol (same as _make_form_window)
             k = jnp.where(do, jnp.minimum(jnp.int32(window),
                                           st.pend_hi - st.pend_lo), i32(0))
@@ -1010,7 +1061,7 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
                     [busy_f, ages_f.astype(jnp.float32), depth[None]])
 
             # ---- greedy co-schedule episode (CoScheduleEnv in-graph)
-            def ep_step(carry, _):
+            def ep_step(carry, t):
                 sched, gidx, gsize, pm, psize, ppidx, nplan = carry
                 member = jnp.zeros(W, dtype=bool).at[
                     jnp.where(c_rng < gsize, gidx, W)].set(True, mode="drop")
@@ -1032,6 +1083,15 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
                                         & (ptable.arity == gsize)])
                 done = jnp.all(sched | ~pl_valid) & (gsize == 0)
                 act = greedy_q_action(params, obs, mask)
+                if train:
+                    # ε-greedy over the same mask (act_batch's idiom):
+                    # uniform scores, invalid lanes at -1, argmax wins
+                    ka, kb = jax.random.split(jax.random.fold_in(ep_key, t))
+                    explore = jax.random.uniform(ka, ()) < eps
+                    scores = jax.random.uniform(kb, mask.shape)
+                    rand = jnp.argmax(
+                        jnp.where(mask, scores, -1.0)).astype(i32)
+                    act = jnp.where(explore, rand, act)
                 do_sel = ~done & (act < W)
                 do_close = ~done & (act >= W)
                 row = jnp.where(do_close, nplan, W)
@@ -1046,15 +1106,26 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
                 gsize = jnp.where(do_close, i32(0),
                                   gsize + jnp.where(do_sel, i32(1), i32(0)))
                 nplan = nplan + jnp.where(do_close, i32(1), i32(0))
-                return (sched, gidx, gsize, pm, psize, ppidx, nplan), None
+                ys = (obs, act, mask, ~done) if train else None
+                return (sched, gidx, gsize, pm, psize, ppidx, nplan), ys
 
             init = (jnp.zeros(W, dtype=bool), jnp.full(C, -1, i32), i32(0),
                     jnp.full((W, C), -1, i32), jnp.zeros(W, i32),
                     jnp.zeros(W, i32), i32(0))
-            (e_sched, _, e_gsize, pm, psize, ppidx, nplan), _ = \
-                jax.lax.scan(ep_step, init, None, length=T_EP)
+            (e_sched, _, e_gsize, pm, psize, ppidx, nplan), ep_ys = \
+                jax.lax.scan(ep_step, init,
+                             jnp.arange(T_EP, dtype=i32) if train else None,
+                             length=T_EP)
             done_f = jnp.all(e_sched | ~pl_valid) & (e_gsize == 0)
             err_ep = jnp.where(do & ~done_f, i32(ERR_EPISODE), i32(0))
+            if train:
+                o_y, a_y, m_y, v_y = ep_ys
+                wrow = jnp.where(do, st.dispatches, A)
+                roll = roll._replace(
+                    obs=roll.obs.at[wrow].set(o_y, mode="drop"),
+                    act=roll.act.at[wrow].set(a_y, mode="drop"),
+                    mask=roll.mask.at[wrow].set(m_y, mode="drop"),
+                    valid=roll.valid.at[wrow].set(v_y, mode="drop"))
 
             # ---- §IV-A fallback + pod-width fitting, over planned rows
             row_on = w_rng < nplan
@@ -1163,7 +1234,7 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
                 jnp.sum(~st.r_active, dtype=i32) < n_ent,
                 i32(ERR_READY_OVERFLOW), i32(0))
             grow = jnp.where(e_rng < n_ent, st.n_groups + e_rng, A)
-            return st._replace(
+            st = st._replace(
                 profiled=profiled,
                 g_arr=st.g_arr.at[grow].set(ent_arr, mode="drop"),
                 g_job=st.g_job.at[grow].set(ent_job, mode="drop"),
@@ -1182,9 +1253,10 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
                 refits=st.refits + refits_add,
                 err=st.err | err_ep | err_ring,
                 dispatches=st.dispatches + jnp.where(do, i32(1), i32(0)))
+            return st, roll
 
         def inner_body(carry):
-            st, ms, _w = carry
+            st, ms, roll, _w = carry
             head, head_exists = _head(st)
             hg = st.r_grp[head]
             hsvec, hsvalid = slice_widths(st.g_pidx[hg], st.g_uidx[hg])
@@ -1242,6 +1314,22 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
                     wait_sum=ms.wait_sum + jnp.sum(
                         jnp.where(do_place & memv, waits, 0.0)),
                     places=ms.places + jnp.where(do_place, i32(1), i32(0)))
+            if train:
+                # queueing-reward attribution: the placed entry's member
+                # waits/turnarounds land in the bucket of the window that
+                # FORMED it (r_win), i.e. the decision that grouped these
+                # jobs — not the wall-clock window of the placement
+                gq = st.r_grp[slot]
+                arrq = jnp.clip(st.g_arr[gq], 0, A - 1)
+                memq = c_rng < st.g_size[gq]
+                wq = st.now - trace.t[arrq]
+                tq = st.now + st.g_ft[gq] - trace.t[arrq]
+                brow = jnp.where(do_place, st.r_win[slot], A)
+                roll = roll._replace(
+                    w_wait=roll.w_wait.at[brow].add(
+                        jnp.sum(jnp.where(memq, wq, 0.0)), mode="drop"),
+                    w_turn=roll.w_turn.at[brow].add(
+                        jnp.sum(jnp.where(memq, tq, 0.0)), mode="drop"))
             st = place_rl(st, slot, sstarts, sunion, do_bf, do_place)
 
             adv = ~do_place & ~want
@@ -1272,18 +1360,21 @@ def _build_run_rl(window: int, backfill: bool, capacity: int,
                 busy_time=busy_time, steps=steps,
                 err=st.err | jnp.where(steps > max_steps,
                                        i32(ERR_EVENT_OVERFLOW), i32(0)))
-            return st, ms, want
+            return st, ms, roll, want
 
         def outer_body(carry):
-            st, ms = carry
-            st, ms, want = jax.lax.while_loop(
-                lambda c: live(c[0]) & (c[0].err == 0) & ~c[2],
-                inner_body, (st, ms, jnp.bool_(False)))
-            return form_and_plan(st, want), ms
+            st, ms, roll = carry
+            st, ms, roll, want = jax.lax.while_loop(
+                lambda c: live(c[0]) & (c[0].err == 0) & ~c[3],
+                inner_body, (st, ms, roll, jnp.bool_(False)))
+            st, roll = form_and_plan(st, roll, want)
+            return st, ms, roll
 
-        st, ms = jax.lax.while_loop(
+        st, ms, roll = jax.lax.while_loop(
             lambda c: live(c[0]) & (c[0].err == 0), outer_body,
-            (st0, _metrics_init()))
+            (st0, _metrics_init(), roll0))
+        if train:
+            return (st, ms, roll) if telemetry else (st, roll)
         return (st, ms) if telemetry else st
 
     return run
@@ -1306,6 +1397,32 @@ def _summary_rl(st: _RLState, trace: TraceArrays,
                 rjt: RLJobTable) -> SweepSummary:
     dispatch, finish = _records_rl(st, trace)
     return _summarize(st, trace, dispatch, finish, rjt.solo8[trace.job])
+
+
+def make_rollout_collector(env_cfg, window: int = 8, backfill: bool = True,
+                           capacity: int = 256):
+    """Jitted, vmapped sim-in-the-loop rollout collector.
+
+    Returns ``collect(traces, rjt, params, keys, eps, widths)`` where
+    ``traces`` is a stacked :class:`TraceArrays` batch (leading axis B),
+    ``keys`` is a (B, 2) uint32 PRNG-key batch, ``eps`` a scalar traced
+    exploration rate shared across the batch, and ``widths`` a (B,) i32
+    pod-width lane.  Yields ``(SweepSummary, TrainRollout)`` pytrees with
+    leading axis B — the summary carries the terminal makespan and the
+    ``err`` lane (callers must check it), the rollout carries the
+    transition logs and per-window queueing buckets that
+    ``train_online``'s host-side stitcher turns into replay transitions.
+    With ``eps=0`` the rollout's decisions are bit-identical to the
+    serving engine's.
+    """
+    runf = _build_run_rl(window, backfill, capacity, False, env_cfg,
+                         train=True)
+
+    def _one(tr, rjt, params, k, eps, width):
+        st, roll = runf(tr, rjt, params, width, k, eps)
+        return _summary_rl(st, tr, rjt), roll
+
+    return jax.jit(jax.vmap(_one, in_axes=(0, None, None, 0, None, 0)))
 
 
 def _emit_lane_rl(st: _RLState, jobs: list, parts: list,

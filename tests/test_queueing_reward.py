@@ -1,0 +1,206 @@
+"""Property fuzz: in-graph queueing-reward accumulation vs heap totals.
+
+The training engine (``vecsim._build_run_rl(train=True)``) attributes
+every placed entry's member waits and turnarounds to the bucket of the
+window that *formed* it (``TrainRollout.w_wait`` / ``w_turn``).  Every
+arrival is served by exactly one entry and every entry is placed exactly
+once, so the buckets must partition the serving outcome: summed over
+windows they equal the heap ``SimResult``'s total wait and turnaround —
+the invariant that makes the per-decision reward the *real* queueing
+outcome rather than a shaped estimate.  This suite fuzzes that identity
+across randomized traces x engine knobs x fleet topologies (split with
+the same quiescent-view hash routing ``VectorizedFleetSimulator`` uses).
+
+With ``eps=0`` the training engine's decisions are the serving engine's
+bit-for-bit (decision-level heap parity, ``test_parity_fuzz``), so the
+only drift left is the engine's float32 clock vs the heap's float64;
+totals are compared as per-job means under ``strategies.close``'s
+tolerance.  A failing example's report names the drawn spec and the RNG
+seed pair that regenerates it (see ``_hypothesis_compat``).
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings
+except ImportError:
+    from _hypothesis_compat import given, settings
+
+from strategies import close, engine_knobs, fleet_topologies, make_trace, \
+    trace_specs
+
+from repro.core.agent import DQNAgent
+from repro.core.env import CoScheduleEnv, EnvConfig
+from repro.core.partition import N_UNITS
+from repro.online import (
+    ClusterSimulator, FleetView, PodView, SimConfig, make_rollout_collector,
+    make_router,
+)
+from repro.online.policies import RLDispatchPolicy
+from repro.online.vecsim import build_rl_job_table, compile_trace
+
+ENV_CFG = EnvConfig()
+_ENV = CoScheduleEnv(ENV_CFG)
+_AGENT = DQNAgent(_ENV.state_dim, _ENV.n_actions, seed=0)
+
+_COLLECTORS: dict = {}
+
+
+def _collector(window=8, backfill=True, capacity=96):
+    key = (window, backfill, capacity)
+    if key not in _COLLECTORS:
+        _COLLECTORS[key] = make_rollout_collector(
+            ENV_CFG, window=window, backfill=backfill, capacity=capacity)
+    return _COLLECTORS[key]
+
+
+def _rl_policy():
+    """Fresh policy per heap run (the profile repository fills as jobs
+    run; reuse would leak first-sight state across examples)."""
+    return RLDispatchPolicy(DQNAgent(_ENV.state_dim, _ENV.n_actions, seed=0),
+                            ENV_CFG)
+
+
+def _collect(traces, window=8, backfill=True, capacity=96,
+             widths=None, eps=0.0, seed=0):
+    """Roll ``traces`` through the training engine against one shared job
+    table; returns (summary, rollout) with leading trace axis."""
+    names: dict[str, int] = {}
+    jobs: list = []
+    compiled = [compile_trace(t, capacity, names, jobs)[0] for t in traces]
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs), *compiled)
+    rjt = build_rl_job_table(jobs)
+    if widths is None:
+        widths = [N_UNITS] * len(traces)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(traces))
+    summ, roll = _collector(window, backfill, capacity)(
+        batch, rjt, _AGENT.params, keys, jnp.float32(eps),
+        jnp.asarray(np.array(widths, np.int32)))
+    assert int(np.max(np.asarray(summ.err))) == 0
+    return summ, roll
+
+
+def _bucket_totals(roll, lane=0):
+    """f64 sums of one lane's in-graph per-window reward buckets."""
+    return (float(np.asarray(roll.w_wait[lane], np.float64).sum()),
+            float(np.asarray(roll.w_turn[lane], np.float64).sum()))
+
+
+def _heap_totals(res):
+    return (sum(r.wait for r in res.jobs),
+            sum(r.turnaround for r in res.jobs))
+
+
+def _assert_totals(vec_tot, heap_tot, n):
+    """Totals compared as per-job means: decisions are exact, so only the
+    f32 clock separates the accumulators."""
+    for a, b in zip(vec_tot, heap_tot):
+        assert close(a / max(1, n), b / max(1, n)), (
+            f"bucket total {a} vs heap {b} over {n} jobs")
+
+
+# --------------------------------------------------------- single-pod totals
+
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(spec=trace_specs(max_n=40))
+def test_reward_buckets_sum_to_heap_totals(spec):
+    trace = make_trace(*spec)
+    _, roll = _collect([trace])
+    h = ClusterSimulator(_rl_policy(), window=8).run(trace)
+    _assert_totals(_bucket_totals(roll), _heap_totals(h), len(h.jobs))
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(spec=trace_specs(max_n=30), knobs=engine_knobs())
+def test_reward_buckets_sum_across_engine_knobs(spec, knobs):
+    window, backfill = knobs
+    trace = make_trace(*spec)
+    _, roll = _collect([trace], window=window, backfill=backfill)
+    h = ClusterSimulator(_rl_policy(), window=window,
+                         backfill=backfill).run(trace)
+    _assert_totals(_bucket_totals(roll), _heap_totals(h), len(h.jobs))
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(spec=trace_specs(max_n=40))
+def test_eps_zero_reproduces_serving_decisions(spec):
+    """ε=0 must reproduce the serving engine's plan: same windows, same
+    makespan/backfills, and every logged action inside a formed window is
+    a decision the serving heap also took (summary-level check)."""
+    trace = make_trace(*spec)
+    summ, roll = _collect([trace])
+    h = ClusterSimulator(_rl_policy(), window=8).run(trace)
+    assert int(summ.dispatches[0]) == h.dispatches
+    assert int(summ.backfills[0]) == h.backfills
+    assert close(float(summ.makespan[0]), h.makespan)
+    assert close(float(summ.p99_wait[0]), h.p99_wait)
+
+
+# -------------------------------------------------------------- fleet totals
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(spec=trace_specs(max_n=40), pods=fleet_topologies(max_pods=3))
+def test_reward_buckets_sum_to_heap_fleet_totals(spec, pods):
+    """Hash-routed fleets: split the trace with the same quiescent-view
+    router the vectorized fleet uses, roll every pod lane through the
+    training engine with its pod width, and sum buckets across lanes."""
+    trace = make_trace(*spec, capacity=sum(pods) / N_UNITS)
+    cfg = SimConfig(pods=pods, window=8, router="hash")
+    h = ClusterSimulator(_rl_policy(), cfg).run(trace)
+
+    router = make_router(cfg.router, cfg.router_seed)
+    view = FleetView(pods=tuple(
+        PodView(idx=i, width=w, free=(True,) * w, pending=0, ready=0,
+                queue_units=0, busy_units=0)
+        for i, w in enumerate(cfg.pods)))
+    sub: list[list] = [[] for _ in cfg.pods]
+    for a in sorted(trace, key=lambda a: a.t):
+        sub[router.route(a, view)].append(a)
+
+    lanes = [(s, w) for s, w in zip(sub, cfg.pods) if s]
+    _, roll = _collect([s for s, _ in lanes], widths=[w for _, w in lanes])
+    wait = sum(_bucket_totals(roll, lane=i)[0] for i in range(len(lanes)))
+    turn = sum(_bucket_totals(roll, lane=i)[1] for i in range(len(lanes)))
+    _assert_totals((wait, turn), _heap_totals(h), len(h.jobs))
+
+
+# ----------------------------------------------- exploration keeps the books
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(spec=trace_specs(max_n=30))
+def test_reward_buckets_consistent_under_exploration(spec):
+    """ε>0 changes the plan, not the accounting: buckets must still sum
+    to the *training engine's own* record totals (its SweepSummary means),
+    and the run must stay error-free and key-deterministic."""
+    trace = make_trace(*spec)
+    summ, roll = _collect([trace], eps=0.5, seed=11)
+    n = len(trace)
+    wait, turn = _bucket_totals(roll)
+    assert close(wait / n, float(summ.mean_wait[0]))
+    assert close(turn / n, float(summ.mean_turnaround[0]))
+    summ2, roll2 = _collect([trace], eps=0.5, seed=11)
+    assert np.array_equal(np.asarray(roll.act), np.asarray(roll2.act))
+
+
+# ------------------------------------------------------------ log structure
+
+def test_rollout_logs_chain_into_transitions():
+    """The logged seam is stitchable: valid steps exist exactly for formed
+    windows with profiled submissions, every valid step's mask admits its
+    logged action, and windows beyond ``dispatches`` are empty."""
+    trace = make_trace("poisson", 30, 3, 1.3)
+    summ, roll = _collect([trace])
+    n_win = int(summ.dispatches[0])
+    valid = np.asarray(roll.valid[0])
+    act = np.asarray(roll.act[0])
+    mask = np.asarray(roll.mask[0])
+    assert valid.shape[0] >= n_win and valid[n_win:].sum() == 0
+    assert valid[:n_win].any()
+    idx = np.argwhere(valid[:n_win])
+    assert len(idx) > 0
+    for w, t in idx:
+        assert mask[w, t, act[w, t]], (w, t, act[w, t])
+    # buckets of formed windows only
+    assert np.asarray(roll.w_wait[0])[n_win:].sum() == 0.0
